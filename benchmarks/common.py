@@ -1,0 +1,118 @@
+"""Shared context for the per-table/figure benchmark harnesses.
+
+Results are cached per (benchmark, strategy, oversubscription) so the tables
+and figures that reuse the same runs (Table VI, Figs. 13/14) don't recompute
+the learned runtime. `--scale quick` (default) runs reduced traces on CPU in
+minutes; `--scale paper` uses the full generator sizes.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.configs.predictor_paper import CONFIG as PCFG_FULL
+from repro.configs.predictor_paper import PredictorConfig
+
+# Quick-scale predictor: small enough for CPU minutes, but with a delta
+# vocabulary that does NOT alias the benchmarks' delta sets (the smoke
+# config's 32-entry vocab hash-collides NW's hundreds of deltas into noise).
+PCFG_QUICK = PredictorConfig(
+    name="predictor-quick", d_model=32, num_heads=2, num_layers=1, d_ff=64,
+    page_vocab=2048, delta_vocab=512, pc_vocab=64, tb_vocab=64,
+)
+from repro.core.incremental import RunResult, TrainConfig, run_protocol
+from repro.uvm import runtime as R
+from repro.uvm import simulator as S
+from repro.uvm import timing
+from repro.uvm import trace as T
+from repro.uvm.uvmsmart import run_uvmsmart
+
+OUT_DIR = Path("experiments/bench")
+
+ALL_BENCH = list(T.BENCHMARKS)
+FEATURED = ["ATAX", "BICG", "Hotspot", "NW", "Srad-v2"]  # the paper's focus set
+
+
+@dataclasses.dataclass
+class Ctx:
+    scale: float = 0.4
+    cap: int = 6000  # max trace length (quick mode)
+    pcfg: object = PCFG_QUICK
+    tcfg: TrainConfig = dataclasses.field(default_factory=lambda: TrainConfig(group_size=1024, epochs=2, batch_size=128))
+    benches: list = dataclasses.field(default_factory=lambda: list(ALL_BENCH))
+
+    def __post_init__(self):
+        self._traces: dict = {}
+        self._sims: dict = {}
+        self._ours: dict = {}
+        self._smart: dict = {}
+        self._proto: dict = {}
+
+    @classmethod
+    def paper(cls):
+        return cls(scale=1.0, cap=60_000, pcfg=PCFG_FULL, tcfg=TrainConfig(group_size=2048, epochs=3, batch_size=256))
+
+    def trace(self, name: str) -> T.Trace:
+        if name not in self._traces:
+            tr = T.get_trace(name, scale=self.scale)
+            self._traces[name] = tr.slice(0, min(len(tr), self.cap))
+        return self._traces[name]
+
+    def sim(self, name: str, policy: str, prefetch: str, oversub: float = 1.25) -> dict:
+        key = (name, policy, prefetch, oversub)
+        if key not in self._sims:
+            self._sims[key] = S.run(self.trace(name), policy=policy, prefetch=prefetch, oversubscription=oversub).stats
+        return self._sims[key]
+
+    def pretrained(self):
+        """Paper Section V-A: a per-pattern table pretrained on a corpus of
+        5 benchmarks with different inputs; cloned per run (fine-tuning
+        mutates the entries)."""
+        if not hasattr(self, "_pretrained"):
+            corpus = [T.BENCHMARKS[n](scale=self.scale * 0.6, seed=777 + i) for i, n in enumerate(["ATAX", "Backprop", "BICG", "Hotspot", "NW"])]
+            self._pretrained = R.pretrain_table(corpus, self.pcfg, self.tcfg, max_rounds=2)
+        return self._pretrained.clone()
+
+    def ours(self, name: str, oversub: float = 1.25, **kw) -> R.LearnedRunResult:
+        key = (name, oversub, tuple(sorted(kw.items())))
+        if key not in self._ours:
+            self._ours[key] = R.run_ours(
+                self.trace(name), self.pcfg, self.tcfg, oversubscription=oversub,
+                table=self.pretrained(), **kw,
+            )
+        return self._ours[key]
+
+    def uvmsmart(self, name: str, oversub: float = 1.25) -> dict:
+        key = (name, oversub)
+        if key not in self._smart:
+            self._smart[key] = run_uvmsmart(self.trace(name), oversubscription=oversub)
+        return self._smart[key]
+
+    def protocol(self, name: str, mode: str, kind: str = "transformer") -> RunResult:
+        key = (name, mode, kind)
+        if key not in self._proto:
+            self._proto[key] = run_protocol(self.trace(name), self.pcfg, self.tcfg, mode=mode, kind=kind)
+        return self._proto[key]
+
+    def ipc(self, name: str, stats: dict, **kw) -> float:
+        return timing.ipc(stats, len(self.trace(name)), **kw)
+
+
+def emit(name: str, rows: list[dict], t0: float) -> None:
+    """Write CSV + print the `name,us_per_call,derived` contract line."""
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / f"{name}.csv"
+    if rows:
+        with path.open("w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    derived = rows[0].get("derived", "") if rows else ""
+    print(f"{name},{us:.0f},{derived}")
+    for r in rows:
+        print("   ", {k: (round(v, 4) if isinstance(v, float) else v) for k, v in r.items()})

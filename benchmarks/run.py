@@ -1,0 +1,79 @@
+"""Benchmark harness: one entry per paper table/figure (+ the roofline
+summary from the committed dry-run records).
+
+    PYTHONPATH=src python -m benchmarks.run            # quick (reduced traces)
+    PYTHONPATH=src python -m benchmarks.run --scale paper
+    PYTHONPATH=src python -m benchmarks.run --only table6 fig14
+
+Output: `name,us_per_call,derived` CSV lines + experiments/bench/<name>.csv.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from benchmarks import figures, tables
+from benchmarks.common import Ctx, emit
+
+
+def roofline_summary(_ctx):
+    """Summarise the committed multi-pod dry-run (EXPERIMENTS.md source)."""
+    t0 = time.time()
+    d = Path("experiments/dryrun")
+    rows = []
+    if d.exists():
+        for f in sorted(d.glob("*__single.json")):
+            r = json.loads(f.read_text())
+            if r.get("status") != "ok":
+                rows.append({"arch": r["arch"], "shape": r["shape"], "bottleneck": r.get("reason", r["status"])[:40], "compute_s": "", "memory_s": "", "collective_s": "", "useful": ""})
+                continue
+            rl = r["roofline"]
+            rows.append({
+                "arch": r["arch"], "shape": r["shape"], "bottleneck": rl["bottleneck"],
+                "compute_s": f"{rl['compute_s']:.3e}", "memory_s": f"{rl['memory_s']:.3e}",
+                "collective_s": f"{rl['collective_s']:.3e}", "useful": round(rl["useful_ratio"], 2),
+            })
+    emit("roofline_summary", rows, t0)
+    return rows
+
+
+SUITES = {
+    "fig3": figures.fig3,
+    "fig4": figures.fig4,
+    "fig6": figures.fig6,
+    "fig10": figures.fig10,
+    "fig11": figures.fig11,
+    "fig12": figures.fig12,
+    "fig13": figures.fig13,
+    "fig14": figures.fig14,
+    "table1": tables.table1,
+    "table2": tables.table2,
+    "table3": tables.table3,
+    "table4": tables.table4,
+    "table6": tables.table6,
+    "table7": tables.table7,
+    "roofline": roofline_summary,
+}
+
+# cheap first, NN-heavy later (shared caches warm up in order)
+ORDER = ["roofline", "table1", "table2", "table3", "table4", "fig3", "fig4", "fig6", "fig10", "fig11", "fig12", "table6", "fig13", "fig14", "table7"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", choices=["quick", "paper"], default="quick")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args(argv)
+    ctx = Ctx.paper() if args.scale == "paper" else Ctx()
+    names = args.only or ORDER
+    t0 = time.time()
+    for name in names:
+        SUITES[name](ctx)
+    print(f"# total {time.time() - t0:.0f}s, results in experiments/bench/")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,146 @@
+"""Paper tables: I (strategies w/o prefetch vs upper bound), II (HPE x
+prefetcher interplay), IV (predictor footprint), VI (full strategy matrix),
+VII (concurrent multi-workload accuracy)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import ALL_BENCH, Ctx, emit
+
+
+def table1(ctx: Ctx):
+    """Baseline / D.+HPE / UVMSmart / D.+Belady pages thrashed @125%."""
+    t0 = time.time()
+    rows = []
+    for b in ctx.benches:
+        rows.append({
+            "benchmark": b,
+            "baseline": ctx.sim(b, "lru", "tree")["pages_thrashed"],
+            "d_hpe": ctx.sim(b, "hpe", "demand")["pages_thrashed"],
+            "uvmsmart": ctx.uvmsmart(b)["pages_thrashed"],
+            "d_belady": ctx.sim(b, "belady", "demand")["pages_thrashed"],
+        })
+    emit("table1_thrashing", rows, t0)
+    # the paper's structural claims
+    for r in rows:
+        assert r["d_belady"] <= r["d_hpe"] + 1e-9, r
+    return rows
+
+
+def table2(ctx: Ctx):
+    """Demand.+HPE vs Tree.+HPE (the interplay collapse)."""
+    t0 = time.time()
+    rows = []
+    for b in ctx.benches:
+        d = ctx.sim(b, "hpe", "demand")["pages_thrashed"]
+        t = ctx.sim(b, "hpe", "tree")["pages_thrashed"]
+        rows.append({"benchmark": b, "demand_hpe": d, "tree_hpe": t, "derived": f"collapse_x{t / max(d, 1):.0f}"})
+    emit("table2_hpe_prefetch", rows, t0)
+    return rows
+
+
+def table3(ctx: Ctx):
+    """Unique page deltas per program phase (the growing-class problem that
+    motivates incremental learning; paper Table III)."""
+    from repro.core.features import unique_deltas_per_phase
+
+    t0 = time.time()
+    rows = []
+    for b in ctx.benches:
+        p = unique_deltas_per_phase(ctx.trace(b), 3)
+        rows.append({
+            "benchmark": b, "phase0": p[0], "phase1": p[1], "phase2": p[2],
+            "derived": f"growth_x{p[2] / max(p[0], 1):.1f}",
+        })
+    emit("table3_delta_growth", rows, t0)
+    # NW / Srad must grow; streaming must stay flat (paper's central premise)
+    by = {r["benchmark"]: r for r in rows}
+    assert by["NW"]["phase2"] > by["NW"]["phase0"]
+    assert by["StreamTriad"]["phase2"] <= by["StreamTriad"]["phase0"] + 2
+    return rows
+
+
+def table4(ctx: Ctx):
+    """Predictor memory footprint with the paper's accounting (Eq. 4):
+    Total = (Params*2 + Activations) * Patterns, 4-bit-ish quantised."""
+    t0 = time.time()
+    from repro.core.predictor import param_count
+
+    rows = []
+    n_params = param_count(ctx.pcfg)
+    params_mb = n_params * 4 / 2**20  # fp32
+    acti_mb = 1.46  # measured activation budget from the paper's Table IV
+    for b in ctx.benches:
+        from repro.core.pattern import PatternClassifier
+
+        tr = ctx.trace(b)
+        c = PatternClassifier()
+        pats = set()
+        G = ctx.tcfg.group_size
+        for lo in range(0, len(tr), G):
+            pats.add(c.classify(tr.block[lo : lo + G], tr.kernel[lo : lo + G]))
+        total = (params_mb * 2 + acti_mb) * len(pats)
+        rows.append({
+            "benchmark": b, "params_mb": round(params_mb, 2), "acti_mb": acti_mb,
+            "patterns": len(pats), "total_mb": round(total, 2),
+        })
+    emit("table4_footprint", rows, t0)
+    return rows
+
+
+def table6(ctx: Ctx):
+    """Full strategy matrix incl. our solution (the headline table)."""
+    t0 = time.time()
+    rows = []
+    reductions = []
+    for b in ctx.benches:
+        base = ctx.sim(b, "lru", "tree")["pages_thrashed"]
+        ours = ctx.ours(b).stats["pages_thrashed"]
+        smart = ctx.uvmsmart(b)["pages_thrashed"]
+        rows.append({
+            "benchmark": b,
+            "baseline": base,
+            "tree_hpe": ctx.sim(b, "hpe", "tree")["pages_thrashed"],
+            "uvmsmart": smart,
+            "ours": ours,
+            "demand_hpe": ctx.sim(b, "hpe", "demand")["pages_thrashed"],
+            "demand_belady": ctx.sim(b, "belady", "demand")["pages_thrashed"],
+        })
+        if base > 0:
+            reductions.append(1 - ours / base)
+    avg_red = float(np.mean(reductions)) if reductions else 0.0
+    rows.insert(0, {"benchmark": "AVG_REDUCTION_VS_BASELINE", "baseline": "", "tree_hpe": "",
+                    "uvmsmart": "", "ours": round(avg_red, 3), "demand_hpe": "", "demand_belady": "",
+                    })
+    emit("table6_thrashing_full", rows, t0)
+    return rows
+
+
+def table7(ctx: Ctx):
+    """Concurrent multi-workload page-delta prediction (scalability).
+    'Ours' follows the paper's Section V-A protocol: per-pattern models
+    pretrained on a (different-input) corpus, then fine-tuned online."""
+    from repro.core.incremental import run_protocol
+    from repro.uvm.runtime import pretrain_table
+    from repro.uvm.trace import BENCHMARKS, concurrent
+
+    t0 = time.time()
+    corpus = [BENCHMARKS[n](scale=ctx.scale * 0.6, seed=321 + i) for i, n in enumerate(["ATAX", "Backprop", "BICG", "Hotspot", "NW"])]
+    pairs = [("StreamTriad", "2DCONV"), ("Hotspot", "Srad-v2"), ("NW", "2DCONV"), ("ATAX", "Srad-v2")]
+    rows = []
+    for a, b in pairs:
+        # slices aligned with the training group size: each group sees ONE
+        # tenant's coherent stream, which is what the DFA classifies (per-access
+        # mixing would blend pattern classes inside every group)
+        tr = concurrent([ctx.trace(a), ctx.trace(b)], slice_len=ctx.tcfg.group_size)
+        online = run_protocol(tr, ctx.pcfg, ctx.tcfg, mode="online_single")
+        table = pretrain_table(corpus, ctx.pcfg, ctx.tcfg, max_rounds=2)
+        ours = run_protocol(tr, ctx.pcfg, ctx.tcfg, mode="ours", table=table)
+        rows.append({
+            "workloads": f"{a}+{b}", "online_top1": round(online.top1, 3),
+            "ours_top1": round(ours.top1, 3), "derived": f"delta={ours.top1 - online.top1:+.3f}",
+        })
+    emit("table7_multiworkload", rows, t0)
+    return rows

@@ -1,0 +1,58 @@
+"""Serve a small model with batched requests + the paper's technique as a
+learned HBM<->host KV-page offload manager (DESIGN.md §2): the prediction
+frequency table + page-set chain decide which KV pages stay in HBM while the
+cache oversubscribes it.
+
+    PYTHONPATH=src python examples/serve_paged_kv.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.serving.engine import Engine
+
+
+def main():
+    cfg = get_smoke_config("qwen3-0.6b")
+    total = 96
+    params = lm.init(jax.random.key(0), cfg, max_seq=total)
+    prompts = jax.random.randint(jax.random.key(1), (4, 70), 0, cfg.vocab_size, jnp.int32)
+    print(f"serving {cfg.name}: batch=4, prompt=70, new=24, HBM holds 50% of KV pages")
+
+    for kind in ("lru", "learned"):
+        eng = Engine(cfg, params, offload=kind, hbm_fraction=0.5)
+        res = eng.generate({"tokens": prompts}, n_new=24, pad_to=total)
+        s = res.offload_stats
+        hit = s["hbm_hits"] / max(s["hbm_hits"] + s["hbm_misses"], 1)
+        print(f"  {kind:8s} residency: hit-rate={hit:.3f} misses={s['hbm_misses']} "
+              f"prefetches={s['prefetches']} thrash={s['thrash']}")
+    print("sample output tokens:", res.tokens[0, :10].tolist())
+
+    # the mechanism at scale: a long-context decode whose attention mass is
+    # skewed (as real prompts are) — 256 KV pages, HBM holds 64
+    import numpy as np
+
+    from repro.serving.offload import KVOffloadManager, LRUOffloadManager
+
+    print("\nlong-context simulation: 256 KV pages, HBM capacity 64, Zipf attention")
+    rng = np.random.default_rng(0)
+    hot = rng.permutation(256)[:48]  # the pages the prompt actually attends to
+    for name, mk in (("lru", LRUOffloadManager), ("learned", KVOffloadManager)):
+        mgr = mk(256, 64, prefetch_per_step=8)
+        for t in range(512):
+            mass = np.full(256, 0.01)
+            mass[hot] = 1.0
+            touched = np.concatenate([hot, rng.integers(0, 256, 6)])
+            mgr.on_attention(mass, touched)
+        s = mgr.stats
+        print(f"  {name:8s} hit-rate={s.hit_rate:.3f} misses={s.hbm_misses} thrash={s.thrash}")
+
+
+if __name__ == "__main__":
+    main()

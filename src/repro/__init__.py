@@ -1,0 +1,17 @@
+"""repro: the paper's learned UVM-oversubscription manager as a JAX/TPU framework.
+
+Layers
+------
+- ``repro.core``     — the paper's contribution: pattern-aware, thrashing-aware,
+  incrementally-trained page predictor + policy engine.
+- ``repro.uvm``      — trace-driven unified-memory simulator substrate (the
+  GPGPU-Sim replacement): benchmarks, prefetchers, eviction policies, timing.
+- ``repro.models``   — the assigned 10-architecture LM zoo.
+- ``repro.kernels``  — Pallas TPU kernels for the compute hot-spots.
+- ``repro.distributed / data / optim / checkpoint`` — training substrates.
+- ``repro.serving``  — paged-KV serving engine with the paper's technique as a
+  learned HBM<->host offload manager.
+- ``repro.launch``   — production mesh, multi-pod dry-run, roofline, drivers.
+"""
+
+__version__ = "1.0.0"

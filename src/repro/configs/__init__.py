@@ -1,0 +1,44 @@
+"""Config registry: ``get_config(name)`` / ``get_smoke_config(name)``.
+
+Every assigned architecture is selectable with ``--arch <id>`` in the
+launchers; ``ARCHS`` lists the 10 assigned IDs in pool order.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    LONG_CONTEXT_FAMILIES,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    cell_supported,
+)
+
+_MODULES = {
+    "whisper-medium": "repro.configs.whisper_medium",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "qwen2-0.5b": "repro.configs.qwen2_0_5b",
+    "qwen3-0.6b": "repro.configs.qwen3_0_6b",
+    "granite-3-8b": "repro.configs.granite_3_8b",
+    "qwen1.5-4b": "repro.configs.qwen1_5_4b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "predictor-paper": "repro.configs.predictor_paper",
+}
+
+ARCHS = [a for a in _MODULES if a != "predictor-paper"]
+
+
+def get_config(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def get_smoke_config(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).SMOKE

@@ -1,0 +1,36 @@
+"""internvl2-26b [vlm] — 48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92553.
+
+InternViT frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed patch embeddings (B, num_patches, patch_feat) which are projected
+and prepended to the token sequence. Backbone = InternLM2-style decoder (GQA,
+SwiGLU). [arXiv:2404.16821; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92553,
+    head_dim=128,
+    num_patches=256,
+    patch_feat=3200,  # InternViT-6B hidden size
+    rope_theta=1_000_000.0,
+)
+
+SMOKE = CONFIG.replace(
+    name="internvl2-26b-smoke",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=517,
+    num_patches=8,
+    patch_feat=24,
+)

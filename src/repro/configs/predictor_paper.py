@@ -1,0 +1,35 @@
+"""The paper's own model: the dual-block Transformer page predictor.
+
+This is not one of the assigned LM architectures — it is the paper's
+contribution (Section IV-B), registered here so that the same launcher /
+trainer / dry-run machinery can train it at fleet scale
+(``--arch predictor-paper``). Dimensions follow the paper's footprint budget
+(Table IV: 0.27–0.73 MB parameters per pattern model).
+"""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class PredictorConfig:
+    name: str = "predictor-paper"
+    history: int = 10  # input sequence length (Section IV-D)
+    d_model: int = 64
+    num_heads: int = 2
+    num_layers: int = 2  # Transformer layers per block (regular / irregular)
+    d_ff: int = 128
+    # feature vocabularies (hashed)
+    page_vocab: int = 4096
+    delta_vocab: int = 1024  # output classes: page deltas (grows incrementally)
+    pc_vocab: int = 512
+    tb_vocab: int = 512
+    dropout: float = 0.0
+    # LUCIR cosine classifier
+    cosine_scale: float = 16.0
+    # loss weights (Eq. 3)
+    lucir_lambda: float = 0.5
+    thrash_mu: float = 0.5
+    num_patterns: int = 6  # DFA classes
+
+
+CONFIG = PredictorConfig()
+SMOKE = PredictorConfig(name="predictor-paper-smoke", d_model=16, d_ff=32, num_heads=2, num_layers=1, page_vocab=64, delta_vocab=32, pc_vocab=16, tb_vocab=16)

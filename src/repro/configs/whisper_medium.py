@@ -1,0 +1,43 @@
+"""whisper-medium [audio] — 24L d_model=1024 16H (GQA kv=16) d_ff=4096 vocab=51865.
+
+Enc-dec; the conv audio frontend is a STUB per the assignment: ``input_specs``
+provides precomputed frame embeddings (B, enc_len, enc_feat). Encoder length is
+whisper's native 1500 (30 s window); the assigned seq_len drives the decoder.
+LayerNorm + GELU MLP + learned decoder positions, biases everywhere (whisper
+style). [arXiv:2212.04356; unverified]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="encdec",
+    num_layers=24,  # decoder layers
+    enc_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    head_dim=64,
+    norm="ln",
+    act="gelu",
+    pos="learned",
+    qkv_bias=True,
+    enc_len=1500,
+    enc_feat=128,
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.replace(
+    name="whisper-medium-smoke",
+    num_layers=2,
+    enc_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=503,
+    enc_len=24,
+    enc_feat=16,
+)

@@ -1,0 +1,8 @@
+"""The paper's contribution: a pattern-aware, thrashing-aware, incrementally
+trained page predictor + policy engine for oversubscription management.
+
+Pipeline (Fig. 7): features -> pattern classifier -> pattern-based model
+table -> dual-Transformer page predictor (CE + LUCIR + thrashing loss) ->
+policy engine (prediction frequency table + page-set chain) -> GMMU ops,
+driven end-to-end by repro.uvm.runtime.
+"""

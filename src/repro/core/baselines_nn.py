@@ -1,0 +1,142 @@
+"""Learning-based baseline predictors for Fig. 10: LSTM, CNN, MLP.
+
+Same embeddings + cosine head as the paper's dual-Transformer predictor —
+only the sequence encoder differs — so Fig. 10 isolates the encoder choice,
+as the paper does.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.predictor_paper import PredictorConfig
+from repro.core import predictor as P
+from repro.models.params import Spec, init_params, prefix
+
+
+def _embed_head_specs(cfg: PredictorConfig) -> dict[str, Spec]:
+    d = cfg.d_model
+    return {
+        "embed/page": Spec((cfg.page_vocab, d), (None, None), "normal", 0.02),
+        "embed/delta": Spec((cfg.delta_vocab, d), (None, None), "normal", 0.02),
+        "embed/pc": Spec((cfg.pc_vocab, d), (None, None), "normal", 0.02),
+        "embed/tb": Spec((cfg.tb_vocab, d), (None, None), "normal", 0.02),
+        "pos": Spec((cfg.history, d), (None, None), "normal", 0.01),
+        "head/proj": Spec((2 * d, d), (None, None)),
+        "head/classes": Spec((cfg.delta_vocab, d), (None, None), "normal", 0.02),
+    }
+
+
+def _combined_embed(params, batch):
+    x = (
+        jnp.take(params["embed/page"], batch["page"], 0)
+        + jnp.take(params["embed/delta"], batch["delta"], 0)
+        + jnp.take(params["embed/pc"], batch["pc"], 0)
+        + jnp.take(params["embed/tb"], batch["tb"], 0)
+        + params["pos"][None]
+    )
+    return x  # (B, T, d)
+
+
+# --- LSTM -------------------------------------------------------------------
+
+def lstm_specs(cfg) -> dict[str, Spec]:
+    d = cfg.d_model
+    sp = _embed_head_specs(cfg)
+    sp.update(prefix({
+        "wx": Spec((d, 4 * d), (None, None)),
+        "wh": Spec((d, 4 * d), (None, None)),
+        "b": Spec((4 * d,), (None,), "zeros"),
+        "proj": Spec((d, 2 * d), (None, None)),
+    }, "enc"))
+    return sp
+
+
+def lstm_features(params, batch, cfg):
+    x = _combined_embed(params, batch)
+    d = cfg.d_model
+
+    def cell(carry, xt):
+        h, c = carry
+        z = xt @ params["enc/wx"] + h @ params["enc/wh"] + params["enc/b"]
+        i, f, g, o = jnp.split(z, 4, -1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    B = x.shape[0]
+    (h, _), _ = jax.lax.scan(cell, (jnp.zeros((B, d)), jnp.zeros((B, d))), jnp.moveaxis(x, 1, 0))
+    f = (h @ params["enc/proj"]) @ params["head/proj"]
+    return f.astype(jnp.float32)
+
+
+# --- CNN --------------------------------------------------------------------
+
+def cnn_specs(cfg) -> dict[str, Spec]:
+    d = cfg.d_model
+    sp = _embed_head_specs(cfg)
+    sp.update(prefix({
+        "w1": Spec((3, d, d), (None, None, None)),
+        "b1": Spec((d,), (None,), "zeros"),
+        "w2": Spec((3, d, d), (None, None, None)),
+        "b2": Spec((d,), (None,), "zeros"),
+        "proj": Spec((d, 2 * d), (None, None)),
+    }, "enc"))
+    return sp
+
+
+def _conv1d(x, w, b):
+    """x: (B,T,d) 'same' causal-ish conv with kernel (k, d_in, d_out)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    T = x.shape[1]
+    return sum(pad[:, i : i + T] @ w[i] for i in range(k)) + b
+
+
+def cnn_features(params, batch, cfg):
+    x = _combined_embed(params, batch)
+    h = jax.nn.relu(_conv1d(x, params["enc/w1"], params["enc/b1"]))
+    h = jax.nn.relu(_conv1d(h, params["enc/w2"], params["enc/b2"]))
+    f = (h.mean(1) @ params["enc/proj"]) @ params["head/proj"]
+    return f.astype(jnp.float32)
+
+
+# --- MLP --------------------------------------------------------------------
+
+def mlp_specs(cfg) -> dict[str, Spec]:
+    d = cfg.d_model
+    sp = _embed_head_specs(cfg)
+    sp.update(prefix({
+        "w1": Spec((cfg.history * d, 2 * d), (None, None)),
+        "b1": Spec((2 * d,), (None,), "zeros"),
+        "w2": Spec((2 * d, 2 * d), (None, None)),
+        "b2": Spec((2 * d,), (None,), "zeros"),
+    }, "enc"))
+    return sp
+
+
+def mlp_features(params, batch, cfg):
+    x = _combined_embed(params, batch)
+    h = x.reshape(x.shape[0], -1)
+    h = jax.nn.relu(h @ params["enc/w1"] + params["enc/b1"])
+    h = jax.nn.relu(h @ params["enc/w2"] + params["enc/b2"])
+    return (h @ params["head/proj"]).astype(jnp.float32)
+
+
+# --- unified factory ---------------------------------------------------------
+
+def make_model(cfg: PredictorConfig, kind: str):
+    """Returns (init_fn(rng)->params, forward_fn(params, batch)->(logits, feats))."""
+    if kind == "transformer":
+        return (lambda rng: P.init(rng, cfg)), (lambda p, b: P.forward(p, b, cfg))
+    specs, feat = {
+        "lstm": (lstm_specs, lstm_features),
+        "cnn": (cnn_specs, cnn_features),
+        "mlp": (mlp_specs, mlp_features),
+    }[kind]
+
+    def fwd(params, batch):
+        f = feat(params, batch, cfg)
+        return P.cosine_logits(params, f, cfg), f
+
+    return (lambda rng: init_params(rng, specs(cfg))), fwd

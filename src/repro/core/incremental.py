@@ -1,0 +1,220 @@
+"""Training protocols for the page predictor (Sections III-C, IV-B, V-A/B).
+
+  * online_single — ONE model, plain CE, train on group k-1 / predict group k
+                    (the existing-learning-based-works protocol, Fig. 4).
+  * online_multi  — pattern-aware model table, plain CE (Fig. 6 'multiple').
+  * ours          — pattern-aware table + LUCIR distillation + (optionally)
+                    the thrashing term (the full Section IV design).
+  * offline       — train one model on a random 50% of samples (future info!)
+                    then predict everything in temporal order: the paper's
+                    upper bound (Figs. 4/11).
+
+Every protocol measures top-1 accuracy on a group BEFORE the model trains on
+it (strictly causal evaluation).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.predictor_paper import PredictorConfig
+from repro.core import losses
+from repro.core.baselines_nn import make_model
+from repro.core.features import DeltaVocab, FeatureSet, FeatureStream
+from repro.core.model_table import Entry, ModelTable
+from repro.core.pattern import PatternClassifier
+from repro.optim import adamw
+from repro.uvm.trace import Trace
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    group_size: int = 2048  # accesses per train/predict group (paper: 50M instr)
+    epochs: int = 3
+    batch_size: int = 256
+    lr: float = 3e-3
+    seed: int = 0
+    table_slots: int = 8
+
+
+def _batch_of(fs: FeatureSet, idx) -> dict:
+    return {
+        "page": jnp.asarray(fs.page[idx]),
+        "delta": jnp.asarray(fs.delta[idx]),
+        "pc": jnp.asarray(fs.pc[idx]),
+        "tb": jnp.asarray(fs.tb[idx]),
+    }
+
+
+class Trainer:
+    """Jitted train/eval for one predictor architecture."""
+
+    def __init__(self, pcfg: PredictorConfig, tcfg: TrainConfig, kind: str = "transformer"):
+        self.pcfg, self.tcfg, self.kind = pcfg, tcfg, kind
+        self.init_fn, self.forward = make_model(pcfg, kind)
+        self.opt = adamw.adamw(tcfg.lr, weight_decay=0.01)
+
+        def train_step(params, opt_state, batch, labels, n_active, step, f_old, in_et, use_lucir, use_thrash):
+            def lf(p):
+                logits, f = self.forward(p, batch)
+                return losses.total_loss(
+                    logits, f, labels,
+                    n_active=n_active,
+                    f_old=f_old if use_lucir else None,
+                    in_et=in_et if use_thrash else None,
+                    lam=self.pcfg.lucir_lambda, mu=self.pcfg.thrash_mu,
+                )
+
+            (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+            updates, opt_state, _ = self.opt.update(grads, opt_state, params, step)
+            params = adamw.apply_updates(params, updates)
+            return params, opt_state, metrics
+
+        # n_active is a traced arg (class count grows); use_lucir/use_thrash static
+        self._train_step = jax.jit(train_step, static_argnames=("use_lucir", "use_thrash"))
+
+        def eval_step(params, batch, labels, n_active):
+            logits, f = self.forward(params, batch)
+            lm = jnp.where(jnp.arange(logits.shape[-1]) >= n_active, -1e30, logits)
+            return (lm.argmax(-1) == labels), lm.argmax(-1), f
+
+        self._eval_step = jax.jit(eval_step)
+
+    def new_params(self, seed: int = 0):
+        return self.init_fn(jax.random.key(seed))
+
+    def evaluate(self, params, fs: FeatureSet, n_active: int):
+        """Top-1 correctness per sample + predicted class ids."""
+        B = self.tcfg.batch_size
+        n = len(fs)
+        correct = np.zeros(n, bool)
+        pred = np.zeros(n, np.int32)
+        for lo in range(0, n, B):
+            idx = np.arange(lo, min(lo + B, n))
+            pad = B - len(idx)
+            pidx = np.concatenate([idx, np.zeros(pad, int)]) if pad else idx
+            c, p, _ = self._eval_step(params, _batch_of(fs, pidx), jnp.asarray(fs.label[pidx]), n_active)
+            correct[idx] = np.asarray(c)[: len(idx)]
+            pred[idx] = np.asarray(p)[: len(idx)]
+        return correct, pred
+
+    def old_features(self, prev_params, fs: FeatureSet, idx):
+        if prev_params is None:
+            return None
+        _, _, f = self._eval_step(prev_params, _batch_of(fs, idx), jnp.asarray(fs.label[idx]), 1)
+        return f
+
+    def train_group(self, entry: Entry, fs: FeatureSet, n_active: int, *, in_et=None, use_lucir=False, rng=None):
+        """Fine-tune on one group (a few epochs)."""
+        tc = self.tcfg
+        if entry.opt_state is None:
+            entry.opt_state = self.opt.init(entry.params)
+        n = len(fs)
+        if n == 0:
+            return entry
+        rng = np.random.default_rng(tc.seed if rng is None else rng)
+        use_l = use_lucir and entry.prev_params is not None
+        dummy_et = jnp.zeros((tc.batch_size,), bool)
+        for _ in range(tc.epochs):
+            order = rng.permutation(n)
+            for lo in range(0, n - tc.batch_size + 1, tc.batch_size):
+                idx = order[lo : lo + tc.batch_size]
+                f_old = self.old_features(entry.prev_params, fs, idx) if use_l else jnp.zeros((tc.batch_size, self.pcfg.d_model))
+                et = jnp.asarray(in_et[idx]) if in_et is not None else dummy_et
+                entry.params, entry.opt_state, _ = self._train_step(
+                    entry.params, entry.opt_state, _batch_of(fs, idx), jnp.asarray(fs.label[idx]),
+                    jnp.asarray(n_active, jnp.int32), entry.step, f_old, et,
+                    use_lucir=use_l, use_thrash=in_et is not None,
+                )
+                entry.step += 1
+            if n < tc.batch_size:  # tiny group: single padded batch
+                idx = np.resize(order, tc.batch_size)
+                f_old = self.old_features(entry.prev_params, fs, idx) if use_l else jnp.zeros((tc.batch_size, self.pcfg.d_model))
+                et = jnp.asarray(in_et[idx]) if in_et is not None else dummy_et
+                entry.params, entry.opt_state, _ = self._train_step(
+                    entry.params, entry.opt_state, _batch_of(fs, idx), jnp.asarray(fs.label[idx]),
+                    jnp.asarray(n_active, jnp.int32), entry.step, f_old, et,
+                    use_lucir=use_l, use_thrash=in_et is not None,
+                )
+                entry.step += 1
+        entry.n_updates += 1
+        return entry
+
+
+@dataclasses.dataclass
+class RunResult:
+    top1: float
+    per_group: list
+    n_classes: int
+    n_models: int
+    n_samples: int
+    predictions: np.ndarray  # predicted class id per sample
+    t_index: np.ndarray
+    correct: np.ndarray
+
+
+def run_protocol(
+    trace: Trace,
+    pcfg: PredictorConfig,
+    tcfg: TrainConfig,
+    *,
+    mode: str = "ours",
+    kind: str = "transformer",
+    in_et_flags: np.ndarray | None = None,  # per-access E∪T membership (thrash term)
+    table: ModelTable | None = None,
+) -> RunResult:
+    assert mode in ("online_single", "online_multi", "ours", "offline")
+    trainer = Trainer(pcfg, tcfg, kind)
+    vocab = DeltaVocab(pcfg.delta_vocab)
+    stream = FeatureStream(trace, vocab, pcfg.history, page_vocab=pcfg.page_vocab, pc_vocab=pcfg.pc_vocab, tb_vocab=pcfg.tb_vocab)
+    classifier = PatternClassifier()
+
+    if mode == "offline":
+        fs = stream.windows(0, len(trace))
+        n_active = max(vocab.n_classes, 2)
+        rng = np.random.default_rng(tcfg.seed)
+        train_idx = rng.permutation(len(fs))[: len(fs) // 2]
+        entry = Entry(params=trainer.new_params(tcfg.seed))
+        sub = fs.slice(0, len(fs))  # full; train on the random half
+        half = FeatureSet(*(getattr(fs, f.name)[train_idx] for f in dataclasses.fields(fs)))
+        for _ in range(3):  # extra passes — it has future knowledge anyway
+            entry = trainer.train_group(entry, half, n_active)
+        correct, pred = trainer.evaluate(entry.params, fs, n_active)
+        return RunResult(float(correct.mean()), [float(correct.mean())], vocab.n_classes, 1, len(fs), pred, fs.t_index, correct)
+
+    if table is None:
+        table = ModelTable(lambda s: trainer.new_params(s), n_slots=tcfg.table_slots)
+    multi = mode in ("online_multi", "ours")
+    use_lucir = mode == "ours"
+
+    n = len(trace)
+    G = tcfg.group_size
+    per_group = []
+    all_correct = np.zeros(0, bool)
+    all_pred = np.zeros(0, np.int32)
+    all_t = np.zeros(0, np.int32)
+    for g0 in range(0, n, G):
+        g1 = min(g0 + G, n)
+        fs = stream.windows(g0, g1)
+        if len(fs) == 0:
+            continue
+        n_active = max(vocab.n_classes, 2)
+        pat = classifier.classify(trace.block[g0:g1], trace.kernel[g0:g1]) if multi else 0
+        entry = table.get(pat)
+        correct, pred = trainer.evaluate(entry.params, fs, n_active)  # predict BEFORE training
+        per_group.append(float(correct.mean()))
+        all_correct = np.concatenate([all_correct, correct])
+        all_pred = np.concatenate([all_pred, pred])
+        all_t = np.concatenate([all_t, fs.t_index])
+        if use_lucir:
+            table.snapshot_prev(pat)
+            entry = table.get(pat)
+        in_et = in_et_flags[fs.t_index] if in_et_flags is not None and mode == "ours" else None
+        entry = trainer.train_group(entry, fs, n_active, in_et=in_et, use_lucir=use_lucir)
+        table.put(pat, entry)
+
+    top1 = float(all_correct.mean()) if len(all_correct) else 0.0
+    return RunResult(top1, per_group, vocab.n_classes, table.n_models, len(all_correct), all_pred, all_t, all_correct)

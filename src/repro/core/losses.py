@@ -1,0 +1,73 @@
+"""The paper's loss (Eqs. 2-3):
+
+    L = (1/|N|) sum_N [ L_CE + lambda * L_dis^G ] + (mu/|S|) sum_S L_thra
+
+  * L_CE     — cross-entropy over delta classes (active classes only; the
+               class space grows incrementally).
+  * L_dis^G  — LUCIR's geodesic (cosine) feature-distillation term against
+               the previous model's features: consolidates old knowledge when
+               new classes arrive (anti catastrophic forgetting).
+  * L_thra   — Eq. 2: the ADDITIVE INVERSE of CE restricted to the subset S
+               of samples whose target page is already evicted (E) or
+               thrashed (T). Minimising it pushes probability away from pages
+               that would thrash (again).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ce(logits, labels, n_active: int):
+    lm = jnp.where(jnp.arange(logits.shape[-1]) >= n_active, -1e30, logits)
+    lse = jax.nn.logsumexp(lm, -1)
+    ll = jnp.take_along_axis(lm, labels[:, None], 1)[:, 0]
+    return lse - ll  # per-sample nll
+
+
+def lucir_distill(f_new, f_old):
+    """1 - cos(f_new, sg(f_old)) per sample (LUCIR's L_dis^G)."""
+    f_old = jax.lax.stop_gradient(f_old)
+    nn_ = f_new / (jnp.linalg.norm(f_new, axis=-1, keepdims=True) + 1e-8)
+    no = f_old / (jnp.linalg.norm(f_old, axis=-1, keepdims=True) + 1e-8)
+    return 1.0 - jnp.sum(nn_ * no, -1)
+
+
+def thrash_term(logits, labels, in_et, n_active: int):
+    """Eq. 2 over the S subset: sum y_i log p_i == -CE (mean over S)."""
+    nll = ce(logits, labels, n_active)
+    s = in_et.astype(jnp.float32)
+    return -(nll * s).sum() / jnp.maximum(s.sum(), 1.0)
+
+
+def total_loss(
+    logits,
+    f_new,
+    labels,
+    *,
+    n_active: int,
+    f_old=None,
+    in_et=None,
+    lam: float = 0.5,
+    mu: float = 0.5,
+):
+    """Eq. 3. f_old None => no distillation (first group); in_et None => no
+    thrashing info (pure prediction experiments, Figs. 4/10)."""
+    nll = ce(logits, labels, n_active)
+    loss = nll.mean()
+    metrics = {"ce": loss}
+    if f_old is not None:
+        dis = lucir_distill(f_new, f_old).mean()
+        loss = loss + lam * dis
+        metrics["lucir"] = dis
+    if in_et is not None:
+        th = thrash_term(logits, labels, in_et, n_active)
+        loss = loss + mu * th
+        metrics["thrash_term"] = th
+    metrics["total"] = loss
+    return loss, metrics
+
+
+def top1_accuracy(logits, labels, n_active: int):
+    lm = jnp.where(jnp.arange(logits.shape[-1]) >= n_active, -1e30, logits)
+    return (lm.argmax(-1) == labels).mean()

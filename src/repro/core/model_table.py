@@ -1,0 +1,81 @@
+"""Pattern-based model table (Section IV-C).
+
+A direct-mapped cache of per-pattern predictor weights: indexed by a hash of
+the access-pattern id, returning that pattern's weights (plus the previous
+snapshot needed by the LUCIR term, and the optimizer state so fine-tuning
+resumes). All architectures are identical, so entries are interchangeable
+pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+
+@dataclasses.dataclass
+class Entry:
+    params: Any
+    prev_params: Any | None = None  # previous model (LUCIR distillation target)
+    opt_state: Any | None = None
+    step: int = 0
+    n_updates: int = 0
+    last_acc: float = 0.0  # top-1 on the most recent group (prefetch gate)
+
+
+class ModelTable:
+    def __init__(self, init_fn, n_slots: int = 8):
+        self.init_fn = init_fn  # (slot_seed) -> params
+        self.n_slots = n_slots
+        self.slots: dict[int, Entry] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def slot_of(self, pattern_id: int) -> int:
+        return hash(pattern_id) % self.n_slots
+
+    def get(self, pattern_id: int) -> Entry:
+        s = self.slot_of(pattern_id)
+        if s not in self.slots:
+            self.misses += 1
+            self.slots[s] = Entry(params=self.init_fn(s))
+        else:
+            self.hits += 1
+        return self.slots[s]
+
+    def put(self, pattern_id: int, entry: Entry):
+        self.slots[self.slot_of(pattern_id)] = entry
+
+    def snapshot_prev(self, pattern_id: int):
+        """Store the current weights as the LUCIR distillation target."""
+        e = self.get(pattern_id)
+        e.prev_params = jax.tree.map(lambda a: a, e.params)
+
+    def clone(self) -> "ModelTable":
+        """Independent copy (runs fine-tune entries in place; benchmarks
+        reusing one pretrained table must not leak state across runs)."""
+        import copy
+
+        t = ModelTable(self.init_fn, self.n_slots)
+        for s, e in self.slots.items():
+            t.slots[s] = Entry(
+                params=jax.tree.map(lambda a: a, e.params),
+                prev_params=jax.tree.map(lambda a: a, e.prev_params) if e.prev_params is not None else None,
+                opt_state=jax.tree.map(lambda a: a, e.opt_state) if e.opt_state is not None else None,
+                step=e.step,
+                n_updates=e.n_updates,
+                last_acc=e.last_acc,
+            )
+        return t
+
+    @property
+    def n_models(self) -> int:
+        return len(self.slots)
+
+    def footprint_bytes(self, bytes_per_param: int = 4) -> int:
+        total = 0
+        for e in self.slots.values():
+            n = sum(x.size for x in jax.tree.leaves(e.params))
+            total += n * bytes_per_param * (2 if e.prev_params is not None else 1)
+        return total

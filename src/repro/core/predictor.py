@@ -1,0 +1,109 @@
+"""Thrashing-aware incremental page predictor (Section IV-B, Fig. 8).
+
+Two Transformer blocks learn complementary views of the access stream:
+  * REGULAR block: page-address + page-delta embeddings (strides, reuse)
+  * IRREGULAR block: PC + thread-block-ID embeddings (pointer chase, etc.)
+Each block's last-position output is scaled by a learnable gate; the concat
+goes through a linear layer into a LUCIR cosine classifier over delta
+classes. Reuses the framework's dense transformer blocks (repro.models.dense)
+so the predictor trains on the same distributed substrate as the LM zoo.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.predictor_paper import PredictorConfig
+from repro.models import dense
+from repro.models import layers as L
+from repro.models.params import Spec, init_params, prefix, subtree
+
+
+def _block_cfg(cfg: PredictorConfig) -> ModelConfig:
+    return ModelConfig(
+        name=f"{cfg.name}-block",
+        family="dense",
+        num_layers=cfg.num_layers,
+        d_model=cfg.d_model,
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_heads,
+        d_ff=cfg.d_ff,
+        vocab_size=2,  # unused; blocks only
+        head_dim=cfg.d_model // cfg.num_heads,
+        rope_theta=10_000.0,
+    )
+
+
+def param_specs(cfg: PredictorConfig) -> dict[str, Spec]:
+    d = cfg.d_model
+    bc = _block_cfg(cfg)
+    sp: dict[str, Spec] = {
+        "embed/page": Spec((cfg.page_vocab, d), (None, None), "normal", 0.02),
+        "embed/delta": Spec((cfg.delta_vocab, d), (None, None), "normal", 0.02),
+        "embed/pc": Spec((cfg.pc_vocab, d), (None, None), "normal", 0.02),
+        "embed/tb": Spec((cfg.tb_vocab, d), (None, None), "normal", 0.02),
+        "pos": Spec((cfg.history, d), (None, None), "normal", 0.01),
+        "gate/reg": Spec((), (), "ones"),
+        "gate/irr": Spec((), (), "ones"),
+        "head/proj": Spec((2 * d, d), (None, None)),
+        "head/classes": Spec((cfg.delta_vocab, d), (None, None), "normal", 0.02),
+    }
+    sp.update(prefix(dense.block_specs(bc, cfg.num_layers), "reg"))
+    sp.update(prefix(dense.block_specs(bc, cfg.num_layers), "irr"))
+    sp.update(prefix(L.norm_specs(bc), "reg_final"))
+    sp.update(prefix(L.norm_specs(bc), "irr_final"))
+    return sp
+
+
+def init(rng, cfg: PredictorConfig, dtype=jnp.float32):
+    return init_params(rng, param_specs(cfg), dtype)
+
+
+def _run_block(params, pre, x, cfg: PredictorConfig):
+    bc = _block_cfg(cfg)
+    positions = jnp.arange(cfg.history, dtype=jnp.int32)
+
+    def body(carry, lp):
+        y, _ = dense.block(lp, carry, bc, positions=positions)
+        return y, None
+
+    x, _ = jax.lax.scan(body, x, subtree(params, pre))
+    return L.apply_norm(params, f"{pre}_final", x, bc)
+
+
+def features(params, batch, cfg: PredictorConfig):
+    """batch: {page, delta, pc, tb} each (B, T) int32. Returns (B, d) fp32."""
+    pos = params["pos"][None]
+    reg_x = jnp.take(params["embed/page"], batch["page"], 0) + jnp.take(params["embed/delta"], batch["delta"], 0) + pos
+    irr_x = jnp.take(params["embed/pc"], batch["pc"], 0) + jnp.take(params["embed/tb"], batch["tb"], 0) + pos
+    reg_f = _run_block(params, "reg", reg_x, cfg)[:, -1]
+    irr_f = _run_block(params, "irr", irr_x, cfg)[:, -1]
+    f = jnp.concatenate([params["gate/reg"] * reg_f, params["gate/irr"] * irr_f], -1)
+    return (f @ params["head/proj"]).astype(jnp.float32)
+
+
+def cosine_logits(params, f, cfg: PredictorConfig):
+    """LUCIR cosine classifier: scale * cos(feature, class weight)."""
+    fn = f / (jnp.linalg.norm(f, axis=-1, keepdims=True) + 1e-8)
+    w = params["head/classes"].astype(jnp.float32)
+    wn = w / (jnp.linalg.norm(w, axis=-1, keepdims=True) + 1e-8)
+    return cfg.cosine_scale * (fn @ wn.T)
+
+
+def forward(params, batch, cfg: PredictorConfig):
+    f = features(params, batch, cfg)
+    return cosine_logits(params, f, cfg), f
+
+
+def predict_topk(params, batch, cfg: PredictorConfig, k: int = 1, n_active: int | None = None):
+    logits, _ = forward(params, batch, cfg)
+    if n_active is not None:
+        logits = jnp.where(jnp.arange(logits.shape[-1]) >= n_active, -1e30, logits)
+    return jax.lax.top_k(logits, k)
+
+
+def param_count(cfg: PredictorConfig) -> int:
+    import numpy as np
+
+    return int(sum(np.prod(s.shape) for s in param_specs(cfg).values()))

@@ -1,0 +1,89 @@
+"""Deterministic, shardable, exactly-resumable data pipeline.
+
+Sources:
+  * synthetic — seeded Zipfian token stream with injected n-gram structure
+    (so models actually reduce loss on it)
+  * file      — byte-level tokenisation of a text file, repeated
+
+Determinism contract: batch content is a pure function of (seed, step,
+shard), so restarting from a checkpoint at step k reproduces the exact
+stream; scaling data-parallel shards re-partitions without replay. Traces for
+the UVM predictor flow through the same interface (``TraceBatches``), so the
+paper's model trains on the identical substrate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    batch: int  # GLOBAL batch
+    seq_len: int
+    seed: int = 0
+    source: str = "synthetic"  # synthetic | file
+    path: str = ""
+    zipf_a: float = 1.2
+    ngram: int = 3
+
+
+class TokenPipeline:
+    """Stateless batch generator: get(step, shard, n_shards) -> (B_shard, S+1)."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self._file_tokens: np.ndarray | None = None
+        if cfg.source == "file":
+            raw = Path(cfg.path).read_bytes()
+            self._file_tokens = np.frombuffer(raw, np.uint8).astype(np.int32) % cfg.vocab_size
+
+    def batch_shape(self, n_shards: int = 1) -> tuple[int, int]:
+        assert self.cfg.batch % n_shards == 0, "global batch must divide shards"
+        return (self.cfg.batch // n_shards, self.cfg.seq_len + 1)
+
+    def get(self, step: int, shard: int = 0, n_shards: int = 1) -> np.ndarray:
+        cfg = self.cfg
+        bs, width = self.batch_shape(n_shards)
+        rows = []
+        for i in range(bs):
+            global_row = step * cfg.batch + shard * bs + i
+            rows.append(self._row(global_row, width))
+        return np.stack(rows).astype(np.int32)
+
+    def _row(self, global_row: int, width: int) -> np.ndarray:
+        cfg = self.cfg
+        if self._file_tokens is not None:
+            start = (global_row * width) % max(len(self._file_tokens) - width, 1)
+            return self._file_tokens[start : start + width]
+        rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, global_row]))
+        toks = rng.zipf(cfg.zipf_a, size=width).astype(np.int64) % cfg.vocab_size
+        # inject learnable n-gram structure: every n-th token repeats an earlier one
+        k = cfg.ngram
+        toks[k::k] = toks[: len(toks[k::k])]
+        return toks.astype(np.int32)
+
+
+class TraceBatches:
+    """The UVM predictor's view: FeatureSet mini-batches from a trace, with
+    the same (seed, step)-deterministic contract."""
+
+    def __init__(self, fs, batch: int, seed: int = 0):
+        self.fs = fs
+        self.batch = batch
+        self.seed = seed
+
+    def get(self, step: int, shard: int = 0, n_shards: int = 1) -> dict[str, np.ndarray]:
+        bs = self.batch // n_shards
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, step, shard]))
+        idx = rng.integers(0, len(self.fs), bs)
+        return {
+            "page": self.fs.page[idx],
+            "delta": self.fs.delta[idx],
+            "pc": self.fs.pc[idx],
+            "tb": self.fs.tb[idx],
+            "label": self.fs.label[idx],
+        }

@@ -1,0 +1,94 @@
+"""Elastic scaling + straggler mitigation (control plane).
+
+At 1000+ nodes, device loss is routine. The contract here:
+
+  1. `plan_mesh(n_devices)` — choose the best (pod, data, model) factorisation
+     for whatever survives, preferring to keep the model axis (resharding TP
+     state is the expensive part) and shrinking data parallelism first.
+  2. `ElasticController` — drives the restart loop: on failure, re-plan the
+     mesh, restore the latest checkpoint resharded onto it (the checkpointer
+     is mesh-agnostic), and adjust the data pipeline's shard count; batches
+     are (seed, step)-deterministic so no data is replayed or skipped.
+  3. straggler mitigation — deadline-based microbatch drop with gradient
+     renormalisation: with k of m microbatches landed by the deadline, scale
+     the partial sum by m/k (unbiased under random stragglers) instead of
+     stalling the step. `StragglerPolicy.combine` implements the math; the
+     launcher applies it per accumulation window.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def _divisors(n: int) -> list[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def plan_mesh(n_devices: int, *, prefer_model: int = 16, max_pod: int = 64) -> tuple[int, int, int]:
+    """(pod, data, model) for the surviving device count.
+
+    Keeps model parallelism at the preferred width when divisible (TP reshard
+    is costly); splits the rest into pod x data with pods as square as
+    reasonable. Falls back to smaller model widths, then pure DP.
+    """
+    for model in sorted({d for d in _divisors(n_devices) if d <= prefer_model}, reverse=True):
+        rest = n_devices // model
+        pods = max((p for p in _divisors(rest) if p <= max_pod and rest // p >= p), default=1)
+        return pods, rest // pods, model
+    return 1, n_devices, 1
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Deadline-based microbatch skip with unbiased renormalisation."""
+
+    n_microbatches: int
+    min_fraction: float = 0.75  # below this, the step must stall (quality floor)
+
+    def combine(self, partial_sums, landed: int):
+        """partial_sums: accumulated grads over `landed` microbatches.
+        Returns (grads, ok): grads scaled to the full-batch expectation."""
+        if landed < int(np.ceil(self.min_fraction * self.n_microbatches)):
+            return partial_sums, False
+        scale = self.n_microbatches / landed
+
+        import jax
+
+        return jax.tree.map(lambda g: g * scale, partial_sums), True
+
+
+@dataclasses.dataclass
+class ElasticEvent:
+    step: int
+    n_devices_before: int
+    n_devices_after: int
+    mesh_before: tuple
+    mesh_after: tuple
+
+
+class ElasticController:
+    """Restart-loop bookkeeping (unit-tested logic; the launcher wires it to
+    real device enumeration + the checkpointer)."""
+
+    def __init__(self, n_devices: int, prefer_model: int = 16):
+        self.prefer_model = prefer_model
+        self.mesh_shape = plan_mesh(n_devices, prefer_model=prefer_model)
+        self.n_devices = n_devices
+        self.events: list[ElasticEvent] = []
+
+    @property
+    def data_shards(self) -> int:
+        pod, data, _ = self.mesh_shape
+        return pod * data
+
+    def on_failure(self, step: int, surviving: int) -> tuple[int, int, int]:
+        """Re-plan after device loss; records the event; returns new shape."""
+        new_shape = plan_mesh(surviving, prefer_model=self.prefer_model)
+        self.events.append(ElasticEvent(step, self.n_devices, surviving, self.mesh_shape, new_shape))
+        self.mesh_shape, self.n_devices = new_shape, surviving
+        return new_shape
+
+    def global_batch_for(self, per_shard_batch: int) -> int:
+        return per_shard_batch * self.data_shards

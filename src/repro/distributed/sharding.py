@@ -1,0 +1,160 @@
+"""Logical-axis sharding resolver.
+
+Every parameter/activation declares *logical* axes ("embed", "ff", "heads",
+"batch", ...). A rule table maps logical axes to preferred mesh axes; the
+resolver checks divisibility and axis reuse, and silently falls back to
+replication when a published dimension does not divide the mesh (e.g.
+qwen2-0.5b's 14 Q heads on a 16-way model axis). This keeps all 10 assigned
+architectures lowerable on the same production mesh without per-arch
+hand-written PartitionSpecs.
+
+Model code calls :func:`constrain` on activations; outside of an active mesh
+context (CPU smoke tests) it is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis -> ordered tuple of mesh axes to try (greedy, product must divide).
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    # activations
+    "batch": ("pod", "data"),
+    "act_seq": ("model",),  # Megatron-SP style sequence sharding between layers
+    "act_embed": (),
+    # parameters
+    "embed": ("data",),  # FSDP shard over the data axis
+    "ff": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "ssm_heads": ("model",),
+    "ssm_state": (),
+    "conv": (),
+    # KV cache
+    "kv_seq": ("model",),  # fallback when kv_heads cannot shard
+    # stacking axes — always replicated
+    "layers": (),
+    "apps": (),
+    "groups": (),
+}
+
+# Pure-DP variant (no TP): used by hillclimb experiments.
+FSDP_ONLY_RULES = {**DEFAULT_RULES, "ff": (), "heads": (), "kv_heads": (), "vocab": (), "experts": (), "act_seq": ()}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.stack: list[tuple[Mesh, dict[str, tuple[str, ...]]]] = []
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Mesh, rules: dict[str, tuple[str, ...]] | None = None):
+    """Activate (mesh, rules) for :func:`constrain` during tracing."""
+    _CTX.stack.append((mesh, dict(DEFAULT_RULES if rules is None else rules)))
+    try:
+        yield
+    finally:
+        _CTX.stack.pop()
+
+
+def active_mesh() -> Mesh | None:
+    return _CTX.stack[-1][0] if _CTX.stack else None
+
+
+# Dims are resolved in priority order (not positional order), so that e.g. a
+# KV cache (layers, batch, kv_seq, kv_heads, head_dim) gives the model axis to
+# kv_heads when divisible and only falls back to kv_seq otherwise.
+_PRIORITY = {
+    "experts": 0,
+    "heads": 1,
+    "kv_heads": 1,
+    "ssm_heads": 1,
+    "ff": 2,
+    "vocab": 2,
+    "batch": 3,
+    "embed": 4,
+    "act_seq": 5,
+    "kv_seq": 6,
+}
+
+
+def resolve_spec(
+    axes: Sequence[str | None],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: dict[str, tuple[str, ...]] | None = None,
+) -> P:
+    """Map logical axes to a PartitionSpec, respecting divisibility + axis reuse."""
+    rules = DEFAULT_RULES if rules is None else rules
+    used: set[str] = set()
+    out: list = [None] * len(list(shape))
+    order = sorted(
+        (i for i, name in enumerate(axes) if name is not None),
+        key=lambda i: (_PRIORITY.get(axes[i], 10), i),
+    )
+    for i in order:
+        dim, name = shape[i], axes[i]
+        if name not in rules:
+            raise KeyError(f"no sharding rule for logical axis {name!r}")
+        assigned: list[str] = []
+        prod = 1
+        for mesh_axis in rules[name]:
+            if mesh_axis not in mesh.shape or mesh_axis in used:
+                continue
+            size = mesh.shape[mesh_axis]
+            if dim % (prod * size) != 0:
+                continue
+            assigned.append(mesh_axis)
+            prod *= size
+        for a in assigned:
+            used.add(a)
+        if not assigned:
+            out[i] = None
+        elif len(assigned) == 1:
+            out[i] = assigned[0]
+        else:
+            out[i] = tuple(assigned)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def named_sharding(mesh: Mesh, axes: Sequence[str | None], shape: Sequence[int], rules=None) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(axes, shape, mesh, rules))
+
+
+def params_shardings(mesh: Mesh, specs: dict, rules=None) -> dict[str, NamedSharding]:
+    """Shardings for a flat {path: Spec} tree (repro.models.params.Spec)."""
+    return {p: named_sharding(mesh, s.axes, s.shape, rules) for p, s in specs.items()}
+
+
+def constrain(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Attach a sharding constraint from logical axes; no-op without a mesh."""
+    if not _CTX.stack:
+        return x
+    mesh, rules = _CTX.stack[-1]
+    spec = resolve_spec(axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def per_device_bytes(mesh: Mesh, axes: Sequence[str | None], shape: Sequence[int], dtype_bytes: int, rules=None) -> int:
+    """Analytic per-device footprint of one array under the resolver."""
+    spec = resolve_spec(axes, shape, mesh, rules)
+    total = int(np.prod(shape)) * dtype_bytes
+    denom = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        for a in (entry if isinstance(entry, tuple) else (entry,)):
+            denom *= mesh.shape[a]
+    return total // max(denom, 1)

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package is <name>/{kernel.py, ops.py, ref.py}: the pallas_call
+with explicit BlockSpec VMEM tiling, the jit'd dispatching wrapper, and the
+pure-jnp oracle the interpret-mode test sweeps assert against.
+
+  flash_attention   — FA2-style grouped-query attention; online-softmax state
+                      in VMEM scratch across the sequential KV grid dim.
+  decode_attention  — flash-decode: one token vs a long KV cache, purely
+                      KV-bandwidth-bound (the decode roofline floor).
+  ssd_scan          — Mamba-2 chunked SSD; inter-chunk state in VMEM scratch,
+                      the (Q,Q,H) quadratic term never leaves the core.
+  thrash_ce         — the PAPER's loss hot-spot: fused padded-class masking +
+                      logsumexp + thrashing weight (Eqs. 2-3), fwd + bwd via
+                      custom_vjp.
+
+Enable in the model stack with REPRO_USE_PALLAS=1 (the dry-run lowers the
+pure-XLA paths; EXPERIMENTS.md §Perf quantifies the kernel credit).
+"""

@@ -1,0 +1,86 @@
+"""Flash-decode Pallas TPU kernel: one query token vs a long KV cache.
+
+Grid: (B, K, nKV) with the KV dim sequential; the (G, D) accumulator stays in
+VMEM scratch, so per step the chip only streams the KV blocks — the kernel is
+purely KV-bandwidth-bound, which is the roofline floor for decode. Paged KV
+is handled by the caller passing a gathered view (block-table indirection
+happens at the XLA level; fusing it into the kernel via PrefetchScalarGridSpec
+is the recorded follow-on optimisation in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BK = 512
+NEG = -1e30
+
+
+def _dec_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, acc, m, l, *, bk, n_kv):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m[...] = jnp.full_like(m, NEG)
+        l[...] = jnp.zeros_like(l)
+
+    q = q_ref[0, 0]  # (G, D)
+    k = k_ref[0, 0]  # (BK, D)
+    scale = q.shape[-1] ** -0.5
+    s = jax.lax.dot_general(
+        (q * scale).astype(jnp.float32), k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )  # (G, BK)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    s = jnp.where(k_pos < len_ref[0], s, NEG)
+
+    m_new = jnp.maximum(m[...], s.max(-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m[...] - m_new)
+    l[...] = l[...] * alpha + p.sum(-1)
+    pv = jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0, 0],
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )  # (G, D)
+    acc[...] = acc[...] * alpha[..., None] + pv
+    m[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _done():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l[...][..., None], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention_kernelcall(q, k, v, kv_len, *, bk=DEFAULT_BK, interpret=False):
+    """q: (B,K,G,D); k,v: (B,T,K,D); kv_len: scalar int32."""
+    B, K, G, D = q.shape
+    T = k.shape[1]
+    bk = min(bk, T)
+    assert T % bk == 0
+    n_kv = T // bk
+    kk = jnp.moveaxis(k, 2, 1)
+    vv = jnp.moveaxis(v, 2, 1)
+    lens = jnp.full((1,), kv_len, jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_dec_kernel, bk=bk, n_kv=n_kv),
+        grid=(B, K, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1,), lambda b, h, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, kk, vv, lens)

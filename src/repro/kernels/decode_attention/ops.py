@@ -1,0 +1,22 @@
+"""Jitted wrapper matching the model layer's grouped layout."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import kernel, ref
+
+
+def decode_attention(q, k, v, *, q_offset=0, kv_len=None, causal=False, interpret=False):
+    """q: (B,1,K,G,D) (model layout) or (B,K,G,D). Returns model layout."""
+    squeeze = q.ndim == 5
+    if squeeze:
+        q4 = q[:, 0]
+    else:
+        q4 = q
+    T = k.shape[1]
+    lens = T if kv_len is None else kv_len
+    out = kernel.decode_attention_kernelcall(q4, k, v, lens, interpret=interpret)
+    return out[:, None] if squeeze else out
+
+
+decode_ref = ref.decode_ref

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for single-token (decode) attention over a long KV cache."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_ref(q, k, v, *, kv_len=None, causal=False, q_offset=0):
+    """q: (B,1,K,G,D) wait — canonical: q (B,K,G,D); k,v: (B,T,K,D)."""
+    if q.ndim == 5:  # (B,1,K,G,D)
+        q = q[:, 0]
+    B, K, G, D = q.shape
+    T = k.shape[1]
+    scale = D ** -0.5
+    s = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32) * scale, k.astype(jnp.float32))
+    k_pos = jnp.arange(T)
+    mask = jnp.ones((T,), bool)
+    if kv_len is not None:
+        mask = mask & (k_pos < kv_len)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,102 @@
+"""Flash attention (FA2-style) Pallas TPU kernel, grouped-query layout.
+
+Grid: (B, K, nQ, nKV) with the KV dimension innermost (sequential on TPU),
+so the online-softmax state lives in VMEM scratch across KV steps and scores
+NEVER touch HBM — this is the kernel credit quantified in EXPERIMENTS.md
+§Perf against the XLA chunked path's score traffic.
+
+Block shapes: q (G, BQ, D), k/v (BK, D) per (batch, kv-head) program.
+BQ/BK default 128/256 — MXU-aligned (multiples of 128 on the contracted and
+lane dims; D is the model's head_dim, 64/112/128 in the assigned archs).
+VMEM working set per program ~ G*BQ*D(fp32 acc) + BK*D*2 + G*BQ*BK scores
+≈ 2-6 MB at the defaults: fits the ~16MB/core budget with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 256
+NEG = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, acc, m, l, *, causal, bq, bk, n_kv, q_offset):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m[...] = jnp.full_like(m, NEG)
+        l[...] = jnp.zeros_like(l)
+
+    q = q_ref[0, 0]  # (G, BQ, D)
+    k = k_ref[0, 0]  # (BK, D)
+    scale = q.shape[-1] ** -0.5
+    s = jax.lax.dot_general(
+        (q * scale).astype(jnp.float32), k.astype(jnp.float32),
+        (((2,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )  # (G, BQ, BK)
+
+    q_pos = q_offset + iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask = mask & (q_pos >= k_pos)
+    mask = mask & (k_pos < len_ref[0])
+    s = jnp.where(mask[None], s, NEG)
+
+    m_new = jnp.maximum(m[...], s.max(-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m[...] - m_new)
+    l[...] = l[...] * alpha + p.sum(-1)
+    pv = jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0, 0],
+        (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )  # (G, BQ, D)
+    acc[...] = acc[...] * alpha[..., None] + pv
+    m[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _done():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l[...][..., None], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_offset", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal=True, q_offset=0, kv_len=None, bq=DEFAULT_BQ, bk=DEFAULT_BK, interpret=False):
+    """q: (B,S,K,G,D) grouped query; k,v: (B,T,K,D). Returns (B,S,K,G,D)."""
+    B, S, K, G, D = q.shape
+    T = k.shape[1]
+    bq = min(bq, S)
+    bk = min(bk, T)
+    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
+    n_q, n_kv = S // bq, T // bk
+    qg = jnp.moveaxis(q, 1, 3)  # (B, K, G, S, D)
+    kk = jnp.moveaxis(k, 2, 1)  # (B, K, T, D)
+    vv = jnp.moveaxis(v, 2, 1)
+    lens = jnp.full((1,), T if kv_len is None else kv_len, jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, causal=causal, bq=bq, bk=bk, n_kv=n_kv, q_offset=q_offset),
+        grid=(B, K, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, bq, D), lambda b, h, i, j: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1,), lambda b, h, i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, bq, D), lambda b, h, i, j: (b, h, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, bq, D), jnp.float32),
+            pltpu.VMEM((G, bq), jnp.float32),
+            pltpu.VMEM((G, bq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kk, vv, lens)
+    return jnp.moveaxis(out, 3, 1)  # (B, S, K, G, D)

@@ -1,0 +1,11 @@
+"""Jitted wrapper for the flash-attention kernel (model layout pass-through)."""
+from __future__ import annotations
+
+from repro.kernels.flash_attention import kernel, ref
+
+
+def flash_attention(q, k, v, *, causal=True, q_offset=0, kv_len=None, interpret=False):
+    return kernel.flash_attention(q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len, interpret=interpret)
+
+
+attention_ref = ref.attention_ref

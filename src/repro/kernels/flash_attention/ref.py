@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for grouped-query flash attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, q_offset=0, kv_len=None):
+    """q: (B,S,K,G,D); k,v: (B,T,K,D). fp32 math. Returns (B,S,K,G,D)."""
+    B, S, K, G, D = q.shape
+    T = k.shape[1]
+    scale = D ** -0.5
+    s = jnp.einsum("bskgd,btkd->bkgst", q.astype(jnp.float32) * scale, k.astype(jnp.float32))
+    q_pos = q_offset + jnp.arange(S)
+    k_pos = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask = mask & (q_pos[:, None] >= k_pos[None, :])
+    if kv_len is not None:
+        mask = mask & (k_pos[None, :] < kv_len)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,104 @@
+"""Chunked SSD (Mamba-2) Pallas TPU kernel.
+
+Grid: (B, nc) with the chunk dimension sequential; the inter-chunk state
+(H, P, N) fp32 lives in VMEM scratch, so the recurrence never round-trips
+HBM between chunks. Per chunk the kernel computes the intra-chunk quadratic
+term + the state contribution exactly like the ref (same einsum graph, fp32).
+
+VMEM budget per program at mamba2-370m dims (Q=256, H=32, P=64, N=128):
+  state 32*64*128*4 = 1.0 MB, decay/attention intermediates (Q,Q,H) fp32
+  = 8.4 MB, chunk inputs ~1.3 MB -> ~11 MB: fits a v5e core's ~16 MB VMEM
+  with Q=256; Q is the tuning knob recorded in §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, final_ref, state_ref, *, nc):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    f32 = jnp.float32
+    xq = x_ref[0].astype(f32)  # (Q, H, P)
+    dtq = dt_ref[0].astype(f32)  # (Q, H)
+    bq = b_ref[0].astype(f32)  # (Q, N)
+    cq = c_ref[0].astype(f32)  # (Q, N)
+    a = -jnp.exp(a_ref[...].astype(f32))  # (H,)
+    state = state_ref[...]  # (H, P, N)
+
+    dA = dtq * a  # (Q, H)
+    cum = jnp.cumsum(dA, axis=0)
+
+    # incoming-state contribution
+    y_inter = jnp.einsum("qn,hpn->qhp", cq, state) * jnp.exp(cum)[..., None]
+
+    # intra-chunk quadratic term
+    Q = xq.shape[0]
+    scores = jax.lax.dot_general(cq, bq, (((1,), (1,)), ((), ())), preferred_element_type=f32)  # (Q, Q)
+    diff = cum[:, None, :] - cum[None, :, :]  # (i, j, H)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    att = jnp.where((ii >= jj)[..., None], jnp.exp(diff), 0.0)
+    w = att * scores[..., None] * dtq[None, :, :]  # (i, j, H)
+    y_intra = jnp.einsum("ijh,jhp->ihp", w, xq)
+
+    # state update for the next chunk
+    decay_last = jnp.exp(cum[-1:, :] - cum)  # (Q, H)
+    contrib = jnp.einsum("qh,qn,qhp->hpn", decay_last * dtq, bq, xq)
+    state_ref[...] = state * jnp.exp(cum[-1])[:, None, None] + contrib
+
+    y_ref[0] = (y_inter + y_intra).astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _fin():
+        final_ref[0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_pallas(x, dt, A_log, b, c, *, chunk: int, initial_state=None, interpret=False):
+    """x: (B,L,H,P); dt: (B,L,H); A_log: (H,); b,c: (B,L,N).
+
+    Returns (y, final_state). interpret=True validates on CPU. NOTE: the
+    kernel zero-initialises state; a non-zero initial_state falls back to the
+    reference (prefill-with-carry is rare in training).
+    """
+    from repro.kernels.ssd_scan import ref
+
+    if initial_state is not None:
+        return ref.ssd_ref(x, dt, A_log, b, c, chunk, initial_state=initial_state)
+    B, L, H, P = x.shape
+    N = b.shape[-1]
+    assert L % chunk == 0
+    nc = L // chunk
+
+    y, state = pl.pallas_call(
+        functools.partial(_ssd_kernel, nc=nc),
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, H, P), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, chunk, H), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((H,), lambda i, j: (0,)),
+            pl.BlockSpec((1, chunk, N), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, N), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, H, P), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, H, P, N), lambda i, j: (i, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((H, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A_log, b, c)
+    return y, state

@@ -1,0 +1,15 @@
+"""Dispatching wrapper for the SSD mixer: Pallas TPU kernel when enabled,
+pure-XLA chunked reference otherwise (the dry-run lowering target)."""
+from __future__ import annotations
+
+from repro.kernels.ssd_scan import ref
+
+
+def ssd(x, dt, A_log, b, c, *, chunk: int, initial_state=None):
+    from repro.models.layers import use_pallas
+
+    if use_pallas():
+        from repro.kernels.ssd_scan import kernel
+
+        return kernel.ssd_pallas(x, dt, A_log, b, c, chunk=chunk, initial_state=initial_state)
+    return ref.ssd_ref(x, dt, A_log, b, c, chunk, initial_state=initial_state)

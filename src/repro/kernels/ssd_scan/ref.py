@@ -1,0 +1,124 @@
+"""Pure-jnp oracle for the chunked SSD (Mamba-2) sequence mixer.
+
+Semantics (per batch, head):
+    S_t = exp(dt_t * a) * S_{t-1} + dt_t * (b_t ⊗ x_t)      S in R^{P x N}
+    y_t = S_t^T-contraction with c_t  (+ no D-skip here; the model adds it)
+
+Chunked evaluation (arXiv:2405.21060): within-chunk quadratic term plus an
+across-chunk recurrence carried by a lax.scan. Everything runs in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk(state, xq, dtq, a, bq, cq):
+    """One chunk. state: (B,H,P,N) fp32; xq: (B,Q,H,P); dtq: (B,Q,H);
+    a: (H,) negative decay rates; bq, cq: (B,Q,N). Returns (state', y).
+
+    Numerics: decay/softplus paths in fp32; the large x/b/c tensors stay in
+    their input dtype (bf16 in training) with fp32 einsum accumulation —
+    casting them wholesale to fp32 doubled the chunk traffic for no accuracy
+    benefit (EXPERIMENTS.md §Perf cell A-3)."""
+    f32 = jnp.float32
+    wt = xq.dtype  # working dtype of the LARGE tensors (bf16 in training)
+    dtq = dtq.astype(f32)
+    dA = dtq * a  # (B,Q,H), negative
+    cum = jnp.cumsum(dA, axis=1)  # (B,Q,H) fp32
+
+    # contribution of the incoming state (state itself stays fp32 in carry)
+    y_inter = jnp.einsum("bqn,bhpn->bqhp", cq, state.astype(wt), preferred_element_type=f32) * jnp.exp(cum)[..., None]
+
+    # within-chunk quadratic term
+    Q = xq.shape[1]
+    scores = jnp.einsum("bin,bjn->bij", cq, bq, preferred_element_type=f32)  # (B,Q,Q)
+    diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B,i,j,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    att = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+    w = (att * scores[..., None] * dtq[:, None, :, :]).astype(wt)  # (B,i,j,H)
+    y_intra = jnp.einsum("bijh,bjhp->bihp", w, xq, preferred_element_type=f32)
+
+    # state passed to the next chunk
+    decay_last = jnp.exp(cum[:, -1:, :] - cum)  # (B,Q,H)
+    contrib = jnp.einsum(
+        "bqh,bqn,bqhp->bhpn", (decay_last * dtq).astype(wt), bq, xq, preferred_element_type=f32
+    )
+    state = state * jnp.exp(cum[:, -1])[:, :, None, None] + contrib
+    # cast inside the body: the stacked (nc,B,Q,H,P) output is written in the
+    # working dtype, not fp32 (halves the scan-output traffic, §Perf A-4a)
+    return state, (y_inter + y_intra).astype(wt)
+
+
+def ssd_ref(x, dt, A_log, b, c, chunk: int, initial_state=None):
+    """x: (B,L,H,P); dt: (B,L,H) post-softplus; A_log: (H,); b,c: (B,L,N).
+
+    Returns (y: (B,L,H,P) in x.dtype, final_state: (B,H,P,N) fp32).
+    """
+    Bb, Lq, H, P = x.shape
+    N = b.shape[-1]
+    if Lq % chunk:
+        raise ValueError(f"seq len {Lq} not divisible by chunk {chunk}")
+    nc = Lq // chunk
+    a = -jnp.exp(A_log.astype(jnp.float32))
+
+    # The recurrence serialises the sequence axis, so the residual stream's
+    # act_seq sharding must be exchanged for HEAD sharding here — without
+    # explicit constraints XLA gathers seq and then just replicates the whole
+    # mixer over the model axis (§Perf cell A-6).
+    from repro.distributed.sharding import constrain
+
+    def to_chunks(t, head_axis):
+        r = jnp.moveaxis(t.reshape((Bb, nc, chunk) + t.shape[2:]), 1, 0)
+        axes = (None, "batch", None) + ((("ssm_heads",) + (None,) * (r.ndim - 4)) if head_axis else ((None,) * (r.ndim - 3)))
+        return constrain(r, *axes)
+
+    xs = (to_chunks(x, True), to_chunks(dt, True), to_chunks(b, False), to_chunks(c, False))
+    state0 = (
+        jnp.zeros((Bb, H, P, N), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    state0 = constrain(state0, "batch", "ssm_heads", None, None)
+
+    def body(state, inp):
+        xq, dtq, bq, cq = inp
+        state, y = ssd_chunk(state, xq, dtq, a, bq, cq)
+        return state, y
+
+    # checkpoint: the (Q,Q,H) quadratic intermediates are rematerialised in
+    # the backward pass instead of being stacked across chunks as residuals
+    # (a (nc,B,Q,Q,H) fp32 tensor otherwise dominates training peak memory —
+    # EXPERIMENTS.md §Perf cell A).
+    state, ys = jax.lax.scan(jax.checkpoint(body), state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, Lq, H, P).astype(x.dtype)
+    return y, state
+
+
+def ssd_sequential(x, dt, A_log, b, c, initial_state=None):
+    """O(L) step-by-step reference (the 'truth' the chunked form must match)."""
+    Bb, Lq, H, P = x.shape
+    N = b.shape[-1]
+    f32 = jnp.float32
+    a = -jnp.exp(A_log.astype(f32))
+    state = (
+        jnp.zeros((Bb, H, P, N), f32) if initial_state is None else initial_state.astype(f32)
+    )
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * a)  # (B,H)
+        state = state * decay[:, :, None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dtt, bt, xt
+        )
+        y = jnp.einsum("bn,bhpn->bhp", ct, state)
+        return state, y
+
+    xs = (
+        jnp.moveaxis(x.astype(f32), 1, 0),
+        jnp.moveaxis(dt.astype(f32), 1, 0),
+        jnp.moveaxis(b.astype(f32), 1, 0),
+        jnp.moveaxis(c.astype(f32), 1, 0),
+    )
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state

@@ -1,0 +1,102 @@
+"""Fused thrashing-aware CE loss Pallas kernel (fwd + bwd, custom_vjp).
+
+The predictor's hot loss op: per sample it fuses padded-class masking,
+logsumexp, label pick, and the thrashing weight (1 - mu*in_et) in one VMEM
+pass over the (BB, V) logits block — and the backward kernel emits
+(softmax - onehot) * w / B without re-reading anything but the logits block.
+Delta vocab V <= 4096 so a whole row fits VMEM comfortably.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BB = 128
+NEG = -1e30
+
+
+def _fwd_kernel(logits_ref, labels_ref, et_ref, na_ref, loss_ref, *, mu, v):
+    lg = logits_ref[...].astype(jnp.float32)  # (BB, V)
+    cls = jax.lax.broadcasted_iota(jnp.int32, lg.shape, 1)
+    lg = jnp.where(cls >= na_ref[0], NEG, lg)
+    m = lg.max(-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(lg - m), -1)) + m[:, 0]
+    onehot = cls == labels_ref[...][:, None]
+    ll = jnp.sum(jnp.where(onehot, lg, 0.0), -1)
+    w = 1.0 - mu * et_ref[...].astype(jnp.float32)
+    loss_ref[...] = (lse - ll) * w
+
+
+def _bwd_kernel(logits_ref, labels_ref, et_ref, na_ref, g_ref, dlogits_ref, *, mu, v):
+    lg = logits_ref[...].astype(jnp.float32)
+    cls = jax.lax.broadcasted_iota(jnp.int32, lg.shape, 1)
+    lg = jnp.where(cls >= na_ref[0], NEG, lg)
+    m = lg.max(-1, keepdims=True)
+    e = jnp.exp(lg - m)
+    p = e / jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
+    onehot = (cls == labels_ref[...][:, None]).astype(jnp.float32)
+    w = (1.0 - mu * et_ref[...].astype(jnp.float32))[:, None]
+    dlogits_ref[...] = ((p - onehot) * w * g_ref[0]).astype(dlogits_ref.dtype)
+
+
+def _call_fwd(logits, labels, in_et, n_active, mu, bb, interpret):
+    B, V = logits.shape
+    bb = min(bb, B)
+    assert B % bb == 0
+    na = jnp.full((1,), n_active, jnp.int32)
+    per = pl.pallas_call(
+        functools.partial(_fwd_kernel, mu=mu, v=V),
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, V), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+        interpret=interpret,
+    )(logits, labels, in_et.astype(jnp.int32), na)
+    return per.mean()
+
+
+def _call_bwd(logits, labels, in_et, n_active, mu, g, bb, interpret):
+    B, V = logits.shape
+    bb = min(bb, B)
+    na = jnp.full((1,), n_active, jnp.int32)
+    gg = jnp.full((1,), g / B, jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, mu=mu, v=V),
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, V), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, V), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, V), logits.dtype),
+        interpret=interpret,
+    )(logits, labels, in_et.astype(jnp.int32), na, gg)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def thrash_ce(logits, labels, in_et, n_active, mu=0.5, bb=DEFAULT_BB, interpret=False):
+    return _call_fwd(logits, labels, in_et, n_active, mu, bb, interpret)
+
+
+def _vjp_fwd(logits, labels, in_et, n_active, mu, bb, interpret):
+    return _call_fwd(logits, labels, in_et, n_active, mu, bb, interpret), (logits, labels, in_et, n_active)
+
+
+def _vjp_bwd(mu, bb, interpret, res, g):
+    logits, labels, in_et, n_active = res
+    dl = _call_bwd(logits, labels, in_et, n_active, mu, g, bb, interpret)
+    return dl, None, None, None
+
+
+thrash_ce.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,10 @@
+"""Dispatcher: Pallas fused loss when enabled, composed jnp ops otherwise."""
+from __future__ import annotations
+
+from repro.kernels.thrash_ce import kernel, ref
+
+
+def thrash_ce_loss(logits, labels, in_et, n_active, mu=0.5, *, use_kernel=False, interpret=False):
+    if use_kernel:
+        return kernel.thrash_ce(logits, labels, in_et, n_active, mu, kernel.DEFAULT_BB, interpret)
+    return ref.thrash_ce_ref(logits, labels, in_et, mu, n_active)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused thrashing-aware CE loss (paper Eqs. 2-3
+combined over a batch):
+
+    per-sample: nll_i * (1 - mu * in_et_i)
+
+i.e. standard CE for ordinary samples, and CE + mu * L_thra (the additive
+inverse of CE) for samples whose target page is evicted/thrashed. Gradient
+wrt logits: (softmax - onehot) * (1 - mu*in_et) / B.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def thrash_ce_ref(logits, labels, in_et, mu: float, n_active: int):
+    lm = jnp.where(jnp.arange(logits.shape[-1]) >= n_active, -1e30, logits.astype(jnp.float32))
+    lse = jax.nn.logsumexp(lm, -1)
+    ll = jnp.take_along_axis(lm, labels[:, None], 1)[:, 0]
+    nll = lse - ll
+    w = 1.0 - mu * in_et.astype(jnp.float32)
+    return (nll * w).mean()
+
+
+def thrash_ce_grad_ref(logits, labels, in_et, mu: float, n_active: int):
+    return jax.grad(lambda lg: thrash_ce_ref(lg, labels, in_et, mu, n_active))(logits)

@@ -1,0 +1,139 @@
+"""Dense decoder-only LM family (qwen2 / qwen3 / granite / qwen1.5).
+
+Layers are stacked along a leading "layers" axis and executed with
+``lax.scan`` + full rematerialisation so the lowered HLO stays small for the
+512-device dry-run and activation memory is bounded by one layer's live set.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.params import Spec, prefix, subtree
+
+
+def block_specs(cfg, n_layers) -> dict[str, Spec]:
+    st = (n_layers,)
+    sp = {}
+    sp.update(prefix(L.attn_specs(cfg, stack=st), "attn"))
+    sp.update(prefix(L.norm_specs(cfg, stack=st), "norm1"))
+    sp.update(prefix(L.norm_specs(cfg, stack=st), "norm2"))
+    sp.update(prefix(L.mlp_specs(cfg, stack=st), "mlp"))
+    return sp
+
+
+def param_specs(cfg, max_seq: int = 0) -> dict[str, Spec]:
+    sp = {}
+    sp.update(prefix(L.embed_specs(cfg), "embed"))
+    sp.update(prefix(block_specs(cfg, cfg.num_layers), "blocks"))
+    sp.update(prefix(L.norm_specs(cfg), "final_norm"))
+    return sp
+
+
+def block(lp, x, cfg, *, positions, causal=True):
+    h, kv = L.self_attention(subtree(lp, "attn"), L.apply_norm(lp, "norm1", x, cfg), cfg, positions=positions, causal=causal)
+    x = x + h
+    h = L.mlp(subtree(lp, "mlp"), L.apply_norm(lp, "norm2", x, cfg), cfg)
+    x = x + h
+    return constrain(x, "batch", "act_seq", None), kv
+
+
+def decode_block(lp, x, cfg, *, cache_k, cache_v, pos):
+    h, kv = L.decode_self_attention(subtree(lp, "attn"), L.apply_norm(lp, "norm1", x, cfg), cfg, cache_k=cache_k, cache_v=cache_v, pos=pos)
+    x = x + h
+    h = L.mlp(subtree(lp, "mlp"), L.apply_norm(lp, "norm2", x, cfg), cfg)
+    return x + h, kv
+
+
+def backbone(params, x, cfg, *, positions, causal=True, collect_kv=False):
+    """Run the stacked blocks. x: (B, S, D) embeddings."""
+    blocks = subtree(params, "blocks")
+
+    def body(carry, lp):
+        y, kv = block(lp, carry, cfg, positions=positions, causal=causal)
+        return y, kv if collect_kv else None
+
+    x, kvs = jax.lax.scan(jax.checkpoint(body), x, blocks)
+    x = L.apply_norm(params, "final_norm", x, cfg)
+    return x, kvs
+
+
+def hidden(params, batch, cfg):
+    tokens = batch["tokens"]
+    x = L.embed(subtree(params, "embed"), tokens, cfg)
+    x = constrain(x, "batch", "act_seq", None)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    x, _ = backbone(params, x, cfg, positions=positions)
+    return x, {}
+
+
+def forward(params, batch, cfg):
+    x, aux = hidden(params, batch, cfg)
+    return L.unembed(subtree(params, "embed"), x, cfg), aux
+
+
+def build_cache(kvs, cfg):
+    """Stacked (L, B, S, K, HD) K/V -> cache dict (bf16 or int8+scales)."""
+    if cfg.kv_quant == "int8":
+        kq, ks = L.kv_quantize(kvs[0])
+        vq, vs = L.kv_quantize(kvs[1])
+        return {"k": kq, "k_scale": ks, "v": vq, "v_scale": vs}
+    return {"k": kvs[0].astype(jnp.bfloat16), "v": kvs[1].astype(jnp.bfloat16)}
+
+
+def prefill(params, batch, cfg):
+    tokens = batch["tokens"]
+    x = L.embed(subtree(params, "embed"), tokens, cfg)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    x, kvs = backbone(params, x, cfg, positions=positions, collect_kv=True)
+    logits = L.unembed(subtree(params, "embed"), x[:, -1:], cfg)
+    return logits, build_cache(kvs, cfg)
+
+
+def decode_step(params, batch, cache, cfg):
+    """One token. batch: {token: (B,), pos: scalar int32}."""
+    token, pos = batch["token"], batch["pos"]
+    x = L.embed(subtree(params, "embed"), token[:, None], cfg)
+    blocks = subtree(params, "blocks")
+
+    if cfg.kv_quant == "int8":
+
+        def body_q8(carry, xs):
+            lp, ck, cks, cv, cvs = xs
+            h, st = L.decode_self_attention_q8(
+                subtree(lp, "attn"), L.apply_norm(lp, "norm1", carry, cfg), cfg,
+                cache_k=ck, k_scale=cks, cache_v=cv, v_scale=cvs, pos=pos,
+            )
+            y = carry + h
+            h = L.mlp(subtree(lp, "mlp"), L.apply_norm(lp, "norm2", y, cfg), cfg)
+            return y + h, st
+
+        x, (nk, nks, nv, nvs) = jax.lax.scan(
+            body_q8, x, (blocks, cache["k"], cache["k_scale"], cache["v"], cache["v_scale"])
+        )
+        new_cache = {"k": nk, "k_scale": nks, "v": nv, "v_scale": nvs}
+    else:
+
+        def body(carry, xs):
+            lp, ck, cv = xs
+            y, (ck, cv) = decode_block(lp, carry, cfg, cache_k=ck, cache_v=cv, pos=pos)
+            return y, (ck, cv)
+
+        x, (nk, nv) = jax.lax.scan(body, x, (blocks, cache["k"], cache["v"]))
+        new_cache = {"k": nk, "v": nv}
+    x = L.apply_norm(params, "final_norm", x, cfg)
+    logits = L.unembed(subtree(params, "embed"), x, cfg)
+    return logits, new_cache
+
+
+def cache_specs(cfg, batch: int, seq_len: int) -> dict[str, Spec]:
+    shp = (cfg.num_layers, batch, seq_len, cfg.num_kv_heads, cfg.head_dim)
+    axes = ("layers", "batch", "kv_seq", "kv_heads", None)
+    sp = {"k": Spec(shp, axes, "zeros"), "v": Spec(shp, axes, "zeros")}
+    if cfg.kv_quant == "int8":
+        sshp = shp[:-1] + (1,)
+        sp["k_scale"] = Spec(sshp, axes, "zeros")
+        sp["v_scale"] = Spec(sshp, axes, "zeros")
+    return sp

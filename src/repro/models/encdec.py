@@ -1,0 +1,143 @@
+"""Whisper-medium style encoder-decoder.
+
+The conv audio frontend is a STUB per the assignment: inputs carry
+precomputed frame embeddings (B, enc_len, enc_feat) which a linear projection
+lifts to d_model (standing in for the two conv layers). Encoder uses
+sinusoidal positions + bidirectional attention; decoder uses learned positions
++ causal self-attention + cross-attention into the encoder states.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.params import Spec, prefix, subtree
+
+
+def param_specs(cfg, max_seq: int = 448) -> dict[str, Spec]:
+    sp = {}
+    sp.update(prefix(L.embed_specs(cfg), "embed"))
+    sp["pos_emb"] = Spec((max(max_seq, 8), cfg.d_model), (None, "embed"), "normal", 0.01)
+    sp["frontend/w"] = Spec((cfg.enc_feat, cfg.d_model), (None, "embed"))
+    sp["frontend/b"] = Spec((cfg.d_model,), (None,), "zeros")
+    # encoder blocks
+    est = (cfg.enc_layers,)
+    sp.update(prefix(L.attn_specs(cfg, stack=est), "enc/attn"))
+    sp.update(prefix(L.norm_specs(cfg, stack=est), "enc/norm1"))
+    sp.update(prefix(L.norm_specs(cfg, stack=est), "enc/norm2"))
+    sp.update(prefix(L.mlp_specs(cfg, stack=est), "enc/mlp"))
+    sp.update(prefix(L.norm_specs(cfg), "enc_final_norm"))
+    # decoder blocks
+    dst = (cfg.num_layers,)
+    sp.update(prefix(L.attn_specs(cfg, stack=dst), "dec/self_attn"))
+    sp.update(prefix(L.attn_specs(cfg, stack=dst), "dec/cross_attn"))
+    sp.update(prefix(L.norm_specs(cfg, stack=dst), "dec/norm1"))
+    sp.update(prefix(L.norm_specs(cfg, stack=dst), "dec/norm2"))
+    sp.update(prefix(L.norm_specs(cfg, stack=dst), "dec/norm3"))
+    sp.update(prefix(L.mlp_specs(cfg, stack=dst), "dec/mlp"))
+    sp.update(prefix(L.norm_specs(cfg), "final_norm"))
+    return sp
+
+
+def encode(params, frames, cfg):
+    """frames: (B, enc_len, enc_feat) stub frontend output."""
+    w = params["frontend/w"]
+    x = frames.astype(w.dtype) @ w + params["frontend/b"]
+    x = x + L.sinusoidal(x.shape[1], cfg.d_model, x.dtype)[None]
+    x = constrain(x, "batch", "act_seq", None)
+
+    def body(carry, lp):
+        h, _ = L.self_attention(subtree(lp, "attn"), L.apply_norm(lp, "norm1", carry, cfg), cfg, positions=None, causal=False)
+        y = carry + h
+        h = L.mlp(subtree(lp, "mlp"), L.apply_norm(lp, "norm2", y, cfg), cfg)
+        return constrain(y + h, "batch", "act_seq", None), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, subtree(params, "enc"))
+    return L.apply_norm(params, "enc_final_norm", x, cfg)
+
+
+def _dec_embed(params, tokens, cfg, pos0=0):
+    x = L.embed(subtree(params, "embed"), tokens, cfg)
+    pe = jax.lax.dynamic_slice_in_dim(params["pos_emb"], pos0, tokens.shape[1], axis=0)
+    return x + pe.astype(x.dtype)[None]
+
+
+def decode_blocks(params, x, enc_out, cfg, *, collect_kv=False):
+    """Teacher-forced decoder over full seq. Returns (x, (self_k, self_v, cross_k, cross_v))."""
+    positions = None  # learned positions added at embedding
+
+    def body(carry, lp):
+        h, kv = L.self_attention(subtree(lp, "self_attn"), L.apply_norm(lp, "norm1", carry, cfg), cfg, positions=positions, causal=True)
+        y = carry + h
+        cp = subtree(lp, "cross_attn")
+        enc_kv = L.encode_cross_kv(cp, enc_out, cfg)
+        h = L.cross_attention(cp, L.apply_norm(lp, "norm2", y, cfg), enc_kv, cfg)
+        y = y + h
+        h = L.mlp(subtree(lp, "mlp"), L.apply_norm(lp, "norm3", y, cfg), cfg)
+        y = constrain(y + h, "batch", "act_seq", None)
+        return y, (kv + enc_kv) if collect_kv else None
+
+    x, kvs = jax.lax.scan(jax.checkpoint(body), x, subtree(params, "dec"))
+    return L.apply_norm(params, "final_norm", x, cfg), kvs
+
+
+def hidden(params, batch, cfg):
+    enc_out = encode(params, batch["frames"], cfg)
+    x = _dec_embed(params, batch["tokens"], cfg)
+    x, _ = decode_blocks(params, x, enc_out, cfg)
+    return x, {}
+
+
+def forward(params, batch, cfg):
+    x, aux = hidden(params, batch, cfg)
+    return L.unembed(subtree(params, "embed"), x, cfg), aux
+
+
+def prefill(params, batch, cfg):
+    enc_out = encode(params, batch["frames"], cfg)
+    x = _dec_embed(params, batch["tokens"], cfg)
+    x, kvs = decode_blocks(params, x, enc_out, cfg, collect_kv=True)
+    logits = L.unembed(subtree(params, "embed"), x[:, -1:], cfg)
+    sk, sv, ck, cv = kvs
+    cache = {
+        "k": sk.astype(jnp.bfloat16),
+        "v": sv.astype(jnp.bfloat16),
+        "cross_k": ck.astype(jnp.bfloat16),
+        "cross_v": cv.astype(jnp.bfloat16),
+    }
+    return logits, cache
+
+
+def decode_step(params, batch, cache, cfg):
+    token, pos = batch["token"], batch["pos"]
+    x = _dec_embed(params, token[:, None], cfg, pos0=pos)
+
+    def body(carry, xs):
+        lp, ck, cv, xk, xv = xs
+        h, (ck, cv) = L.decode_self_attention(subtree(lp, "self_attn"), L.apply_norm(lp, "norm1", carry, cfg), cfg, cache_k=ck, cache_v=cv, pos=pos)
+        y = carry + h
+        h = L.cross_attention(subtree(lp, "cross_attn"), L.apply_norm(lp, "norm2", y, cfg), (xk, xv), cfg)
+        y = y + h
+        h = L.mlp(subtree(lp, "mlp"), L.apply_norm(lp, "norm3", y, cfg), cfg)
+        return y + h, (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (subtree(params, "dec"), cache["k"], cache["v"], cache["cross_k"], cache["cross_v"])
+    )
+    x = L.apply_norm(params, "final_norm", x, cfg)
+    logits = L.unembed(subtree(params, "embed"), x, cfg)
+    return logits, {"k": nk, "v": nv, "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+
+
+def cache_specs(cfg, batch: int, seq_len: int) -> dict[str, Spec]:
+    axes = ("layers", "batch", "kv_seq", "kv_heads", None)
+    self_shp = (cfg.num_layers, batch, seq_len, cfg.num_kv_heads, cfg.head_dim)
+    cross_shp = (cfg.num_layers, batch, cfg.enc_len, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": Spec(self_shp, axes, "zeros"),
+        "v": Spec(self_shp, axes, "zeros"),
+        "cross_k": Spec(cross_shp, axes, "zeros"),
+        "cross_v": Spec(cross_shp, axes, "zeros"),
+    }

@@ -1,0 +1,163 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + ONE shared attention block whose
+weights are reused at every application (every ``attn_every`` SSM layers).
+Each application keeps its own KV cache (weights shared, cache not).
+
+Layer layout for num_layers=81, attn_every=6:
+  13 groups of (6 mamba layers -> shared attn block) + 3 tail mamba layers.
+Simplification vs. the released checkpoint: the shared block consumes the
+residual stream directly (no concat with the original embedding, no LoRA
+per-application adapters) — recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import dense, layers as L, mamba2
+from repro.models.params import Spec, prefix, subtree
+
+
+def group_layout(cfg) -> tuple[int, int, int]:
+    """(n_groups, group_size, n_tail)."""
+    g = cfg.attn_every
+    n_groups = cfg.num_layers // g
+    return n_groups, g, cfg.num_layers - n_groups * g
+
+
+def param_specs(cfg, max_seq: int = 0) -> dict[str, Spec]:
+    n_groups, g, tail = group_layout(cfg)
+    sp = {}
+    sp.update(prefix(L.embed_specs(cfg), "embed"))
+    sp.update(prefix(mamba2.block_specs(cfg, n_groups * g), "mamba"))
+    if tail:
+        sp.update(prefix(mamba2.block_specs(cfg, tail), "mamba_tail"))
+    # one shared transformer block (unstacked)
+    sp.update(prefix(L.attn_specs(cfg), "shared/attn"))
+    sp.update(prefix(L.norm_specs(cfg), "shared/norm1"))
+    sp.update(prefix(L.norm_specs(cfg), "shared/norm2"))
+    sp.update(prefix(L.mlp_specs(cfg), "shared/mlp"))
+    sp.update(prefix(L.norm_specs(cfg), "final_norm"))
+    return sp
+
+
+def _reshape_group(tree, n_groups, g):
+    return jax.tree.map(lambda a: a.reshape((n_groups, g) + a.shape[1:]), tree)
+
+
+def backbone_forward(params, batch, cfg, *, collect=False):
+    tokens = batch["tokens"]
+    n_groups, g, tail = group_layout(cfg)
+    x = L.embed(subtree(params, "embed"), tokens, cfg)
+    x = constrain(x, "batch", "act_seq", None)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    shared = subtree(params, "shared")
+    mamba_groups = _reshape_group(subtree(params, "mamba"), n_groups, g)
+
+    def mamba_body(carry, lp):
+        y, st = mamba2.block(lp, carry, cfg, collect_state=collect)
+        return y, st
+
+    def group_body(carry, glp):
+        y, states = jax.lax.scan(jax.checkpoint(mamba_body), carry, glp)
+        h, kv = L.self_attention(
+            subtree(shared, "attn"), L.apply_norm(shared, "norm1", y, cfg), cfg, positions=positions
+        )
+        y = y + h
+        h = L.mlp(subtree(shared, "mlp"), L.apply_norm(shared, "norm2", y, cfg), cfg)
+        y = constrain(y + h, "batch", "act_seq", None)
+        return y, (states, kv if collect else None)
+
+    # checkpoint the WHOLE group: otherwise the outer scan stacks the shared
+    # attention/MLP residuals of all 13 applications (§Perf cell A-2); only
+    # the (B,S,D) group boundaries are saved.
+    x, (mstates, kvs) = jax.lax.scan(jax.checkpoint(group_body), x, mamba_groups)
+    tail_states = None
+    if tail:
+        x, tail_states = jax.lax.scan(
+            jax.checkpoint(mamba_body), x, subtree(params, "mamba_tail")
+        )
+    x = L.apply_norm(params, "final_norm", x, cfg)
+    return x, (mstates, tail_states, kvs)
+
+
+def hidden(params, batch, cfg):
+    x, _ = backbone_forward(params, batch, cfg)
+    return x, {}
+
+
+def forward(params, batch, cfg):
+    x, aux = hidden(params, batch, cfg)
+    return L.unembed(subtree(params, "embed"), x, cfg), aux
+
+
+def prefill(params, batch, cfg):
+    x, (mstates, tail_states, kvs) = backbone_forward(params, batch, cfg, collect=True)
+    logits = L.unembed(subtree(params, "embed"), x[:, -1:], cfg)
+    n_groups, g, tail = group_layout(cfg)
+
+    def full(i):  # join (n_groups, g, B, ...) main + (tail, B, ...) tail
+        main = mstates[i].reshape((n_groups * g,) + mstates[i].shape[2:])
+        return jnp.concatenate([main, tail_states[i]], 0) if tail else main
+
+    cache = {
+        "conv_x": full(0),
+        "conv_b": full(1),
+        "conv_c": full(2),
+        "ssm": full(3).astype(jnp.float32),
+        "k": kvs[0].astype(jnp.bfloat16),  # (n_apps, B, S, K, HD)
+        "v": kvs[1].astype(jnp.bfloat16),
+    }
+    return logits, cache
+
+
+STATE_KEYS = ("conv_x", "conv_b", "conv_c", "ssm")
+
+
+def decode_step(params, batch, cache, cfg):
+    token, pos = batch["token"], batch["pos"]
+    n_groups, g, tail = group_layout(cfg)
+    x = L.embed(subtree(params, "embed"), token[:, None], cfg)
+    shared = subtree(params, "shared")
+    mamba_all = subtree(params, "mamba")
+    mamba_groups = _reshape_group(mamba_all, n_groups, g)
+    main = tuple(cache[k][: n_groups * g].reshape((n_groups, g) + cache[k].shape[1:]) for k in STATE_KEYS)
+
+    def mamba_body(carry, xs):
+        lp, cx, cb, cc, sst = xs
+        h, st = mamba2.mixer_decode(
+            subtree(lp, "mixer"), L.apply_norm(lp, "norm", carry, cfg), cfg,
+            conv_x=cx, conv_b=cb, conv_c=cc, ssm_state=sst,
+        )
+        return carry + h, st
+
+    def group_body(carry, xs):
+        glp, gx, gb, gc, gs, ck, cv = xs
+        y, nstates = jax.lax.scan(mamba_body, carry, (glp, gx, gb, gc, gs))
+        h, (ck, cv) = L.decode_self_attention(
+            subtree(shared, "attn"), L.apply_norm(shared, "norm1", y, cfg), cfg, cache_k=ck, cache_v=cv, pos=pos
+        )
+        y = y + h
+        h = L.mlp(subtree(shared, "mlp"), L.apply_norm(shared, "norm2", y, cfg), cfg)
+        return y + h, nstates + (ck, cv)
+
+    x, outs = jax.lax.scan(group_body, x, (mamba_groups,) + main + (cache["k"], cache["v"]))
+    new_states = [t.reshape((n_groups * g,) + t.shape[2:]) for t in outs[:4]]
+    nk, nv = outs[4], outs[5]
+    if tail:
+        tail_in = tuple(cache[k][n_groups * g :] for k in STATE_KEYS)
+        x, tstates = jax.lax.scan(mamba_body, x, (subtree(params, "mamba_tail"),) + tail_in)
+        new_states = [jnp.concatenate([m, t], 0) for m, t in zip(new_states, tstates)]
+    x = L.apply_norm(params, "final_norm", x, cfg)
+    logits = L.unembed(subtree(params, "embed"), x, cfg)
+    out_cache = dict(zip(STATE_KEYS, new_states))
+    out_cache.update({"k": nk, "v": nv})
+    return logits, out_cache
+
+
+def cache_specs(cfg, batch: int, seq_len: int) -> dict[str, Spec]:
+    n_groups, _, _ = group_layout(cfg)
+    sp = mamba2.cache_specs(cfg, batch, seq_len)
+    sp["k"] = Spec((n_groups, batch, seq_len, cfg.num_kv_heads, cfg.head_dim), ("apps", "batch", "kv_seq", "kv_heads", None), "zeros")
+    sp["v"] = Spec((n_groups, batch, seq_len, cfg.num_kv_heads, cfg.head_dim), ("apps", "batch", "kv_seq", "kv_heads", None), "zeros")
+    return sp

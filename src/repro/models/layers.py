@@ -1,0 +1,397 @@
+"""Shared model layers: norms, RoPE, GQA attention (chunked online-softmax),
+GLU/GELU MLPs, embeddings. Pure functions over flat param dicts.
+
+Attention dispatches to the Pallas kernels (repro.kernels) when
+``REPRO_USE_PALLAS=1``; the default is the pure-XLA chunked implementation,
+which is also the lowering target for the multi-pod dry-run (Pallas kernels
+are validated separately in interpret mode — see tests/kernels)."""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.params import Spec
+
+# KV-chunk size for the online-softmax attention scan. 1024 keeps the largest
+# transient (B,K,G,S,C) score block bounded for 32k prefill.
+ATTN_KV_CHUNK = 1024
+
+
+def use_pallas() -> bool:
+    return os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return (((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)) * scale + bias
+
+
+def apply_norm(params, pre, x, cfg):
+    if cfg.norm == "ln":
+        return layer_norm(x, params[f"{pre}/scale"], params[f"{pre}/bias"], cfg.norm_eps)
+    return rms_norm(x, params[f"{pre}/scale"], cfg.norm_eps)
+
+
+def norm_specs(cfg, d=None, stack=()) -> dict[str, Spec]:
+    d = d or cfg.d_model
+    stack_axes = tuple("layers" for _ in stack)
+    out = {"scale": Spec(stack + (d,), stack_axes + (None,), "ones")}
+    if cfg.norm == "ln":
+        out["bias"] = Spec(stack + (d,), stack_axes + (None,), "zeros")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta):
+    """x: (..., S, H, D); positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    if ang.ndim == 2:  # (S, D/2) -> broadcast over batch
+        ang = ang[None]
+    ang = ang[..., None, :]  # (B, S, 1, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal(length: int, d: int, dtype=jnp.float32):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    inv = 1.0 / (10000.0 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention core — chunked online-softmax (flash-style, pure XLA)
+# ---------------------------------------------------------------------------
+
+def _attend_chunked(q, k, v, *, q_offset, causal, kv_len=None, kv_chunk=ATTN_KV_CHUNK):
+    """Online-softmax attention with a scan over KV chunks.
+
+    q: (B, S, K, G, D) grouped query; k, v: (B, T, K, D).
+    q_offset: scalar or (B,) — absolute position of q[.., 0] for causal masking.
+    kv_len: optional scalar/(B,) — valid KV prefix length (decode with cache).
+    Returns (B, S, K, G, D).
+    """
+    B, S, K, G, D = q.shape
+    T = k.shape[1]
+    scale = D ** -0.5
+    qf = (q * scale).astype(q.dtype)
+    nchunk = max(T // kv_chunk, 1)
+    kv_chunk = T // nchunk
+    kc = k.reshape(B, nchunk, kv_chunk, K, D)
+    vc = v.reshape(B, nchunk, kv_chunk, K, D)
+
+    q_pos = (jnp.asarray(q_offset)[..., None] + jnp.arange(S)).astype(jnp.int32)  # (S,) or (B,S)
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None]  # (1, S)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        kci, vci, start = xs
+        # scores: (B, K, G, S, C)
+        s = jnp.einsum("bskgd,bckd->bkgsc", qf, kci, preferred_element_type=jnp.float32)
+        k_pos = start + jnp.arange(kv_chunk, dtype=jnp.int32)
+        mask = jnp.ones((1, S, kv_chunk), jnp.bool_)
+        if causal:
+            mask = mask & (q_pos[:, :, None] >= k_pos[None, None, :])
+        if kv_len is not None:
+            lv = jnp.asarray(kv_len)
+            lv = lv[:, None, None] if lv.ndim == 1 else lv[None, None, None]
+            mask = mask & (k_pos[None, None, :] < lv)
+        s = jnp.where(mask[:, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1)
+        pv = jnp.einsum("bkgsc,bckd->bkgsd", p.astype(q.dtype), vci, preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return (acc, m_new, l), None
+
+    # Sequence-parallel attention: carries are seq-sharded like Q, so the
+    # online-softmax scan never reshards score-shaped tensors (the naive
+    # sharding all-gathers (B,K,G,S,C) fp32 scores every chunk).
+    acc0 = constrain(jnp.zeros((B, K, G, S, D), jnp.float32), "batch", None, None, "act_seq", None)
+    m0 = constrain(jnp.full((B, K, G, S), -jnp.inf, jnp.float32), "batch", None, None, "act_seq")
+    l0 = constrain(jnp.zeros((B, K, G, S), jnp.float32), "batch", None, None, "act_seq")
+    starts = (jnp.arange(nchunk) * kv_chunk).astype(jnp.int32)
+    kc_t = jnp.moveaxis(kc, 1, 0)
+    vc_t = jnp.moveaxis(vc, 1, 0)
+    # checkpoint: masks/probabilities are rematerialised in the backward pass
+    # instead of being stacked across kv chunks as scan residuals (a (nchunk,
+    # B, K, G, S, C) fp32/pred tensor otherwise dominates peak memory).
+    (acc, m, l), _ = jax.lax.scan(jax.checkpoint(body), (acc0, m0, l0), (kc_t, vc_t, starts))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.moveaxis(out, 3, 1).astype(q.dtype)  # (B, S, K, G, D)
+
+
+def _attend_single_token(q, k, v, *, kv_len):
+    """Decode (S==1) attention in ONE pass: no kv-chunk scan, so XLA SPMD
+    keeps the contraction sharded over a kv_seq-sharded cache (partial
+    softmax stats reduce with a cheap psum) instead of all-gathering the
+    cache and looping chunks on every chip (§Perf cell C)."""
+    B, S, K, G, D = q.shape
+    T = k.shape[1]
+    s = jnp.einsum(
+        "bskgd,btkd->bkgst", (q * D**-0.5).astype(q.dtype), k,
+        preferred_element_type=jnp.float32,
+    )  # (B,K,G,1,T)
+    if kv_len is not None:
+        s = jnp.where(jnp.arange(T) < jnp.asarray(kv_len), s, -1e30)
+    m = s.max(-1, keepdims=True)
+    p = jnp.exp(s - m)
+    out = jnp.einsum("bkgst,btkd->bskgd", p.astype(q.dtype), v, preferred_element_type=jnp.float32)
+    l = jnp.moveaxis(p.sum(-1), 3, 1)[..., None]  # (B,S,K,G,1)
+    return (out / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+def attention_core(q, k, v, *, causal, q_offset=0, kv_len=None):
+    """q: (B,S,H,D); k,v: (B,T,K,D). Grouped-query attention."""
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, D)
+    if use_pallas() and S > 1:
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.flash_attention(qg, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len)
+    elif use_pallas() and S == 1:
+        from repro.kernels.decode_attention import ops as da_ops
+
+        out = da_ops.decode_attention(qg, k, v, q_offset=q_offset, kv_len=kv_len, causal=causal)
+    elif S == 1:
+        out = _attend_single_token(qg, k, v, kv_len=kv_len)
+    else:
+        out = _attend_chunked(qg, k, v, q_offset=q_offset, causal=causal, kv_len=kv_len)
+    return out.reshape(B, S, H, D)
+
+
+# ---------------------------------------------------------------------------
+# Full attention layer (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg, stack=()) -> dict[str, Spec]:
+    st = tuple("layers" for _ in stack)
+    D, H, K, HD = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    sp = {
+        "wq": Spec(stack + (D, H, HD), st + ("embed", "heads", None)),
+        "wk": Spec(stack + (D, K, HD), st + ("embed", "kv_heads", None)),
+        "wv": Spec(stack + (D, K, HD), st + ("embed", "kv_heads", None)),
+        "wo": Spec(stack + (H, HD, D), st + ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        sp["bq"] = Spec(stack + (H, HD), st + ("heads", None), "zeros")
+        sp["bk"] = Spec(stack + (K, HD), st + ("kv_heads", None), "zeros")
+        sp["bv"] = Spec(stack + (K, HD), st + ("kv_heads", None), "zeros")
+    if cfg.qk_norm:
+        sp["q_norm"] = Spec(stack + (HD,), st + (None,), "ones")
+        sp["k_norm"] = Spec(stack + (HD,), st + (None,), "ones")
+    return sp
+
+
+def _project_qkv(p, x, cfg, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.pos == "rope" and positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def self_attention(p, x, cfg, *, positions, causal=True):
+    """Full-sequence self attention (train / prefill). Returns (out, (k, v)).
+
+    Sharding: Q stays sequence-sharded (Megatron-SP style); K/V are gathered
+    to full sequence once per layer (small relative to score traffic).
+    """
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    q = constrain(q, "batch", "act_seq", None, None)
+    k = constrain(k, "batch", None, None, None)
+    v = constrain(v, "batch", None, None, None)
+    out = attention_core(q, k, v, causal=causal)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, (k, v)
+
+
+def decode_self_attention(p, x, cfg, *, cache_k, cache_v, pos):
+    """One-token self attention against a cache. x: (B, 1, D); pos: scalar."""
+    q, k, v = _project_qkv(p, x, cfg, jnp.asarray(pos)[None])
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    out = attention_core(q, ck, cv, causal=False, kv_len=pos + 1)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, (ck, cv)
+
+
+def cross_attention_specs(cfg, stack=()) -> dict[str, Spec]:
+    return attn_specs(cfg, stack)
+
+
+def cross_attention(p, x, enc_kv, cfg):
+    """x: (B,S,D); enc_kv: (k, v) each (B,T,K,HD) precomputed from encoder."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    k, v = enc_kv
+    out = attention_core(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def encode_cross_kv(p, enc_out, cfg):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache quantisation (beyond-paper serving feature)
+# ---------------------------------------------------------------------------
+
+def kv_quantize(x):
+    """Symmetric per-(token, head) int8 over head_dim. x: (..., D).
+    Returns (int8 values, bf16 scales (..., 1))."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / jnp.maximum(s, 1e-8)), -127, 127).astype(jnp.int8)
+    return q, s.astype(jnp.bfloat16)
+
+
+def kv_dequantize(q, s):
+    return q.astype(jnp.bfloat16) * s
+
+
+def decode_self_attention_q8(p, x, cfg, *, cache_k, k_scale, cache_v, v_scale, pos):
+    """One-token self attention against an int8 cache: the new token's K/V
+    quantise into the cache; attention reads the dequantised view (the int8
+    stream halves HBM read traffic; the dequant fuses into the dot on TPU)."""
+    q, k, v = _project_qkv(p, x, cfg, jnp.asarray(pos)[None])
+    kq, ks = kv_quantize(k)
+    vq, vs = kv_quantize(v)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, kq, pos, axis=1)
+    cks = jax.lax.dynamic_update_slice_in_dim(k_scale, ks, pos, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, vq, pos, axis=1)
+    cvs = jax.lax.dynamic_update_slice_in_dim(v_scale, vs, pos, axis=1)
+    out = attention_core(q, kv_dequantize(ck, cks), kv_dequantize(cv, cvs), causal=False, kv_len=pos + 1)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, (ck, cks, cv, cvs)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg, stack=(), d_ff=None) -> dict[str, Spec]:
+    st = tuple("layers" for _ in stack)
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "swiglu":
+        return {
+            "wg": Spec(stack + (D, F), st + ("embed", "ff")),
+            "wu": Spec(stack + (D, F), st + ("embed", "ff")),
+            "wd": Spec(stack + (F, D), st + ("ff", "embed")),
+        }
+    return {
+        "w1": Spec(stack + (D, F), st + ("embed", "ff")),
+        "b1": Spec(stack + (F,), st + ("ff",), "zeros"),
+        "w2": Spec(stack + (F, D), st + ("ff", "embed")),
+        "b2": Spec(stack + (D,), st + (None,), "zeros"),
+    }
+
+
+def mlp(p, x, cfg):
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+        h = constrain(h, "batch", "act_seq", "ff")
+        return h @ p["wd"]
+    h = jax.nn.gelu(x @ p["w1"] + p["b1"])
+    h = constrain(h, "batch", "act_seq", "ff")
+    return h @ p["w2"] + p["b2"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_specs(cfg) -> dict[str, Spec]:
+    V, D = cfg.padded_vocab, cfg.d_model
+    sp = {"embedding": Spec((V, D), ("vocab", "embed"), "normal", 0.02)}
+    if not cfg.tie_embeddings:
+        sp["unembed"] = Spec((D, V), ("embed", "vocab"))
+    return sp
+
+
+def embed(params, tokens, cfg):
+    # params arrive pre-cast to the compute dtype (lm.forward / step builders)
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def unembed(params, x, cfg):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embedding"].astype(x.dtype))
+    return jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+
+
+def ce_loss(logits, labels, vocab_size, mask=None, reduce="mean"):
+    """Cross-entropy with padded-vocab masking. logits: (..., Vp)."""
+    vp = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if vp > vocab_size:
+        pad = jnp.arange(vp) >= vocab_size
+        logits = jnp.where(pad, -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        nll = nll * mask
+    if reduce == "sum":
+        return nll.sum()
+    denom = mask.sum() if mask is not None else nll.size
+    return nll.sum() / jnp.maximum(denom, 1.0)
+
+
+def chunked_ce_loss(embed_params, x, labels, cfg, chunk: int = 1024):
+    """CE over the full vocab without materialising (B, S, V) logits.
+
+    Scans over sequence chunks; the per-chunk logits are rematerialised in the
+    backward pass (jax.checkpoint), so live memory is (B, chunk, V_shard).
+    """
+    B, S, D = x.shape
+    if S % chunk != 0:
+        chunk = S  # single shot for irregular smoke shapes
+    nc = S // chunk
+    xc = jnp.swapaxes(x.reshape(B, nc, chunk, D), 0, 1)
+    lc = jnp.swapaxes(labels.reshape(B, nc, chunk), 0, 1)
+
+    def body(tot, xs):
+        xcb, lcb = xs
+        logits = unembed(embed_params, xcb, cfg)
+        return tot + ce_loss(logits, lcb, cfg.vocab_size, reduce="sum"), None
+
+    tot, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros((), jnp.float32), (xc, lc))
+    return tot / (B * S)

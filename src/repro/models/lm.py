@@ -1,0 +1,195 @@
+"""Unified model interface over the six assigned families.
+
+Every family module exposes:
+    param_specs(cfg, max_seq) -> {path: Spec}
+    forward(params, batch, cfg) -> (logits, aux)         # teacher-forced
+    prefill(params, batch, cfg) -> (logits_last, cache)
+    decode_step(params, batch, cache, cfg) -> (logits, cache)
+    cache_specs(cfg, batch, seq_len) -> {path: Spec}
+
+This module adds: init, abstract param trees, train/prefill/decode step
+builders, per-(arch x shape) ``input_specs`` (ShapeDtypeStruct stand-ins, the
+dry-run contract), and analytic parameter/FLOP accounting for the roofline.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import dense, encdec, hybrid, mamba2, moe, vlm
+from repro.models import layers as L
+from repro.models import params as prm
+from repro.optim import adamw as optim
+
+FAMILIES = {
+    "dense": dense,
+    "moe": moe,
+    "ssm": mamba2,
+    "hybrid": hybrid,
+    "encdec": encdec,
+    "vlm": vlm,
+}
+
+
+def module(cfg: ModelConfig):
+    return FAMILIES[cfg.family]
+
+
+def param_specs(cfg: ModelConfig, max_seq: int = 0) -> dict[str, prm.Spec]:
+    return module(cfg).param_specs(cfg, max_seq=max_seq)
+
+
+def init(rng, cfg: ModelConfig, max_seq: int = 0, dtype=jnp.float32) -> prm.Params:
+    return prm.init_params(rng, param_specs(cfg, max_seq), dtype)
+
+
+def param_count(cfg: ModelConfig, max_seq: int = 0) -> int:
+    return prm.param_count(param_specs(cfg, max_seq))
+
+
+def active_param_count(cfg: ModelConfig, max_seq: int = 0) -> int:
+    """Params touched per token (MoE: only top_k of num_experts routed)."""
+    specs = param_specs(cfg, max_seq)
+    total = 0
+    for path, s in specs.items():
+        n = int(np.prod(s.shape))
+        if cfg.family == "moe" and "/moe/w" in path:
+            n = int(n * cfg.top_k / max(s.shape[1], 1))  # (L, E, ...)
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def compute_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Teacher-forced forward with the mixed-precision cast applied (the
+    public entry point; family modules expect compute-dtype params)."""
+    return module(cfg).forward(prm.cast_tree(params, compute_dtype(cfg)), batch, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, loss_chunk: int = 1024):
+    inputs = {**batch, "tokens": batch["tokens"][:, :-1]}
+    labels = batch["tokens"][:, 1:]
+    cparams = prm.cast_tree(params, compute_dtype(cfg))
+    x, aux = module(cfg).hidden(cparams, inputs, cfg)
+    loss = L.chunked_ce_loss(prm.subtree(cparams, "embed"), x, labels, cfg, loss_chunk)
+    total = loss + aux.get("aux_loss", jnp.zeros((), jnp.float32))
+    return total, {"ce_loss": loss, **aux}
+
+
+def make_train_step(cfg: ModelConfig, opt: optim.Optimizer):
+    def train_step(params, opt_state, batch, step):
+        (total, metrics), grads = jax.value_and_grad(partial(loss_fn, cfg=cfg), has_aux=True)(params, batch)
+        updates, opt_state, gnorm = opt.update(grads, opt_state, params, step)
+        params = optim.apply_updates(params, updates)
+        metrics = {**metrics, "total_loss": total, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_grad_step(cfg: ModelConfig):
+    """Gradient-only step (used by the compression/accumulation paths)."""
+
+    def grad_step(params, batch):
+        (total, metrics), grads = jax.value_and_grad(partial(loss_fn, cfg=cfg), has_aux=True)(params, batch)
+        return grads, {**metrics, "total_loss": total}
+
+    return grad_step
+
+
+def make_prefill(cfg: ModelConfig):
+    def prefill(params, batch):
+        return module(cfg).prefill(prm.cast_tree(params, compute_dtype(cfg)), batch, cfg)
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, batch, cache):
+        return module(cfg).decode_step(prm.cast_tree(params, compute_dtype(cfg)), batch, cache, cfg)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Input specs — ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(d) for d in shape), dtype)
+
+
+def text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """VLM: patches live inside the assigned seq_len; text gets the rest."""
+    if cfg.family == "vlm":
+        return seq_len - cfg.num_patches
+    return seq_len
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {"tokens": _sds((B, text_len(cfg, S) + 1), jnp.int32)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": _sds((B, text_len(cfg, S)), jnp.int32)}
+    else:  # decode
+        specs = {"token": _sds((B,), jnp.int32), "pos": _sds((), jnp.int32)}
+    if cfg.family == "encdec" and shape.kind in ("train", "prefill"):
+        specs["frames"] = _sds((B, cfg.enc_len, cfg.enc_feat), jnp.bfloat16)
+    if cfg.family == "vlm" and shape.kind in ("train", "prefill"):
+        specs["patches"] = _sds((B, cfg.num_patches, cfg.patch_feat), jnp.bfloat16)
+    return specs
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, tuple]:
+    """Logical axes for each batch input (for in_shardings)."""
+    out = {}
+    for name, s in batch_specs(cfg, shape).items():
+        if name == "pos":
+            out[name] = ()
+        else:
+            out[name] = ("batch",) + (None,) * (len(s.shape) - 1)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, prm.Spec]:
+    return module(cfg).cache_specs(cfg, shape.global_batch, shape.seq_len)
+
+
+def cache_dtype(path: str, cfg: ModelConfig | None = None) -> Any:
+    if path in ("ssm",):
+        return jnp.float32
+    if cfg is not None and cfg.kv_quant == "int8" and path in ("k", "v"):
+        return jnp.int8
+    return jnp.bfloat16
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig):
+    return {p: _sds(s.shape, cache_dtype(p, cfg)) for p, s in cache_specs(cfg, shape).items()}
+
+
+def make_batch(rng, cfg: ModelConfig, shape: ShapeConfig) -> dict[str, jax.Array]:
+    """Materialised random batch (smoke tests / examples) matching batch_specs."""
+    specs = batch_specs(cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        rng, k = jax.random.split(rng)
+        if s.dtype == jnp.int32 and name != "pos":
+            out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab_size, jnp.int32)
+        elif name == "pos":
+            out[name] = jnp.asarray(shape.seq_len - 1, jnp.int32)
+        else:
+            out[name] = jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype)
+    return out

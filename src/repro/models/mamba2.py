@@ -1,0 +1,213 @@
+"""Mamba-2 (SSD, state-space duality) family — attention-free LM.
+
+The sequence mixer follows the chunked SSD algorithm of arXiv:2405.21060:
+within-chunk quadratic term + across-chunk state recurrence (lax.scan over
+chunks). The within-chunk compute is the kernel hot-spot
+(repro.kernels.ssd_scan provides the Pallas TPU kernel; this module uses the
+ops dispatcher, which defaults to the pure-XLA path).
+
+Decode is the O(1) recurrent form carrying (conv tail, SSM state) per layer —
+this is why mamba2-370m (and the zamba2 hybrid) are the two archs that run the
+long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.params import Spec, prefix, subtree
+
+
+def mixer_specs(cfg, stack=()) -> dict[str, Spec]:
+    st = tuple("layers" for _ in stack)
+    D, H, P, N, W = cfg.d_model, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.conv_width
+    return {
+        "wz": Spec(stack + (D, H, P), st + ("embed", "ssm_heads", None)),
+        "wx": Spec(stack + (D, H, P), st + ("embed", "ssm_heads", None)),
+        "wB": Spec(stack + (D, N), st + ("embed", None)),
+        "wC": Spec(stack + (D, N), st + ("embed", None)),
+        "wdt": Spec(stack + (D, H), st + ("embed", "ssm_heads")),
+        "dt_bias": Spec(stack + (H,), st + ("ssm_heads",), "zeros"),
+        "A_log": Spec(stack + (H,), st + ("ssm_heads",), "zeros"),
+        "Dskip": Spec(stack + (H,), st + ("ssm_heads",), "ones"),
+        # the depthwise conv runs SEPARATELY on x / B / C: concatenating the
+        # head-sharded x with the replicated B/C would force an all-gather of
+        # the whole x stream every layer (EXPERIMENTS.md §Perf cell A-4b)
+        "conv_wx": Spec(stack + (W, H, P), st + (None, "ssm_heads", None), "lecun"),
+        "conv_bx": Spec(stack + (H, P), st + ("ssm_heads", None), "zeros"),
+        "conv_wB": Spec(stack + (W, N), st + (None, None), "lecun"),
+        "conv_bB": Spec(stack + (N,), st + (None,), "zeros"),
+        "conv_wC": Spec(stack + (W, N), st + (None, None), "lecun"),
+        "conv_bC": Spec(stack + (N,), st + (None,), "zeros"),
+        # HEAD-GROUPED gated RMSNorm (per-head statistics over P): a full
+        # d_inner norm would all-gather the head-sharded y/z streams every
+        # layer (§Perf cell A-5); grouped norm is the standard TP variant.
+        "gate_norm": Spec(stack + (H, P), st + ("ssm_heads", None), "ones"),
+        "wo": Spec(stack + (H, P, D), st + ("ssm_heads", None, "embed")),
+    }
+
+
+def block_specs(cfg, n_layers) -> dict[str, Spec]:
+    st = (n_layers,)
+    sp = prefix(mixer_specs(cfg, stack=st), "mixer")
+    sp.update(prefix(L.norm_specs(cfg, stack=st), "norm"))
+    return sp
+
+
+def param_specs(cfg, max_seq: int = 0) -> dict[str, Spec]:
+    sp = {}
+    sp.update(prefix(L.embed_specs(cfg), "embed"))
+    sp.update(prefix(block_specs(cfg, cfg.num_layers), "blocks"))
+    sp.update(prefix(L.norm_specs(cfg), "final_norm"))
+    return sp
+
+
+def causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,...C); w: (W,...C); b: (...C,).
+    Channel dims may be multi-axis ((H,P) for x, (N,) for B/C) — the shift-sum
+    form preserves whatever sharding the channel axes carry."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0)) + ((0, 0),) * (x.ndim - 2))
+    S = x.shape[1]
+    out = sum(pad[:, i : i + S] * w[i] for i in range(W))
+    return out + b
+
+
+def conv_step(state, xnew, w, b):
+    """state: (B, W-1, ...C) previous raw inputs; xnew: (B, ...C)."""
+    full = jnp.concatenate([state, xnew[:, None]], axis=1)  # (B, W, ...C)
+    y = sum(full[:, i] * w[i] for i in range(w.shape[0]))
+    return y + b, full[:, 1:]
+
+
+def _project(p, xin, cfg):
+    z = jnp.einsum("bsd,dhp->bshp", xin, p["wz"])
+    xs = jnp.einsum("bsd,dhp->bshp", xin, p["wx"])
+    b = xin @ p["wB"]
+    c = xin @ p["wC"]
+    dt_raw = jnp.einsum("bsd,dh->bsh", xin, p["wdt"]) + p["dt_bias"]
+    return z, xs, b, c, dt_raw
+
+
+def mixer(p, x, cfg, *, collect_state=False):
+    """Full-sequence SSD mixer. x: (B,S,D)."""
+    Bb, S, D = x.shape
+    H, P, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    z, xs_raw, b_raw, c_raw, dt_raw = _project(p, x, cfg)
+    xs = jax.nn.silu(causal_conv(xs_raw, p["conv_wx"], p["conv_bx"]))  # (B,S,H,P)
+    b = jax.nn.silu(causal_conv(b_raw, p["conv_wB"], p["conv_bB"]))
+    c = jax.nn.silu(causal_conv(c_raw, p["conv_wC"], p["conv_bC"]))
+    dt = jax.nn.softplus(dt_raw)  # (B,S,H)
+
+    from repro.kernels.ssd_scan import ops as ssd_ops
+
+    y, final_state = ssd_ops.ssd(xs, dt, p["A_log"], b, c, chunk=cfg.ssm_chunk)
+    y = y + cfg_dskip(p) * xs
+    y = L.rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)  # per-head stats over P
+    out = jnp.einsum("bshp,hpd->bsd", y, p["wo"])
+    if collect_state:
+        W = cfg.conv_width
+        tails = (xs_raw[:, -(W - 1):], b_raw[:, -(W - 1):], c_raw[:, -(W - 1):])
+        return out, tails + (final_state,)
+    return out, None
+
+
+def cfg_dskip(p):
+    return p["Dskip"][None, None, :, None]
+
+
+def mixer_decode(p, x, cfg, *, conv_x, conv_b, conv_c, ssm_state, **_):
+    """One-step recurrence. x: (B,1,D); conv_x: (B,W-1,H,P); conv_b/c:
+    (B,W-1,N); ssm_state: (B,H,P,N)."""
+    Bb = x.shape[0]
+    H, P, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    z, xs, b, c, dt_raw = _project(p, x, cfg)
+    yx, conv_x = conv_step(conv_x, xs[:, 0], p["conv_wx"], p["conv_bx"])
+    yb, conv_b = conv_step(conv_b, b[:, 0], p["conv_wB"], p["conv_bB"])
+    yc, conv_c = conv_step(conv_c, c[:, 0], p["conv_wC"], p["conv_bC"])
+    xs1 = jax.nn.silu(yx)  # (B,H,P)
+    b1 = jax.nn.silu(yb)
+    c1 = jax.nn.silu(yc)
+    dt = jax.nn.softplus(dt_raw[:, 0])  # (B,H)
+
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,)
+    decay = jnp.exp(dt.astype(jnp.float32) * a)  # (B,H)
+    update = jnp.einsum("bh,bn,bhp->bhpn", dt.astype(jnp.float32), b1.astype(jnp.float32), xs1.astype(jnp.float32))
+    ssm_state = ssm_state * decay[:, :, None, None] + update
+    yh = jnp.einsum("bn,bhpn->bhp", c1.astype(jnp.float32), ssm_state).astype(x.dtype)
+    yh = yh + p["Dskip"][None, :, None] * xs1
+    yh = L.rms_norm(yh[:, None] * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)  # (B,1,H,P)
+    out = jnp.einsum("bshp,hpd->bsd", yh, p["wo"])
+    return out, (conv_x, conv_b, conv_c, ssm_state)
+
+
+def block(lp, x, cfg, *, collect_state=False):
+    h, st = mixer(subtree(lp, "mixer"), L.apply_norm(lp, "norm", x, cfg), cfg, collect_state=collect_state)
+    return constrain(x + h, "batch", "act_seq", None), st
+
+
+def hidden(params, batch, cfg):
+    tokens = batch["tokens"]
+    x = L.embed(subtree(params, "embed"), tokens, cfg)
+    x = constrain(x, "batch", "act_seq", None)
+    blocks = subtree(params, "blocks")
+
+    def body(carry, lp):
+        y, _ = block(lp, carry, cfg)
+        return y, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, blocks)
+    x = L.apply_norm(params, "final_norm", x, cfg)
+    return x, {}
+
+
+def forward(params, batch, cfg):
+    x, aux = hidden(params, batch, cfg)
+    return L.unembed(subtree(params, "embed"), x, cfg), aux
+
+
+def prefill(params, batch, cfg):
+    tokens = batch["tokens"]
+    x = L.embed(subtree(params, "embed"), tokens, cfg)
+    blocks = subtree(params, "blocks")
+
+    def body(carry, lp):
+        y, st = block(lp, carry, cfg, collect_state=True)
+        return y, st
+
+    x, (cx, cb, cc, states) = jax.lax.scan(jax.checkpoint(body), x, blocks)
+    x = L.apply_norm(params, "final_norm", x, cfg)
+    logits = L.unembed(subtree(params, "embed"), x[:, -1:], cfg)
+    return logits, {"conv_x": cx, "conv_b": cb, "conv_c": cc, "ssm": states.astype(jnp.float32)}
+
+
+def decode_step(params, batch, cache, cfg):
+    token = batch["token"]
+    x = L.embed(subtree(params, "embed"), token[:, None], cfg)
+    blocks = subtree(params, "blocks")
+
+    def body(carry, xs):
+        lp, cx, cb, cc, sst = xs
+        h, (cx, cb, cc, sst) = mixer_decode(
+            subtree(lp, "mixer"), L.apply_norm(lp, "norm", carry, cfg), cfg,
+            conv_x=cx, conv_b=cb, conv_c=cc, ssm_state=sst,
+        )
+        return carry + h, (cx, cb, cc, sst)
+
+    x, (nx, nb, nc_, ns) = jax.lax.scan(body, x, (blocks, cache["conv_x"], cache["conv_b"], cache["conv_c"], cache["ssm"]))
+    x = L.apply_norm(params, "final_norm", x, cfg)
+    logits = L.unembed(subtree(params, "embed"), x, cfg)
+    return logits, {"conv_x": nx, "conv_b": nb, "conv_c": nc_, "ssm": ns}
+
+
+def cache_specs(cfg, batch: int, seq_len: int) -> dict[str, Spec]:
+    # O(1) state — seq_len only documents the context the state summarises.
+    H, P, N, W = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.conv_width
+    return {
+        "conv_x": Spec((cfg.num_layers, batch, W - 1, H, P), ("layers", "batch", None, "ssm_heads", None), "zeros"),
+        "conv_b": Spec((cfg.num_layers, batch, W - 1, N), ("layers", "batch", None, None), "zeros"),
+        "conv_c": Spec((cfg.num_layers, batch, W - 1, N), ("layers", "batch", None, None), "zeros"),
+        "ssm": Spec((cfg.num_layers, batch, H, P, N), ("layers", "batch", "ssm_heads", None, None), "zeros"),
+    }

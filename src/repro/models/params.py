@@ -1,0 +1,96 @@
+"""Parameter specs: one flat dict of path -> Spec per model.
+
+A Spec carries the array shape, the *logical* axis names (used by the sharding
+resolver in ``repro.distributed.sharding``), and the initializer. Models build
+their full parameter tree from specs, so the dry-run can create
+ShapeDtypeStruct stand-ins without allocating anything.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Spec(NamedTuple):
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis names, len == len(shape)
+    init: str = "lecun"  # lecun | normal | zeros | ones
+    scale: float = 1.0
+
+    def check(self, path: str = "?") -> "Spec":
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"{path}: shape {self.shape} vs axes {self.axes}")
+        return self
+
+
+ParamSpecs = dict[str, Spec]
+Params = dict[str, jax.Array]
+
+
+def _fan_in(spec: Spec) -> int:
+    # For stacked layer params the leading "layers"/"experts" axes are not fan-in.
+    dims = [d for d, a in zip(spec.shape, spec.axes) if a not in ("layers", "experts", "groups", "apps")]
+    if len(dims) >= 2:
+        return int(np.prod(dims[:-1]))
+    return max(dims[0] if dims else 1, 1)
+
+
+def init_one(key: jax.Array, spec: Spec, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "normal":
+        return (spec.scale * jax.random.normal(key, spec.shape)).astype(dtype)
+    if spec.init == "lecun":
+        std = spec.scale / math.sqrt(_fan_in(spec))
+        return (std * jax.random.normal(key, spec.shape)).astype(dtype)
+    raise ValueError(spec.init)
+
+
+def init_params(key: jax.Array, specs: ParamSpecs, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, len(specs))
+    return {
+        path: init_one(k, spec.check(path), dtype)
+        for k, (path, spec) in zip(keys, sorted(specs.items()))
+    }
+
+
+def abstract_params(specs: ParamSpecs, dtype=jnp.float32) -> dict[str, jax.ShapeDtypeStruct]:
+    return {p: jax.ShapeDtypeStruct(s.shape, dtype) for p, s in specs.items()}
+
+
+def axes_tree(specs: ParamSpecs) -> dict[str, tuple[str | None, ...]]:
+    return {p: s.axes for p, s in specs.items()}
+
+
+def param_count(specs: ParamSpecs) -> int:
+    return int(sum(np.prod(s.shape) for s in specs.values()))
+
+
+def param_bytes(specs: ParamSpecs, bytes_per: int = 4) -> int:
+    return param_count(specs) * bytes_per
+
+
+def cast_tree(tree, dtype=jnp.bfloat16):
+    """Mixed precision: cast float params to the compute dtype at use-sites.
+
+    Master copies stay fp32 in the optimizer; gradients flow back in fp32
+    through the (differentiable) cast.
+    """
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a, tree
+    )
+
+
+def prefix(d: ParamSpecs, pre: str) -> ParamSpecs:
+    return {f"{pre}/{k}": v for k, v in d.items()}
+
+
+def subtree(params: Params, pre: str) -> Params:
+    pre = pre + "/"
+    return {k[len(pre):]: v for k, v in params.items() if k.startswith(pre)}

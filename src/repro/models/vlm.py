@@ -1,0 +1,55 @@
+"""InternVL2-style VLM: InternLM2 decoder backbone + stub ViT frontend.
+
+Per the assignment, the vision tower is a STUB: ``input_specs`` supplies
+precomputed patch embeddings (B, num_patches, patch_feat); a linear
+projector (the real model's MLP projector) lifts them to d_model and they are
+prepended to the token sequence. The decode path is identical to the dense
+family (the KV cache spans patches + text inside the assigned seq_len).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import dense, layers as L
+from repro.models.params import Spec, prefix, subtree
+
+
+def param_specs(cfg, max_seq: int = 0) -> dict[str, Spec]:
+    sp = dense.param_specs(cfg, max_seq)
+    sp["projector/w"] = Spec((cfg.patch_feat, cfg.d_model), (None, "embed"))
+    sp["projector/b"] = Spec((cfg.d_model,), (None,), "zeros")
+    return sp
+
+
+def _embed_multimodal(params, batch, cfg):
+    tokens, patches = batch["tokens"], batch["patches"]
+    tx = L.embed(subtree(params, "embed"), tokens, cfg)
+    px = patches.astype(tx.dtype) @ params["projector/w"].astype(tx.dtype) + params["projector/b"]
+    return jnp.concatenate([px, tx], axis=1)
+
+
+def hidden(params, batch, cfg):
+    x = _embed_multimodal(params, batch, cfg)
+    x = constrain(x, "batch", "act_seq", None)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, _ = dense.backbone(params, x, cfg, positions=positions)
+    # only the text positions carry labels (patch positions are inputs only)
+    return x[:, cfg.num_patches :], {}
+
+
+def forward(params, batch, cfg):
+    x, aux = hidden(params, batch, cfg)
+    return L.unembed(subtree(params, "embed"), x, cfg), aux
+
+
+def prefill(params, batch, cfg):
+    x = _embed_multimodal(params, batch, cfg)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, kvs = dense.backbone(params, x, cfg, positions=positions, collect_kv=True)
+    logits = L.unembed(subtree(params, "embed"), x[:, -1:], cfg)
+    return logits, dense.build_cache(kvs, cfg)
+
+
+decode_step = dense.decode_step  # cache-only; identical to dense
+cache_specs = dense.cache_specs

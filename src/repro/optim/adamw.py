@@ -1,0 +1,87 @@
+"""AdamW + global-norm clipping + schedules, pytree-functional (no optax).
+
+Optimizer state mirrors the parameter pytree (m, v in fp32), so the sharding
+resolver shards it exactly like the parameters (ZeRO-style when params are
+FSDP-sharded on the data axis).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    m: dict
+    v: dict
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (updates, state)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def constant_schedule(lr_val: float):
+    return lambda step: jnp.asarray(lr_val, jnp.float32)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+def adamw(
+    lr: Callable | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    clip_norm: float = 1.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params) -> OptState:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(m=zeros, v=jax.tree.map(jnp.copy, zeros))
+
+    def update(grads, state: OptState, params, step):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        stepf = jnp.asarray(step, jnp.float32) + 1.0
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state.m, grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, state.v, grads)
+        bc1 = 1 - b1**stepf
+        bc2 = 1 - b2**stepf
+        lr_t = lr_fn(step)
+
+        def upd(mm, vv, p):
+            mhat = mm / bc1
+            vhat = vv / bc2
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype)
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, OptState(m=m, v=v), gnorm
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype), params, updates)

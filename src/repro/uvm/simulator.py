@@ -1,0 +1,291 @@
+"""Trace-driven UVM device-memory simulator (the GPGPU-Sim replacement).
+
+Pure-JAX ``lax.scan`` over the access stream with fixed-size per-block state
+arrays (residency, LRU clocks, chain intervals, Belady next-use, learned
+prediction frequency). Migration/eviction is at 64KB basic-block granularity
+— the CUDA runtime's prefetch unit — and "pages thrashed" are reported as
+blocks x 16 pages, matching the granularity of the paper's counters.
+
+Eviction policies (Section II-C / IV-D):
+    lru      — least-recently-used (CUDA driver default)
+    random   — uniform random resident block
+    belady   — MIN oracle (needs the precomputed next-use stream)
+    hpe      — page-set chain (new/middle/old by fault interval) + LRU inside
+    learned  — page-set chain + prediction-frequency table (the paper's engine)
+
+Prefetchers (Section II-B):
+    demand   — migrate only the faulted block
+    tree     — NVIDIA tree-based neighbourhood prefetcher: after a migration,
+               any [2,4,8,16,32]-block node above 50% valid occupancy gets its
+               remaining blocks migrated
+    none     — alias of demand; the learned prefetcher stages its blocks via
+               :func:`apply_prefetch` between scan segments (async analogue)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.uvm.trace import PAGES_PER_BLOCK, Trace
+
+CHUNK_BLOCKS = 32  # 2MB chunk = 32 x 64KB blocks
+INTERVAL = 64  # page-set-chain interval, in faults (same as HPE)
+NO_USE = np.int32(2**31 - 1)
+
+POLICIES = ("lru", "random", "belady", "hpe", "learned")
+PREFETCHERS = ("demand", "tree", "none")
+
+
+class SimState(NamedTuple):
+    resident: jax.Array  # bool (NB,)
+    pinned: jax.Array  # bool (NB,) zero-copy blocks (never migrated)
+    evicted_once: jax.Array  # bool (NB,)
+    last_access: jax.Array  # int32 (NB,)
+    last_interval: jax.Array  # int32 (NB,)
+    next_use: jax.Array  # int32 (NB,)
+    freq: jax.Array  # int32 (NB,) prediction frequency (-1 = never predicted)
+    occupancy: jax.Array  # int32
+    fault_count: jax.Array  # int32
+    thrash_events: jax.Array  # int32 (block-granular)
+    migrations: jax.Array  # int32 blocks migrated
+    faults: jax.Array  # int32 far-fault events
+    zero_copy: jax.Array  # int32 remote accesses to pinned blocks
+    time: jax.Array  # int32
+    key: jax.Array
+
+
+def init_state(n_blocks: int, seed: int = 0) -> SimState:
+    z = jnp.zeros((), jnp.int32)
+    return SimState(
+        resident=jnp.zeros(n_blocks, bool),
+        pinned=jnp.zeros(n_blocks, bool),
+        evicted_once=jnp.zeros(n_blocks, bool),
+        last_access=jnp.full(n_blocks, -1, jnp.int32),
+        last_interval=jnp.full(n_blocks, -1, jnp.int32),
+        next_use=jnp.full(n_blocks, NO_USE, jnp.int32),
+        freq=jnp.full(n_blocks, -1, jnp.int32),
+        occupancy=z,
+        fault_count=z,
+        thrash_events=z,
+        migrations=z,
+        faults=z,
+        zero_copy=z,
+        time=z,
+        key=jax.random.key(seed),
+    )
+
+
+def precompute_next_use(blocks: np.ndarray, n_blocks: int) -> np.ndarray:
+    """next_use[t] = index of the next access to blocks[t] after t (else INF)."""
+    nxt = np.full(len(blocks), NO_USE, np.int64)
+    last = np.full(n_blocks, NO_USE, np.int64)
+    for t in range(len(blocks) - 1, -1, -1):
+        nxt[t] = last[blocks[t]]
+        last[blocks[t]] = t
+    return np.minimum(nxt, NO_USE).astype(np.int32)
+
+
+def _lex_argmin(cand, *keys):
+    """Index of the lexicographically-smallest key tuple among candidates."""
+    for k in keys:
+        kk = jnp.where(cand, k, jnp.iinfo(jnp.int32).max)
+        cand = cand & (kk == kk.min())
+    return jnp.argmax(cand)
+
+
+def _victim(state: SimState, policy: str, interval_now, evictable):
+    """Eviction victim index under the given policy (exact int32 lexicographic)."""
+    la = state.last_access
+    if policy == "lru":
+        keys = (la,)
+    elif policy == "random":
+        keys = (jax.random.randint(jax.random.fold_in(state.key, state.time), la.shape, 0, 1 << 30, jnp.int32),)
+    elif policy == "belady":
+        keys = (-state.next_use,)  # farthest next use evicted first
+    elif policy == "hpe":
+        age = jnp.clip(interval_now - state.last_interval, 0, 2)  # 0=new..2=old
+        keys = (-age, la)
+    elif policy == "learned":
+        age = jnp.clip(interval_now - state.last_interval, 0, 2)
+        keys = (-age, state.freq, la)
+    else:
+        raise ValueError(policy)
+    return _lex_argmin(evictable, *keys)
+
+
+def _evict_until_fit(state: SimState, capacity: int, policy: str, protect, interval_now):
+    """Evict lowest-priority resident blocks until occupancy <= capacity."""
+
+    def cond(c):
+        resident, evicted_once, occ = c
+        any_evictable = (resident & ~state.pinned & ~protect).any()
+        return (occ > capacity) & any_evictable
+
+    def body(c):
+        resident, evicted_once, occ = c
+        evictable = resident & ~state.pinned & ~protect
+        victim = _victim(state._replace(resident=resident, evicted_once=evicted_once), policy, interval_now, evictable)
+        resident = resident.at[victim].set(False)
+        evicted_once = evicted_once.at[victim].set(True)
+        return resident, evicted_once, occ - 1
+
+    resident, evicted_once, occ = jax.lax.while_loop(
+        cond, body, (state.resident, state.evicted_once, state.occupancy)
+    )
+    return state._replace(resident=resident, evicted_once=evicted_once, occupancy=occ)
+
+
+def _tree_mask(resident, blk, valid, n_blocks: int):
+    """Blocks to prefetch per the tree-based neighbourhood prefetcher."""
+    mask = jnp.zeros(n_blocks, bool)
+    for size in (2, 4, 8, 16, CHUNK_BLOCKS):
+        node = blk // size
+        occ = resident.reshape(-1, size).sum(axis=1)[node]
+        trigger = occ * 2 > size  # >50% of node valid
+        in_node = (jnp.arange(n_blocks) // size) == node
+        mask = mask | (in_node & trigger)
+    return mask & valid & ~resident
+
+
+def make_step(n_blocks: int, capacity: int, policy: str, prefetch: str, n_valid: int):
+    valid = jnp.arange(n_blocks) < n_valid
+
+    def step(state: SimState, inp):
+        blk, nxt = inp
+        t = state.time
+        is_pinned = state.pinned[blk]
+        fault = (~state.resident[blk]) & (~is_pinned)
+
+        # demand block migrates on fault
+        mig = jnp.zeros(n_blocks, bool).at[blk].set(fault)
+        resident1 = state.resident | mig
+        if prefetch == "tree":
+            pf = _tree_mask(resident1, blk, valid, n_blocks) & fault
+            mig = mig | pf
+        newly = mig & ~state.resident
+        n_new = newly.sum(dtype=jnp.int32)
+        thrash = (newly & state.evicted_once).sum(dtype=jnp.int32)
+
+        interval_now = state.fault_count // INTERVAL
+        state2 = state._replace(
+            resident=state.resident | newly,
+            occupancy=state.occupancy + n_new,
+            fault_count=state.fault_count + fault.astype(jnp.int32),
+            thrash_events=state.thrash_events + thrash,
+            migrations=state.migrations + n_new,
+            faults=state.faults + fault.astype(jnp.int32),
+            zero_copy=state.zero_copy + is_pinned.astype(jnp.int32),
+            # prefetched blocks count as freshly used by the DRIVER's LRU
+            # (CUDA treats migrated pages as recently touched — otherwise LRU
+            # instantly re-evicts them and the prefetcher ping-pongs)
+            last_access=jnp.where(newly | (jnp.arange(n_blocks) == blk), t, state.last_access),
+            # ...but HPE's page-set chain only sees DEMAND touches: its
+            # counters are not updated by prefetches (Section III-B — this is
+            # precisely why Tree.+HPE collapses in Table II). The paper's own
+            # engine ("learned") updates the chain with both (Section IV-D).
+            last_interval=jnp.where(
+                (newly if policy == "learned" else jnp.zeros_like(newly)) | (jnp.arange(n_blocks) == blk),
+                interval_now,
+                state.last_interval,
+            ),
+            next_use=state.next_use.at[blk].set(nxt),
+        )
+        protect = jnp.zeros(n_blocks, bool).at[blk].set(True)
+        state3 = _evict_until_fit(state2, capacity, policy, protect, interval_now)
+        out = {
+            "fault": fault,
+            "thrash": thrash,
+            "was_evicted": state.evicted_once[blk],
+        }
+        return state3._replace(time=t + 1), out
+
+    return step
+
+
+class SimResult(NamedTuple):
+    state: SimState
+    fault: np.ndarray
+    thrash: np.ndarray
+    was_evicted: np.ndarray
+
+    @property
+    def pages_thrashed(self) -> int:
+        return int(self.state.thrash_events) * PAGES_PER_BLOCK
+
+    @property
+    def stats(self) -> dict:
+        s = self.state
+        return {
+            "pages_thrashed": self.pages_thrashed,
+            "faults": int(s.faults),
+            "migrated_blocks": int(s.migrations),
+            "zero_copy": int(s.zero_copy),
+            "occupancy": int(s.occupancy),
+        }
+
+
+def capacity_for(n_blocks: int, oversubscription: float) -> int:
+    """125% oversubscription => device memory = working set / 1.25."""
+    return max(int(np.floor(n_blocks / oversubscription)), 1)
+
+
+@partial(jax.jit, static_argnames=("n_blocks", "capacity", "policy", "prefetch", "n_valid"))
+def _run_segment(state, blocks, next_use, n_blocks, capacity, policy, prefetch, n_valid):
+    step = make_step(n_blocks, capacity, policy, prefetch, n_valid)
+    return jax.lax.scan(step, state, (blocks, next_use))
+
+
+def pad_blocks(n_valid: int) -> int:
+    return int(np.ceil(n_valid / CHUNK_BLOCKS) * CHUNK_BLOCKS)
+
+
+def run(
+    trace: Trace,
+    *,
+    policy: str = "lru",
+    prefetch: str = "tree",
+    oversubscription: float = 1.25,
+    state: SimState | None = None,
+    seed: int = 0,
+) -> SimResult:
+    """Run a full trace under (policy x prefetch) at an oversubscription level."""
+    assert policy in POLICIES and prefetch in PREFETCHERS
+    blocks = trace.block.astype(np.int32)
+    nb = pad_blocks(trace.n_blocks)
+    cap = capacity_for(trace.n_blocks, oversubscription)
+    nxt = precompute_next_use(blocks, nb)
+    st = state if state is not None else init_state(nb, seed)
+    st, outs = _run_segment(
+        st, jnp.asarray(blocks), jnp.asarray(nxt),
+        n_blocks=nb, capacity=cap, policy=policy,
+        prefetch="demand" if prefetch == "none" else prefetch,
+        n_valid=trace.n_blocks,
+    )
+    st = st._replace(key=jax.random.key_data(st.key))  # numpy-safe
+    return SimResult(
+        state=jax.tree.map(np.asarray, st),
+        fault=np.asarray(outs["fault"]),
+        thrash=np.asarray(outs["thrash"]),
+        was_evicted=np.asarray(outs["was_evicted"]),
+    )
+
+
+def apply_prefetch(state: SimState, blocks_mask, *, capacity: int, policy: str = "learned") -> SimState:
+    """Stage externally-predicted prefetches (the learned runtime's async path)."""
+    newly = jnp.asarray(blocks_mask) & ~state.resident & ~state.pinned
+    n_new = newly.sum(dtype=jnp.int32)
+    thrash = (newly & state.evicted_once).sum(dtype=jnp.int32)
+    interval_now = state.fault_count // INTERVAL
+    st = state._replace(
+        resident=state.resident | newly,
+        occupancy=state.occupancy + n_new,
+        thrash_events=state.thrash_events + thrash,
+        migrations=state.migrations + n_new,
+        last_interval=jnp.where(newly, interval_now, state.last_interval),
+        last_access=jnp.where(newly, state.time, state.last_access),
+    )
+    return _evict_until_fit(st, capacity, policy, jnp.zeros_like(newly), interval_now)

@@ -1,0 +1,37 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import ops
+from repro.kernels.decode_attention.ref import decode_ref
+
+SWEEP = [
+    (2, 2, 2, 64, 512, 300, jnp.float32),
+    (1, 4, 1, 128, 1024, 1000, jnp.float32),
+    (4, 1, 8, 64, 512, None, jnp.float32),
+    (2, 2, 2, 64, 512, 77, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,KV,G,D,T,kv_len,dtype", SWEEP)
+def test_decode_attention_sweep(B, KV, G, D, T, kv_len, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, KV, G, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, T, KV, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, T, KV, D)).astype(dtype)
+    out = ops.decode_attention(q, k, v, kv_len=kv_len, interpret=True)
+    ref = decode_ref(q, k, v, kv_len=kv_len)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_model_layout_passthrough():
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (2, 1, 2, 2, 64))  # (B,1,K,G,D) model layout
+    k = jax.random.normal(ks[1], (2, 256, 2, 64))
+    v = jax.random.normal(ks[2], (2, 256, 2, 64))
+    out = ops.decode_attention(q, k, v, kv_len=100, interpret=True)
+    assert out.shape == (2, 1, 2, 2, 64)
+    ref = decode_ref(q, k, v, kv_len=100)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref), atol=1e-5, rtol=1e-5)

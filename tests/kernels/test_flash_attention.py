@@ -1,0 +1,42 @@
+"""Pallas flash-attention kernel vs pure-jnp oracle: shape/dtype sweep in
+interpret mode (CPU executes the kernel body)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import kernel as K
+from repro.kernels.flash_attention.ref import attention_ref
+
+SWEEP = [
+    # B, S, KV, G, D, T, causal, kv_len, dtype
+    (2, 128, 2, 2, 64, 128, True, None, jnp.float32),
+    (1, 128, 1, 4, 128, 256, False, 200, jnp.float32),
+    (2, 256, 4, 1, 64, 256, True, 180, jnp.float32),
+    (1, 128, 2, 2, 64, 128, True, None, jnp.bfloat16),
+    (1, 256, 1, 1, 128, 512, True, None, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("B,S,KV,G,D,T,causal,kv_len,dtype", SWEEP)
+def test_flash_attention_sweep(B, S, KV, G, D, T, causal, kv_len, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, S, KV, G, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, T, KV, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, T, KV, D)).astype(dtype)
+    out = K.flash_attention(q, k, v, causal=causal, kv_len=kv_len, bq=128, bk=128, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, kv_len=kv_len)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_attention_q_offset():
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (1, 128, 1, 2, 64))
+    k = jax.random.normal(ks[1], (1, 256, 1, 64))
+    v = jax.random.normal(ks[2], (1, 256, 1, 64))
+    out = K.flash_attention(q, k, v, causal=True, q_offset=64, bq=128, bk=128, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, q_offset=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)

@@ -1,0 +1,46 @@
+"""The dry-run machinery end-to-end in a subprocess with 8 placeholder
+devices (the full 512-device sweep runs via `python -m repro.launch.dryrun`;
+its committed results live in experiments/dryrun/)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+@pytest.mark.parametrize("arch,shape", [("qwen2-0.5b", "decode_32k"), ("mamba2-370m", "long_500k")])
+def test_dryrun_small_mesh(arch, shape, tmp_path):
+    env = dict(os.environ, REPRO_DRYRUN_DEVICES="8", PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch, "--shape", shape,
+         "--mesh", "4x2", "--out", str(tmp_path), "--force"],
+        env=env, capture_output=True, text=True, timeout=560,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads((tmp_path / f"{arch}__{shape}__4x2.json").read_text())
+    assert rec["status"] == "ok", rec
+    rl = rec["roofline"]
+    assert rl["compute_s"] > 0 and rl["memory_s"] > 0
+    assert rl["bottleneck"] in ("compute", "memory", "collective")
+
+
+def test_committed_sweep_is_complete():
+    """Every (arch x shape) cell has a single-pod AND multi-pod record, and
+    non-skipped cells compiled."""
+    d = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+    if not d.exists():
+        pytest.skip("sweep not yet generated")
+    from repro.configs import ARCHS, SHAPES, cell_supported, get_config
+
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                f = d / f"{arch}__{shape}__{mesh}.json"
+                assert f.exists(), f"{f} missing"
+                rec = json.loads(f.read_text())
+                supported, _ = cell_supported(get_config(arch), SHAPES[shape])
+                assert rec["status"] == ("ok" if supported else "skipped"), (arch, shape, mesh, rec["status"])

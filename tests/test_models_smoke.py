@@ -1,0 +1,139 @@
+"""Per-arch smoke tests: every assigned architecture instantiates its reduced
+config and runs forward / train / prefill / decode on CPU with finite outputs
+and the right shapes. Plus teacher-forced decode consistency for one arch per
+family (the strongest cheap correctness check)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.models import lm
+from repro.optim import adamw
+
+SEQ, BATCH = 32, 2
+
+
+def _params(cfg):
+    return lm.init(jax.random.key(0), cfg, max_seq=SEQ + 8)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = _params(cfg)
+    shape = ShapeConfig("t", SEQ, BATCH, "train")
+    batch = lm.make_batch(jax.random.key(1), cfg, shape)
+    logits, _ = lm.forward(params, {**batch, "tokens": batch["tokens"][:, :-1]}, cfg)
+    assert logits.shape[0] == BATCH and logits.shape[-1] == cfg.padded_vocab
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    opt = adamw.adamw(1e-3)
+    step = lm.make_train_step(cfg, opt)
+    p2, _, metrics = step(params, opt.init(params), batch, 0)
+    assert np.isfinite(float(metrics["total_loss"]))
+    assert np.isfinite(float(metrics["grad_norm"])) and float(metrics["grad_norm"]) > 0
+    # params actually changed
+    changed = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2))
+    )
+    assert changed
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode(arch):
+    cfg = get_smoke_config(arch)
+    params = _params(cfg)
+    shape = ShapeConfig("p", SEQ, BATCH, "prefill")
+    batch = lm.make_batch(jax.random.key(2), cfg, shape)
+    logits, cache = lm.make_prefill(cfg)(params, batch)
+    assert logits.shape == (BATCH, 1, cfg.padded_vocab)
+    dec = {"token": jnp.zeros((BATCH,), jnp.int32), "pos": jnp.asarray(lm.text_len(cfg, SEQ) - 1, jnp.int32)}
+    logits2, cache2 = lm.make_decode_step(cfg)(params, dec, cache)
+    assert logits2.shape == (BATCH, 1, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32))))
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "mamba2-370m", "zamba2-7b", "whisper-medium"])
+def test_decode_matches_teacher_forcing(arch):
+    """Greedy-decode logits must equal teacher-forced forward logits when the
+    decode path replays the same tokens against a prefix cache."""
+    cfg = get_smoke_config(arch)
+    S, prefix = 24, 16
+    if cfg.family in ("ssm", "hybrid"):
+        # chunked-prefill vs step-decode follow different eval orders; in bf16
+        # the recurrence amplifies rounding noise, so check the MATH in fp32
+        # (verified exact); bf16 agreement is covered by the dense archs.
+        cfg = cfg.replace(ssm_chunk=8, dtype="float32")
+    params = _params(cfg)
+    tokens = jax.random.randint(jax.random.key(3), (BATCH, S), 0, cfg.vocab_size, jnp.int32)
+    batch = {"tokens": tokens}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(jax.random.key(4), (BATCH, cfg.enc_len, cfg.enc_feat)).astype(jnp.bfloat16)
+
+    full_logits, _ = lm.forward(params, batch, cfg)
+
+    pre = {**batch, "tokens": tokens[:, :prefix]}
+    logits_p, cache = lm.make_prefill(cfg)(params, pre)
+    np.testing.assert_allclose(
+        np.asarray(logits_p[:, 0].astype(jnp.float32)),
+        np.asarray(full_logits[:, prefix - 1].astype(jnp.float32)),
+        atol=2e-2, rtol=2e-2,
+    )
+
+    # attention caches must be padded to the full length before decoding
+    def grow(k, a):
+        if k in ("k", "v") and a.ndim >= 3:
+            pad = [(0, 0)] * a.ndim
+            pad[2] = (0, S - a.shape[2])
+            return jnp.pad(a, pad)
+        return a
+
+    cache = {k: grow(k, v) for k, v in cache.items()}
+    decode = lm.make_decode_step(cfg)
+    for pos in range(prefix, S):
+        step_batch = {"token": tokens[:, pos - 1] * 0 + tokens[:, pos - 1], "pos": jnp.asarray(pos - 1, jnp.int32)}
+        # feed the TRUE previous token; compare against teacher-forced logits
+        step_batch["token"] = tokens[:, pos]
+        logits_d, cache = decode(params, {"token": tokens[:, pos], "pos": jnp.asarray(pos, jnp.int32)}, cache)
+        np.testing.assert_allclose(
+            np.asarray(logits_d[:, 0].astype(jnp.float32)),
+            np.asarray(full_logits[:, pos].astype(jnp.float32)),
+            atol=3e-2, rtol=3e-2,
+        )
+
+
+def test_vocab_padding_and_loss_mask():
+    cfg = get_smoke_config("granite-3-8b")  # vocab 517 pads to 768
+    assert cfg.padded_vocab % cfg.vocab_pad == 0 and cfg.padded_vocab >= cfg.vocab_size
+    params = _params(cfg)
+    shape = ShapeConfig("t", SEQ, BATCH, "train")
+    batch = lm.make_batch(jax.random.key(5), cfg, shape)
+    loss, _ = lm.loss_fn(params, batch, cfg)
+    # loss must be ~log(vocab_size), NOT log(padded_vocab), for random init
+    assert float(loss) < np.log(cfg.padded_vocab) + 0.5
+    assert abs(float(loss) - np.log(cfg.vocab_size)) < 1.0
+
+
+def test_param_counts_full_configs():
+    """Analytic parameter counts of the FULL configs are in the right ballpark
+    (no allocation — specs only)."""
+    from repro.configs import get_config
+
+    expect = {  # rough published sizes (fraction of a billion)
+        "qwen2-0.5b": (0.3, 0.8),
+        "qwen3-0.6b": (0.4, 0.9),
+        "granite-3-8b": (6.0, 10.0),
+        "qwen1.5-4b": (3.0, 5.0),
+        "olmoe-1b-7b": (5.5, 8.5),
+        "mamba2-370m": (0.25, 0.55),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = lm.param_count(get_config(arch), max_seq=128) / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo},{hi}]"
+    # MoE active < total
+    cfg = get_config("olmoe-1b-7b")
+    assert lm.active_param_count(cfg) < 0.4 * lm.param_count(cfg)

@@ -1,0 +1,98 @@
+"""End-to-end behaviour tests for the paper's system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.predictor_paper import SMOKE
+from repro.core.incremental import TrainConfig, run_protocol
+from repro.uvm import runtime as R
+from repro.uvm import simulator as S
+from repro.uvm import timing
+from repro.uvm import trace as T
+from repro.uvm.uvmsmart import run_uvmsmart
+
+TCFG = TrainConfig(group_size=1024, epochs=2, batch_size=128)
+
+
+@pytest.fixture(scope="module")
+def hotspot():
+    return T.get_trace("Hotspot", scale=0.3).slice(0, 5000)
+
+
+def test_offline_beats_online(hotspot):
+    """Fig. 4's core claim: future-knowledge (offline) training upper-bounds
+    strictly-causal online training."""
+    online = run_protocol(hotspot, SMOKE, TCFG, mode="online_single")
+    offline = run_protocol(hotspot, SMOKE, TCFG, mode="offline")
+    assert offline.top1 > online.top1
+    assert offline.top1 > 0.5
+
+
+def test_ours_reduces_thrashing_vs_baseline(hotspot):
+    base = S.run(hotspot, policy="lru", prefetch="tree")
+    ours = R.run_ours(hotspot, SMOKE, TCFG)
+    assert base.pages_thrashed > 0
+    assert ours.stats["pages_thrashed"] < 0.5 * base.pages_thrashed  # paper: -64.4% avg
+    assert ours.top1 > 0.3
+
+
+def test_predictor_learns_synthetic_period():
+    """A strictly periodic delta stream must be near-perfectly predictable."""
+    n = 3000
+    pages = np.cumsum(np.tile([1, 2, 3, 4], n // 4)).astype(np.int32) % 4096
+    tr = T.Trace("periodic", pages, np.zeros(n, np.int32), np.zeros(n, np.int32), np.zeros(n, np.int32), 4096)
+    res = run_protocol(tr, SMOKE, TCFG, mode="online_single")
+    # strictly-causal protocol: the first group is predicted by an untrained
+    # model, so assert convergence rather than the cold-start average
+    assert res.per_group[-1] > 0.9
+    assert res.top1 > 0.5
+
+
+def test_uvmsmart_and_ipc_ordering(hotspot):
+    base = S.run(hotspot, policy="lru", prefetch="tree")
+    smart = run_uvmsmart(hotspot)
+    ours = R.run_ours(hotspot, SMOKE, TCFG)
+    n = len(hotspot)
+    ipc_base = timing.ipc(base.stats, n)
+    ipc_ours = ours.ipc(pred_overhead_us=1.0, n_accesses=n)
+    # Fig. 14 directionally: ours beats the baseline at 1us overhead
+    assert ipc_ours > ipc_base
+    # Fig. 13: IPC decays monotonically with prediction overhead
+    ipcs = [ours.ipc(pred_overhead_us=u, n_accesses=n) for u in (1, 10, 20, 50, 100)]
+    assert all(a >= b for a, b in zip(ipcs, ipcs[1:]))
+    assert smart["pages_thrashed"] >= 0
+
+
+def test_crash_benchmarks_survive_at_150():
+    """Section V-D: at 150% some UVMSmart benchmarks 'crash' (thrash storm);
+    ours keeps thrash bounded on the same trace."""
+    tr = T.get_trace("ATAX", scale=0.6)
+    base = S.run(tr, policy="lru", prefetch="tree", oversubscription=1.5)
+    ours = R.run_ours(tr, SMOKE, TCFG, oversubscription=1.5)
+    assert ours.stats["pages_thrashed"] <= base.pages_thrashed
+
+
+def test_serving_offload_learned_beats_lru():
+    """The paper's policy engine applied to KV pages: on a skewed attention
+    pattern, learned residency must hit at least as often as LRU."""
+    from repro.serving.offload import KVOffloadManager, LRUOffloadManager
+
+    rng = np.random.default_rng(0)
+    n_pages, cap, steps = 64, 16, 400
+    hot = np.arange(8)  # pages attended every step
+
+    def drive(mgr):
+        for t in range(steps):
+            mass = np.zeros(n_pages)
+            mass[hot] = 1.0
+            cold = rng.integers(8, n_pages, 4)
+            mass[cold] = 0.2
+            touched = np.concatenate([hot, cold])
+            mgr.on_attention(mass, touched)
+        return mgr.stats
+
+    learned = drive(KVOffloadManager(n_pages, cap))
+    lru = drive(LRUOffloadManager(n_pages, cap))
+    assert learned.hit_rate >= lru.hit_rate
+    assert learned.hit_rate > 0.6

