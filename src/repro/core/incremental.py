@@ -27,6 +27,7 @@ from repro.core.features import DeltaVocab, FeatureSet, FeatureStream
 from repro.core.model_table import Entry, ModelTable
 from repro.core.pattern import PatternClassifier
 from repro.optim import adamw
+from repro.util import pow2_bucket as _pow2_rows
 from repro.uvm.trace import Trace
 
 
@@ -49,56 +50,149 @@ def _batch_of(fs: FeatureSet, idx) -> dict:
     }
 
 
+def _build_trainer_fns(pcfg: PredictorConfig, kind: str, lr: float):
+    init_fn, forward = make_model(pcfg, kind)
+    opt = adamw.adamw(lr, weight_decay=0.01)
+
+    def train_step(params, opt_state, batch, labels, n_active, step, f_old, in_et, use_lucir, use_thrash):
+        def lf(p):
+            logits, f = forward(p, batch)
+            return losses.total_loss(
+                logits, f, labels,
+                n_active=n_active,
+                f_old=f_old if use_lucir else None,
+                in_et=in_et if use_thrash else None,
+                lam=pcfg.lucir_lambda, mu=pcfg.thrash_mu,
+            )
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        updates, opt_state, _ = opt.update(grads, opt_state, params, step)
+        params = adamw.apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    def eval_step(params, batch, labels, n_active):
+        logits, f = forward(params, batch)
+        lm = jnp.where(jnp.arange(logits.shape[-1]) >= n_active, -1e30, logits)
+        return (lm.argmax(-1) == labels), lm.argmax(-1), f
+
+    # Whole-group drivers: the per-batch python loops used to pay one jit
+    # dispatch + one blocking device->host sync PER BATCH (the dominant cost
+    # of run_ours once compiles are shared). Scanning over a precomputed
+    # batch-index matrix runs the IDENTICAL per-batch computation — same
+    # shapes, same op sequence, host-identical index construction — in one
+    # dispatch with one sync at the end.
+    def eval_scan(params, feats, labels, pidx, n_active):
+        def body(_, idx):
+            batch = {k: v[idx] for k, v in feats.items()}
+            c, p, _ = eval_step(params, batch, labels[idx], n_active)
+            return None, (c, p)
+
+        _, (cs, ps) = jax.lax.scan(body, None, pidx)
+        return cs, ps
+
+    def train_scan(params, opt_state, step0, feats, labels, et, prev_params, idx_mat, valid, n_active, use_lucir, use_thrash):
+        # idx_mat is padded to a bucketed row count so one compiled scan
+        # serves every group size; padded rows (valid=False) leave the carry
+        # untouched — numerically a strict no-op.
+        def body(carry, xs):
+            idx, v = xs
+
+            def do(c):
+                params, opt_state, step = c
+                batch = {k: x[idx] for k, x in feats.items()}
+                if use_lucir:
+                    f_old = forward(prev_params, batch)[1]
+                else:
+                    f_old = jnp.zeros((idx.shape[0], pcfg.d_model))
+                if use_thrash:
+                    bet = et[idx]
+                else:
+                    bet = jnp.zeros((idx.shape[0],), bool)
+                p, o, _ = train_step(
+                    params, opt_state, batch, labels[idx], n_active, step, f_old, bet,
+                    use_lucir=use_lucir, use_thrash=use_thrash,
+                )
+                return (p, o, step + 1)
+
+            return jax.lax.cond(v, do, lambda c: c, carry), None
+
+        (params, opt_state, _), _ = jax.lax.scan(body, (params, opt_state, step0), (idx_mat, valid))
+        return params, opt_state
+
+    # n_active is a traced arg (class count grows); use_lucir/use_thrash static
+    return (
+        init_fn, forward, opt,
+        jax.jit(train_step, static_argnames=("use_lucir", "use_thrash")),
+        jax.jit(eval_step),
+        jax.jit(eval_scan),
+        jax.jit(train_scan, static_argnames=("use_lucir", "use_thrash")),
+    )
+
+
+# One jitted train/eval pair per (config, architecture, lr): Trainer used to
+# rebuild (and so recompile) its jits per INSTANCE, which put ~6s of XLA
+# compilation in front of every run_ours/run_protocol call — the dominant
+# cost of the table6/fig11 sweeps. The closures are pure functions of the
+# (hashable, frozen) PredictorConfig + kind + lr, so sharing them is exact.
+_TRAINER_FN_CACHE: dict = {}
+
+
 class Trainer:
     """Jitted train/eval for one predictor architecture."""
 
     def __init__(self, pcfg: PredictorConfig, tcfg: TrainConfig, kind: str = "transformer"):
         self.pcfg, self.tcfg, self.kind = pcfg, tcfg, kind
-        self.init_fn, self.forward = make_model(pcfg, kind)
-        self.opt = adamw.adamw(tcfg.lr, weight_decay=0.01)
+        cache_key = (pcfg, kind, tcfg.lr)
+        if cache_key not in _TRAINER_FN_CACHE:
+            _TRAINER_FN_CACHE[cache_key] = _build_trainer_fns(pcfg, kind, tcfg.lr)
+        (self.init_fn, self.forward, self.opt, self._train_step, self._eval_step,
+         self._eval_scan, self._train_scan) = _TRAINER_FN_CACHE[cache_key]
 
-        def train_step(params, opt_state, batch, labels, n_active, step, f_old, in_et, use_lucir, use_thrash):
-            def lf(p):
-                logits, f = self.forward(p, batch)
-                return losses.total_loss(
-                    logits, f, labels,
-                    n_active=n_active,
-                    f_old=f_old if use_lucir else None,
-                    in_et=in_et if use_thrash else None,
-                    lam=self.pcfg.lucir_lambda, mu=self.pcfg.thrash_mu,
-                )
+    @staticmethod
+    def _stage(fs: FeatureSet):
+        """Stage the group's features on device, padded to a power-of-two
+        sample count so every group shares one compiled scan (each distinct
+        array length would otherwise re-trace + re-lower it — several
+        seconds per variant even with a warm persistent cache). Batch
+        indices only ever address the first len(fs) rows, so padding rows
+        are unreachable and the gathered batches are unchanged."""
+        n_pad = _pow2_rows(len(fs), 1024) - len(fs)
 
-            (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
-            updates, opt_state, _ = self.opt.update(grads, opt_state, params, step)
-            params = adamw.apply_updates(params, updates)
-            return params, opt_state, metrics
+        def pad(a):
+            a = np.asarray(a)
+            if n_pad:
+                a = np.concatenate([a, np.zeros((n_pad,) + a.shape[1:], a.dtype)])
+            return jnp.asarray(a)
 
-        # n_active is a traced arg (class count grows); use_lucir/use_thrash static
-        self._train_step = jax.jit(train_step, static_argnames=("use_lucir", "use_thrash"))
-
-        def eval_step(params, batch, labels, n_active):
-            logits, f = self.forward(params, batch)
-            lm = jnp.where(jnp.arange(logits.shape[-1]) >= n_active, -1e30, logits)
-            return (lm.argmax(-1) == labels), lm.argmax(-1), f
-
-        self._eval_step = jax.jit(eval_step)
+        return (
+            {"page": pad(fs.page), "delta": pad(fs.delta), "pc": pad(fs.pc), "tb": pad(fs.tb)},
+            pad(fs.label),
+        )
 
     def new_params(self, seed: int = 0):
         return self.init_fn(jax.random.key(seed))
 
     def evaluate(self, params, fs: FeatureSet, n_active: int):
-        """Top-1 correctness per sample + predicted class ids."""
+        """Top-1 correctness per sample + predicted class ids (all batches in
+        one scanned dispatch; only the final padded batch carries junk rows,
+        which are sliced off exactly as the per-batch loop did)."""
         B = self.tcfg.batch_size
         n = len(fs)
-        correct = np.zeros(n, bool)
-        pred = np.zeros(n, np.int32)
+        if n == 0:
+            return np.zeros(0, bool), np.zeros(0, np.int32)
+        rows = []
         for lo in range(0, n, B):
             idx = np.arange(lo, min(lo + B, n))
             pad = B - len(idx)
-            pidx = np.concatenate([idx, np.zeros(pad, int)]) if pad else idx
-            c, p, _ = self._eval_step(params, _batch_of(fs, pidx), jnp.asarray(fs.label[pidx]), n_active)
-            correct[idx] = np.asarray(c)[: len(idx)]
-            pred[idx] = np.asarray(p)[: len(idx)]
+            rows.append(np.concatenate([idx, np.zeros(pad, int)]) if pad else idx)
+        n_rows = len(rows)
+        rows += [np.zeros(B, np.int64)] * (_pow2_rows(n_rows, 8) - n_rows)  # compile-bucket rows
+        pidx = np.stack(rows).astype(np.int32)
+        feats, labels = self._stage(fs)
+        cs, ps = self._eval_scan(params, feats, labels, jnp.asarray(pidx), n_active)
+        out = jax.device_get((cs, ps))  # one sync for the whole group
+        correct = out[0].reshape(-1)[:n].astype(bool)
+        pred = out[1].reshape(-1)[:n].astype(np.int32)
         return correct, pred
 
     def old_features(self, prev_params, fs: FeatureSet, idx):
@@ -108,7 +202,12 @@ class Trainer:
         return f
 
     def train_group(self, entry: Entry, fs: FeatureSet, n_active: int, *, in_et=None, use_lucir=False, rng=None):
-        """Fine-tune on one group (a few epochs)."""
+        """Fine-tune on one group (a few epochs) in ONE scanned dispatch.
+
+        The batch-index schedule (per-epoch permutation, full batches, the
+        tiny-group resize fallback) is built host-side with the exact rng
+        call sequence of the old per-batch loop, so the sequence of batches
+        — and therefore every float — is unchanged."""
         tc = self.tcfg
         if entry.opt_state is None:
             entry.opt_state = self.opt.init(entry.params)
@@ -117,29 +216,32 @@ class Trainer:
             return entry
         rng = np.random.default_rng(tc.seed if rng is None else rng)
         use_l = use_lucir and entry.prev_params is not None
-        dummy_et = jnp.zeros((tc.batch_size,), bool)
+        rows = []
         for _ in range(tc.epochs):
             order = rng.permutation(n)
             for lo in range(0, n - tc.batch_size + 1, tc.batch_size):
-                idx = order[lo : lo + tc.batch_size]
-                f_old = self.old_features(entry.prev_params, fs, idx) if use_l else jnp.zeros((tc.batch_size, self.pcfg.d_model))
-                et = jnp.asarray(in_et[idx]) if in_et is not None else dummy_et
-                entry.params, entry.opt_state, _ = self._train_step(
-                    entry.params, entry.opt_state, _batch_of(fs, idx), jnp.asarray(fs.label[idx]),
-                    jnp.asarray(n_active, jnp.int32), entry.step, f_old, et,
-                    use_lucir=use_l, use_thrash=in_et is not None,
-                )
-                entry.step += 1
+                rows.append(order[lo : lo + tc.batch_size])
             if n < tc.batch_size:  # tiny group: single padded batch
-                idx = np.resize(order, tc.batch_size)
-                f_old = self.old_features(entry.prev_params, fs, idx) if use_l else jnp.zeros((tc.batch_size, self.pcfg.d_model))
-                et = jnp.asarray(in_et[idx]) if in_et is not None else dummy_et
-                entry.params, entry.opt_state, _ = self._train_step(
-                    entry.params, entry.opt_state, _batch_of(fs, idx), jnp.asarray(fs.label[idx]),
-                    jnp.asarray(n_active, jnp.int32), entry.step, f_old, et,
-                    use_lucir=use_l, use_thrash=in_et is not None,
-                )
-                entry.step += 1
+                rows.append(np.resize(order, tc.batch_size))
+        n_steps = len(rows)
+        n_pad = _pow2_rows(n_steps, 16) - n_steps  # one compiled scan per step-count bucket
+        rows += [np.zeros(tc.batch_size, np.int64)] * n_pad
+        valid = np.arange(len(rows)) < n_steps
+        idx_mat = np.stack(rows).astype(np.int32)
+        feats, labels = self._stage(fs)
+        if in_et is not None:  # pad to the same sample bucket as the features
+            et_np = np.asarray(in_et, bool)
+            et = jnp.asarray(np.concatenate([et_np, np.zeros(_pow2_rows(n, 1024) - n, bool)]))
+        else:
+            et = jnp.zeros(1, bool)
+        prev = entry.prev_params if use_l else entry.params  # ignored unless use_lucir
+        entry.params, entry.opt_state = self._train_scan(
+            entry.params, entry.opt_state, jnp.asarray(entry.step, jnp.int32),
+            feats, labels, et, prev, jnp.asarray(idx_mat), jnp.asarray(valid),
+            jnp.asarray(n_active, jnp.int32),
+            use_lucir=use_l, use_thrash=in_et is not None,
+        )
+        entry.step += n_steps
         entry.n_updates += 1
         return entry
 

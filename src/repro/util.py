@@ -1,0 +1,8 @@
+"""Small shared helpers."""
+from __future__ import annotations
+
+
+def pow2_bucket(n: int, minimum: int) -> int:
+    """Smallest power of two >= max(n, minimum) — the shape-bucketing rule
+    used so varying lengths fall into a handful of XLA compile shapes."""
+    return 1 << max(int(max(n, 1) - 1).bit_length(), minimum.bit_length() - 1)

@@ -1,0 +1,176 @@
+"""Frozen pre-refactor simulator hot path (the bit-exactness oracle).
+
+This is the original per-access ``lax.scan`` step with the nested
+``while_loop`` eviction (`_lex_argmin` re-scanned per victim) that
+``simulator.py`` replaced with the packed-priority / fault-event-compressed
+fast path.  It is kept verbatim so the equivalence suite can check the fast
+path against the reference on arbitrary (hypothesis-generated) traces, not
+just the committed goldens.  Keep it slow and obvious; never optimise it.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.uvm.simulator import (
+    CHUNK_BLOCKS,
+    INTERVAL,
+    NO_USE,
+    SimResult,
+    SimState,
+    _tree_mask,
+    capacity_for,
+    init_state,
+    pad_blocks,
+)
+from repro.uvm.trace import Trace
+
+
+def precompute_next_use(blocks: np.ndarray, n_blocks: int) -> np.ndarray:
+    """next_use[t] = index of the next access to blocks[t] after t (else INF)."""
+    nxt = np.full(len(blocks), NO_USE, np.int64)
+    last = np.full(n_blocks, NO_USE, np.int64)
+    for t in range(len(blocks) - 1, -1, -1):
+        nxt[t] = last[blocks[t]]
+        last[blocks[t]] = t
+    return np.minimum(nxt, NO_USE).astype(np.int32)
+
+
+def _lex_argmin(cand, *keys):
+    """Index of the lexicographically-smallest key tuple among candidates."""
+    for k in keys:
+        kk = jnp.where(cand, k, jnp.iinfo(jnp.int32).max)
+        cand = cand & (kk == kk.min())
+    return jnp.argmax(cand)
+
+
+def _victim(state: SimState, policy: str, interval_now, evictable):
+    """Eviction victim index under the given policy (exact int32 lexicographic)."""
+    la = state.last_access
+    if policy == "lru":
+        keys = (la,)
+    elif policy == "random":
+        keys = (jax.random.randint(jax.random.fold_in(state.key, state.time), la.shape, 0, 1 << 30, jnp.int32),)
+    elif policy == "belady":
+        keys = (-state.next_use,)  # farthest next use evicted first
+    elif policy == "hpe":
+        age = jnp.clip(interval_now - state.last_interval, 0, 2)  # 0=new..2=old
+        keys = (-age, la)
+    elif policy == "learned":
+        age = jnp.clip(interval_now - state.last_interval, 0, 2)
+        keys = (-age, state.freq, la)
+    else:
+        raise ValueError(policy)
+    return _lex_argmin(evictable, *keys)
+
+
+def _evict_until_fit(state: SimState, capacity: int, policy: str, protect, interval_now):
+    """Evict lowest-priority resident blocks until occupancy <= capacity."""
+
+    def cond(c):
+        resident, evicted_once, occ = c
+        any_evictable = (resident & ~state.pinned & ~protect).any()
+        return (occ > capacity) & any_evictable
+
+    def body(c):
+        resident, evicted_once, occ = c
+        evictable = resident & ~state.pinned & ~protect
+        victim = _victim(state._replace(resident=resident, evicted_once=evicted_once), policy, interval_now, evictable)
+        resident = resident.at[victim].set(False)
+        evicted_once = evicted_once.at[victim].set(True)
+        return resident, evicted_once, occ - 1
+
+    resident, evicted_once, occ = jax.lax.while_loop(
+        cond, body, (state.resident, state.evicted_once, state.occupancy)
+    )
+    return state._replace(resident=resident, evicted_once=evicted_once, occupancy=occ)
+
+
+def make_step(n_blocks: int, capacity: int, policy: str, prefetch: str, n_valid: int):
+    valid = jnp.arange(n_blocks) < n_valid
+
+    def step(state: SimState, inp):
+        blk, nxt = inp
+        t = state.time
+        is_pinned = state.pinned[blk]
+        fault = (~state.resident[blk]) & (~is_pinned)
+
+        # demand block migrates on fault
+        mig = jnp.zeros(n_blocks, bool).at[blk].set(fault)
+        resident1 = state.resident | mig
+        if prefetch == "tree":
+            pf = _tree_mask(resident1, blk, valid, n_blocks) & fault
+            mig = mig | pf
+        newly = mig & ~state.resident
+        n_new = newly.sum(dtype=jnp.int32)
+        thrash = (newly & state.evicted_once).sum(dtype=jnp.int32)
+
+        interval_now = state.fault_count // INTERVAL
+        state2 = state._replace(
+            resident=state.resident | newly,
+            occupancy=state.occupancy + n_new,
+            fault_count=state.fault_count + fault.astype(jnp.int32),
+            thrash_events=state.thrash_events + thrash,
+            migrations=state.migrations + n_new,
+            faults=state.faults + fault.astype(jnp.int32),
+            zero_copy=state.zero_copy + is_pinned.astype(jnp.int32),
+            # prefetched blocks count as freshly used by the DRIVER's LRU
+            last_access=jnp.where(newly | (jnp.arange(n_blocks) == blk), t, state.last_access),
+            # ...but HPE's page-set chain only sees DEMAND touches (Section
+            # III-B); the paper's engine ("learned") updates it with both.
+            last_interval=jnp.where(
+                (newly if policy == "learned" else jnp.zeros_like(newly)) | (jnp.arange(n_blocks) == blk),
+                interval_now,
+                state.last_interval,
+            ),
+            next_use=state.next_use.at[blk].set(nxt),
+        )
+        protect = jnp.zeros(n_blocks, bool).at[blk].set(True)
+        state3 = _evict_until_fit(state2, capacity, policy, protect, interval_now)
+        out = {
+            "fault": fault,
+            "thrash": thrash,
+            "was_evicted": state.evicted_once[blk],
+        }
+        return state3._replace(time=t + 1), out
+
+    return step
+
+
+@partial(jax.jit, static_argnames=("n_blocks", "capacity", "policy", "prefetch", "n_valid"))
+def _run_segment(state, blocks, next_use, n_blocks, capacity, policy, prefetch, n_valid):
+    step = make_step(n_blocks, capacity, policy, prefetch, n_valid)
+    return jax.lax.scan(step, state, (blocks, next_use))
+
+
+def run(
+    trace: Trace,
+    *,
+    policy: str = "lru",
+    prefetch: str = "tree",
+    oversubscription: float = 1.25,
+    state: SimState | None = None,
+    seed: int = 0,
+) -> SimResult:
+    """Reference run: full trace under (policy x prefetch), original semantics."""
+    blocks = trace.block.astype(np.int32)
+    nb = pad_blocks(trace.n_blocks)
+    cap = capacity_for(trace.n_blocks, oversubscription)
+    nxt = precompute_next_use(blocks, nb)
+    st = state if state is not None else init_state(nb, seed)
+    st, outs = _run_segment(
+        st, jnp.asarray(blocks), jnp.asarray(nxt),
+        n_blocks=nb, capacity=cap, policy=policy,
+        prefetch="demand" if prefetch == "none" else prefetch,
+        n_valid=trace.n_blocks,
+    )
+    st = st._replace(key=jax.random.key_data(st.key))  # numpy-safe
+    return SimResult(
+        state=jax.tree.map(np.asarray, st),
+        fault=np.asarray(outs["fault"]),
+        thrash=np.asarray(outs["thrash"]),
+        was_evicted=np.asarray(outs["was_evicted"]),
+    )

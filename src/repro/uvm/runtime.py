@@ -16,7 +16,12 @@ Per group of accesses:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import os
+import pickle
+from pathlib import Path
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -52,6 +57,37 @@ class LearnedRunResult:
         return timing.ipc(self.stats, n_accesses, pred_overhead_us=pred_overhead_us, n_predictions=charged)
 
 
+PRETRAIN_CACHE_DIR = Path("experiments/cache")
+
+
+def _pretrain_cache_key(corpus, pcfg, tcfg, kind, target_acc, max_rounds) -> str:
+    h = hashlib.md5()
+    for tr in corpus:
+        h.update(tr.name.encode())
+        h.update(str(tr.n_pages).encode())
+        # everything FeatureStream extracts (page, delta, pc, tb) + the
+        # classifier input (kernel) — a change to ANY of them must miss
+        for arr in (tr.page, tr.pc, tr.tb, tr.kernel):
+            h.update(np.ascontiguousarray(arr))
+    h.update(repr((pcfg, dataclasses.astuple(tcfg), kind, target_acc, max_rounds)).encode())
+    return h.hexdigest()[:16]
+
+
+def _table_to_host(table: ModelTable) -> dict:
+    to_np = lambda t: None if t is None else jax.tree.map(np.asarray, t)
+    return {
+        "n_slots": table.n_slots,
+        "slots": {
+            s: {
+                "params": to_np(e.params), "prev_params": to_np(e.prev_params),
+                "opt_state": to_np(e.opt_state), "step": e.step,
+                "n_updates": e.n_updates, "last_acc": e.last_acc,
+            }
+            for s, e in table.slots.items()
+        },
+    }
+
+
 def pretrain_table(
     corpus: list[Trace],
     pcfg: PredictorConfig,
@@ -63,8 +99,31 @@ def pretrain_table(
 ) -> ModelTable:
     """Section V-A: build a per-pattern corpus from (different-input) runs of
     5 benchmarks and pre-train each pattern's model until accuracy is
-    reasonable, to hide the initial training latency."""
+    reasonable, to hide the initial training latency.
+
+    The paper treats this as an OFFLINE one-time step, so the resulting
+    table (a deterministic function of corpus + configs) is memoised on
+    disk under experiments/cache/ — re-deriving identical weights in every
+    benchmark process would just re-pay the pretraining latency the design
+    exists to hide. Set REPRO_PRETRAIN_CACHE=0 to disable.
+    """
     trainer = Trainer(pcfg, tcfg, kind)
+    use_cache = os.environ.get("REPRO_PRETRAIN_CACHE", "1") != "0"
+    cache_path = PRETRAIN_CACHE_DIR / f"pretrain_{_pretrain_cache_key(corpus, pcfg, tcfg, kind, target_acc, max_rounds)}.pkl"
+    if use_cache and cache_path.exists():
+        try:
+            blob = pickle.loads(cache_path.read_bytes())
+            table = ModelTable(lambda s: trainer.new_params(s), n_slots=blob["n_slots"])
+            from repro.core.model_table import Entry
+
+            for s, e in blob["slots"].items():
+                table.slots[s] = Entry(
+                    params=e["params"], prev_params=e["prev_params"], opt_state=e["opt_state"],
+                    step=e["step"], n_updates=e["n_updates"], last_acc=e["last_acc"],
+                )
+            return table
+        except Exception:
+            pass  # truncated/corrupt memo: fall through and retrain
     table = ModelTable(lambda s: trainer.new_params(s), n_slots=tcfg.table_slots)
     classifier = PatternClassifier()
     groups = []  # (pattern, FeatureSet, n_active)
@@ -91,6 +150,15 @@ def pretrain_table(
             table.put(pat, entry)
         if accs and float(np.mean(accs)) >= target_acc:
             break
+    if use_cache:
+        try:
+            PRETRAIN_CACHE_DIR.mkdir(parents=True, exist_ok=True)
+            # atomic publish: a killed writer must never leave a torn file
+            tmp = cache_path.with_suffix(f".tmp.{os.getpid()}")
+            tmp.write_bytes(pickle.dumps(_table_to_host(table)))
+            os.replace(tmp, cache_path)
+        except OSError:
+            pass  # read-only checkouts still work, just without the memo
     return table
 
 
@@ -116,11 +184,11 @@ def run_ours(
     classifier = PatternClassifier()
     freq_table = PredictionFrequencyTable()
 
-    nb = S.pad_blocks(trace.n_blocks)
+    nb = S.bucket_blocks(trace.n_blocks)
     cap = S.capacity_for(trace.n_blocks, oversubscription)
     state = S.init_state(nb, seed)
     blocks = trace.block.astype(np.int32)
-    nxt = S.precompute_next_use(blocks, nb)
+    nxt = S.next_use_for(trace)  # cached per trace across groups/cells
     dtable_cache: dict[int, int] = {}
 
     n = len(trace)
@@ -167,13 +235,15 @@ def run_ours(
             pred_pages = np.clip(prev_page + pred_delta, 0, trace.n_pages - 1)
         if len(fs) and warm:
             freq_table.update(np.asarray(pred_pages, np.int64) // PAGES_PER_BLOCK)
-            state = state._replace(freq=jnp.asarray(freq_table.dense(nb)))
+            # one dense export per group: it feeds both the simulator's
+            # `learned` eviction keys and the prefetch gate below
+            dense = freq_table.dense(nb)
+            state = state._replace(freq=jnp.asarray(dense))
             # Section IV-D: "prefetching candidates will be selected from the
             # pages with the highest prediction frequency ... to control the
             # amount of prefetching while the oversubscription level is high":
             # gate by repeated prediction + cap the in-flight budget, so a
             # weakly-trained predictor cannot flood the device with garbage.
-            dense = freq_table.dense(nb)
             pblocks = predicted_blocks(pred_pages, PAGES_PER_BLOCK)
             pblocks = pblocks[pblocks < nb]
             # confidence-scaled aggressiveness: a highly-accurate model may

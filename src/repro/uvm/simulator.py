@@ -20,16 +20,41 @@ Prefetchers (Section II-B):
                remaining blocks migrated
     none     — alias of demand; the learned prefetcher stages its blocks via
                :func:`apply_prefetch` between scan segments (async analogue)
+
+Hot-path design (bit-identical to :mod:`repro.uvm.reference` for every
+policy except ``random``, whose draws depend on array padding):
+
+  * **fault-event compression** — consecutive accesses to the same block
+    cannot fault after the first (the block was just migrated and is
+    protected during its own step), so the trace is run-length-compressed
+    on the host into per-run events carrying aggregate bookkeeping
+    (final ``last_access``/``next_use``, pinned ``zero_copy`` mass, the
+    interval-boundary fix-up for the page-set chain). The scan length
+    shrinks by the repeat-run hit rate (1x-10x on the paper's suite).
+  * **packed-priority eviction** — every policy's victim key is one
+    uniform padded 3-tuple of int32 arrays (constant for the whole step:
+    nothing an eviction changes feeds back into the keys), so victim
+    selection is a chained masked-argmin over that tuple inside a
+    ``while_loop`` whose body — including the ``random`` policy's PRNG
+    draw — only executes on steps that actually evict, also under
+    ``vmap``. (A fully vectorised sort-based "drop the ``occ - cap``
+    lowest-ranked" variant was measured and rejected: batched ``cond``
+    turns into ``select``, which forces the sort on every step.)
+  * **traced cell parameters** — policy, prefetcher, capacity, and the
+    valid-block count are runtime values (not Python branches), so one
+    compiled scan per (batch, n_blocks, events) shape bucket serves every
+    benchmark x policy x prefetch x oversubscription cell, and
+    :func:`run_batch` ``vmap``s whole sweeps through it in a single scan.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.util import pow2_bucket
 from repro.uvm.trace import PAGES_PER_BLOCK, Trace
 
 CHUNK_BLOCKS = 32  # 2MB chunk = 32 x 64KB blocks
@@ -38,6 +63,8 @@ NO_USE = np.int32(2**31 - 1)
 
 POLICIES = ("lru", "random", "belady", "hpe", "learned")
 PREFETCHERS = ("demand", "tree", "none")
+POLICY_IDS = {"lru": 0, "random": 1, "belady": 2, "hpe": 3, "learned": 4}
+PREFETCH_IDS = {"demand": 0, "tree": 1, "none": 0}
 
 
 class SimState(NamedTuple):
@@ -79,64 +106,98 @@ def init_state(n_blocks: int, seed: int = 0) -> SimState:
     )
 
 
+def _ensure_key(state: SimState) -> SimState:
+    """Re-wrap ``key`` if it round-tripped through :func:`jax.random.key_data`.
+
+    ``run()`` returns the state with the key flattened to raw ``uint32`` data
+    (numpy-safe); feeding that state back in (the documented resume path)
+    must restore the typed PRNG key or ``random`` eviction breaks.
+    """
+    key = jnp.asarray(state.key)
+    if not jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.wrap_key_data(key)
+    return state._replace(key=key)
+
+
 def precompute_next_use(blocks: np.ndarray, n_blocks: int) -> np.ndarray:
     """next_use[t] = index of the next access to blocks[t] after t (else INF)."""
-    nxt = np.full(len(blocks), NO_USE, np.int64)
-    last = np.full(n_blocks, NO_USE, np.int64)
-    for t in range(len(blocks) - 1, -1, -1):
-        nxt[t] = last[blocks[t]]
-        last[blocks[t]] = t
+    b = np.asarray(blocks, np.int64)
+    nxt = np.full(len(b), NO_USE, np.int64)
+    if len(b):
+        idx = np.arange(len(b))
+        perm = np.lexsort((idx, b))  # positions grouped by block, time ascending
+        same = b[perm][1:] == b[perm][:-1]
+        nxt[perm[:-1][same]] = perm[1:][same]
     return np.minimum(nxt, NO_USE).astype(np.int32)
 
 
-def _lex_argmin(cand, *keys):
-    """Index of the lexicographically-smallest key tuple among candidates."""
-    for k in keys:
-        kk = jnp.where(cand, k, jnp.iinfo(jnp.int32).max)
-        cand = cand & (kk == kk.min())
-    return jnp.argmax(cand)
+def next_use_for(trace: Trace) -> np.ndarray:
+    """Per-trace cached :func:`precompute_next_use` (shared across cells)."""
+    cached = getattr(trace, "_next_use_cache", None)
+    if cached is None or len(cached) != len(trace):
+        cached = precompute_next_use(trace.block.astype(np.int32), trace.n_blocks)
+        trace._next_use_cache = cached
+    return cached
 
 
-def _victim(state: SimState, policy: str, interval_now, evictable):
-    """Eviction victim index under the given policy (exact int32 lexicographic)."""
-    la = state.last_access
-    if policy == "lru":
-        keys = (la,)
-    elif policy == "random":
-        keys = (jax.random.randint(jax.random.fold_in(state.key, state.time), la.shape, 0, 1 << 30, jnp.int32),)
-    elif policy == "belady":
-        keys = (-state.next_use,)  # farthest next use evicted first
-    elif policy == "hpe":
-        age = jnp.clip(interval_now - state.last_interval, 0, 2)  # 0=new..2=old
-        keys = (-age, la)
-    elif policy == "learned":
-        age = jnp.clip(interval_now - state.last_interval, 0, 2)
-        keys = (-age, state.freq, la)
-    else:
-        raise ValueError(policy)
-    return _lex_argmin(evictable, *keys)
+class Events(NamedTuple):
+    """Run-length-compressed access stream (host side).
+
+    One event per maximal run of consecutive same-block accesses:
+    ``blk`` the block, ``nxt`` the next-use index of the run's LAST access
+    (the value ``next_use[blk]`` must hold after the run — the first
+    access's value is only ever read for the protected block itself, so it
+    cannot influence eviction), ``dt`` the run's first-access offset within
+    the segment, ``rl`` the run length (0 marks a padding no-op event).
+    """
+
+    blk: np.ndarray  # int32 (E,)
+    nxt: np.ndarray  # int32 (E,)
+    dt: np.ndarray  # int32 (E,)
+    rl: np.ndarray  # int32 (E,)
+    n_access: int  # original segment length
 
 
-def _evict_until_fit(state: SimState, capacity: int, policy: str, protect, interval_now):
-    """Evict lowest-priority resident blocks until occupancy <= capacity."""
+def compress_events(blocks: np.ndarray, next_use: np.ndarray) -> Events:
+    b = np.asarray(blocks, np.int32)
+    n = len(b)
+    if n == 0:
+        e = np.zeros(0, np.int32)
+        return Events(e, e, e, e, 0)
+    change = np.empty(n, bool)
+    change[0] = True
+    np.not_equal(b[1:], b[:-1], out=change[1:])
+    starts = np.nonzero(change)[0].astype(np.int32)
+    run_len = np.diff(np.append(starts, n)).astype(np.int32)
+    ends = starts + run_len - 1
+    return Events(b[starts], np.asarray(next_use, np.int32)[ends], starts, run_len, n)
 
-    def cond(c):
-        resident, evicted_once, occ = c
-        any_evictable = (resident & ~state.pinned & ~protect).any()
-        return (occ > capacity) & any_evictable
 
-    def body(c):
-        resident, evicted_once, occ = c
-        evictable = resident & ~state.pinned & ~protect
-        victim = _victim(state._replace(resident=resident, evicted_once=evicted_once), policy, interval_now, evictable)
-        resident = resident.at[victim].set(False)
-        evicted_once = evicted_once.at[victim].set(True)
-        return resident, evicted_once, occ - 1
+_bucket_pow2 = pow2_bucket
 
-    resident, evicted_once, occ = jax.lax.while_loop(
-        cond, body, (state.resident, state.evicted_once, state.occupancy)
-    )
-    return state._replace(resident=resident, evicted_once=evicted_once, occupancy=occ)
+
+def bucket_blocks(n_valid: int) -> int:
+    """Power-of-two state size >= pad_blocks(n_valid), so different
+    benchmarks share one compiled scan. Padding blocks are never valid,
+    never resident, and never migrated — they are inert. The 128 floor puts
+    the entire quick-scale suite in ONE compile bucket (the padded per-step
+    cost is noise next to a 1-2s XLA compile per extra shape)."""
+    return _bucket_pow2(pad_blocks(n_valid), 128)
+
+
+def _pad_events(ev: Events) -> Events:
+    """Pad the event arrays to a power-of-two length with no-op (rl=0)
+    events so scan lengths fall into a few compile buckets."""
+    e = len(ev.blk)
+    target = _bucket_pow2(e, 1024)
+    if target == e:
+        return ev
+    pad = target - e
+
+    def z(a):
+        return np.concatenate([a, np.zeros(pad, np.int32)])
+
+    return Events(z(ev.blk), z(ev.nxt), z(ev.dt), z(ev.rl), ev.n_access)
 
 
 def _tree_mask(resident, blk, valid, n_blocks: int):
@@ -151,59 +212,239 @@ def _tree_mask(resident, blk, valid, n_blocks: int):
     return mask & valid & ~resident
 
 
-def make_step(n_blocks: int, capacity: int, policy: str, prefetch: str, n_valid: int):
-    valid = jnp.arange(n_blocks) < n_valid
+def _policy_keys(state: SimState, policy_id, interval_now, t_now):
+    """The policy's lexicographic victim-key tuple, padded to 3 int32 keys.
+
+    Extra constant keys never change a lexicographic argmin, so every
+    policy shares one (k1, k2, k3) shape and one sort."""
+    la = state.last_access
+    z = jnp.zeros_like(la)
+
+    def k_lru():
+        return la, z, z
+
+    def k_random():
+        r = jax.random.randint(jax.random.fold_in(state.key, t_now), la.shape, 0, 1 << 30, jnp.int32)
+        return r, z, z
+
+    def k_belady():
+        return -state.next_use, z, z  # farthest next use evicted first
+
+    def k_hpe():
+        age = jnp.clip(interval_now - state.last_interval, 0, 2)  # 0=new..2=old
+        return -age, la, z
+
+    def k_learned():
+        age = jnp.clip(interval_now - state.last_interval, 0, 2)
+        return -age, state.freq, la
+
+    return jax.lax.switch(policy_id, (k_lru, k_random, k_belady, k_hpe, k_learned))
+
+
+def _lex_argmin(cand, *keys):
+    """Index of the lexicographically-smallest key tuple among candidates."""
+    for k in keys:
+        kk = jnp.where(cand, k, jnp.iinfo(jnp.int32).max)
+        cand = cand & (kk == kk.min())
+    return jnp.argmax(cand)
+
+
+def _evict_fit(state: SimState, capacity, policy_id, protect, interval_now, t_now) -> SimState:
+    """Evict lowest-priority resident blocks until occupancy <= capacity.
+
+    The victim keys are constant for the whole step (an eviction changes
+    neither the remaining blocks' keys nor their evictability), so each
+    victim is one chained masked-argmin over the precomputed tuple. The
+    loop body — including the ``random`` policy's PRNG draw — only runs on
+    steps that actually evict, which also holds under ``vmap`` (a batched
+    ``while_loop`` skips the body once every lane's condition is false)."""
+    base = ~state.pinned & ~protect
+
+    def cond(c):
+        resident, evicted_once, occ = c
+        return (occ > capacity) & ((resident & base).any())
+
+    def body(c):
+        resident, evicted_once, occ = c
+        k1, k2, k3 = _policy_keys(state, policy_id, interval_now, t_now)
+        victim = _lex_argmin(resident & base, k1, k2, k3)
+        return resident.at[victim].set(False), evicted_once.at[victim].set(True), occ - 1
+
+    resident, evicted_once, occ = jax.lax.while_loop(
+        cond, body, (state.resident, state.evicted_once, state.occupancy)
+    )
+    return state._replace(resident=resident, evicted_once=evicted_once, occupancy=occ)
+
+
+def _scan_events(state: SimState, blk, nxt, dt, rl, capacity, policy_id, prefetch_id, n_valid):
+    """One lane: scan the compressed event stream. All cell parameters are
+    traced values — a single compile serves every (policy, prefetch,
+    capacity, n_valid) combination of this shape."""
+    n_blocks = state.resident.shape[0]
+    iota = jnp.arange(n_blocks, dtype=jnp.int32)
+    valid = iota < n_valid
+    t0 = state.time
 
     def step(state: SimState, inp):
-        blk, nxt = inp
-        t = state.time
-        is_pinned = state.pinned[blk]
-        fault = (~state.resident[blk]) & (~is_pinned)
+        b, nx, d, r = inp
+        active = r > 0
+        t_first = t0 + d
+        t_last = t_first + r - 1
+        is_pinned = state.pinned[b]
+        fault = (~state.resident[b]) & (~is_pinned) & active
 
-        # demand block migrates on fault
-        mig = jnp.zeros(n_blocks, bool).at[blk].set(fault)
+        # demand block migrates on fault; tree prefetch rides along
+        mig = jnp.zeros(n_blocks, bool).at[b].set(fault)
         resident1 = state.resident | mig
-        if prefetch == "tree":
-            pf = _tree_mask(resident1, blk, valid, n_blocks) & fault
-            mig = mig | pf
+        pf = jax.lax.cond(
+            (prefetch_id == 1) & fault,
+            lambda: _tree_mask(resident1, b, valid, n_blocks),
+            lambda: jnp.zeros(n_blocks, bool),
+        )
+        mig = mig | pf
         newly = mig & ~state.resident
         n_new = newly.sum(dtype=jnp.int32)
         thrash = (newly & state.evicted_once).sum(dtype=jnp.int32)
 
+        fault_i = fault.astype(jnp.int32)
         interval_now = state.fault_count // INTERVAL
+        fc_after = state.fault_count + fault_i
+        is_blk = (iota == b) & active
+
+        # prefetched blocks count as freshly used by the DRIVER's LRU
+        # (CUDA treats migrated pages as recently touched — otherwise LRU
+        # instantly re-evicts them and the prefetcher ping-pongs); the
+        # accessed block itself ends the run at its LAST touch.
+        la = jnp.where(newly, t_first, state.last_access)
+        la = jnp.where(is_blk, t_last, la)
+        # ...but HPE's page-set chain only sees DEMAND touches: its
+        # counters are not updated by prefetches (Section III-B — this is
+        # precisely why Tree.+HPE collapses in Table II). The paper's own
+        # engine ("learned") updates the chain with both (Section IV-D).
+        li = jnp.where(jnp.where(policy_id == 4, newly, jnp.zeros_like(newly)), interval_now, state.last_interval)
+        # repeat touches after a fault that crosses an interval boundary
+        # land in the NEXT interval (the reference updates per access)
+        li = jnp.where(is_blk, jnp.where(r > 1, fc_after // INTERVAL, interval_now), li)
+
         state2 = state._replace(
             resident=state.resident | newly,
             occupancy=state.occupancy + n_new,
-            fault_count=state.fault_count + fault.astype(jnp.int32),
+            fault_count=fc_after,
             thrash_events=state.thrash_events + thrash,
             migrations=state.migrations + n_new,
-            faults=state.faults + fault.astype(jnp.int32),
-            zero_copy=state.zero_copy + is_pinned.astype(jnp.int32),
-            # prefetched blocks count as freshly used by the DRIVER's LRU
-            # (CUDA treats migrated pages as recently touched — otherwise LRU
-            # instantly re-evicts them and the prefetcher ping-pongs)
-            last_access=jnp.where(newly | (jnp.arange(n_blocks) == blk), t, state.last_access),
-            # ...but HPE's page-set chain only sees DEMAND touches: its
-            # counters are not updated by prefetches (Section III-B — this is
-            # precisely why Tree.+HPE collapses in Table II). The paper's own
-            # engine ("learned") updates the chain with both (Section IV-D).
-            last_interval=jnp.where(
-                (newly if policy == "learned" else jnp.zeros_like(newly)) | (jnp.arange(n_blocks) == blk),
-                interval_now,
-                state.last_interval,
-            ),
-            next_use=state.next_use.at[blk].set(nxt),
+            faults=state.faults + fault_i,
+            zero_copy=state.zero_copy + is_pinned.astype(jnp.int32) * r,
+            last_access=la,
+            last_interval=li,
+            next_use=jnp.where(is_blk, nx, state.next_use),
         )
-        protect = jnp.zeros(n_blocks, bool).at[blk].set(True)
-        state3 = _evict_until_fit(state2, capacity, policy, protect, interval_now)
+        protect = jnp.zeros(n_blocks, bool).at[b].set(active)
+        # padding events must not evict even if a caller handed us an
+        # over-capacity state, so they see capacity == occupancy
+        cap_eff = jnp.where(active, capacity, state2.occupancy)
+        state3 = _evict_fit(state2, cap_eff, policy_id, protect, interval_now, t_first)
         out = {
             "fault": fault,
             "thrash": thrash,
-            "was_evicted": state.evicted_once[blk],
+            "was_evicted": state.evicted_once[b],
         }
-        return state3._replace(time=t + 1), out
+        return state3._replace(time=jnp.where(active, t_last + 1, state.time)), out
 
-    return step
+    return jax.lax.scan(step, state, (blk, nxt, dt, rl))
+
+
+@jax.jit
+def _run_events(states, blk, nxt, dt, rl, capacity, policy_id, prefetch_id, n_valid):
+    """Batched event scan: ``states`` and the cell parameters carry a
+    leading lane axis; the event stream is shared across lanes."""
+    return jax.vmap(
+        lambda st, cap, pol, pf, nv: _scan_events(st, blk, nxt, dt, rl, cap, pol, pf, nv)
+    )(states, capacity, policy_id, prefetch_id, n_valid)
+
+
+def _stack_states(states: list[SimState]) -> SimState:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def _lane(tree, i):
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+_INERT = ("lru", "demand")  # padding lane: huge capacity, cheapest policy
+
+
+def _run_cells(
+    states: list[SimState],
+    ev: Events,
+    cells: list[tuple[int, int, int]],  # (policy_id, prefetch_id, capacity)
+    n_valid: int,
+):
+    """Run one compressed stream under many cells in a single vmapped scan.
+
+    Lanes are padded to a power of two with inert no-evict lanes so batch
+    sizes fall into a few compile buckets."""
+    n_blocks = states[0].resident.shape[0]
+    b_real = len(cells)
+    # lane buckets {1, 8, 16, ...}: single runs stay cheap, sweeps share compiles
+    b_pad = 1 if b_real == 1 else _bucket_pow2(b_real, 8)
+    cells = list(cells) + [(POLICY_IDS[_INERT[0]], PREFETCH_IDS[_INERT[1]], n_blocks + 1)] * (b_pad - b_real)
+    states = states + [init_state(n_blocks)] * (b_pad - b_real)
+    ev = _pad_events(ev)
+    pol = jnp.asarray(np.array([c[0] for c in cells], np.int32))
+    pf = jnp.asarray(np.array([c[1] for c in cells], np.int32))
+    cap = jnp.asarray(np.array([c[2] for c in cells], np.int32))
+    nv = jnp.full(b_pad, n_valid, jnp.int32)
+    out_states, outs = _run_events(
+        _stack_states(states),
+        jnp.asarray(ev.blk), jnp.asarray(ev.nxt), jnp.asarray(ev.dt), jnp.asarray(ev.rl),
+        cap, pol, pf, nv,
+    )
+    return out_states, outs, b_real
+
+
+def _decompress_outs(outs_lane: dict, ev: Events) -> dict:
+    """Expand per-event scan outputs back to per-access arrays."""
+    e = len(ev.blk)
+    fault = np.zeros(ev.n_access, bool)
+    thrash = np.zeros(ev.n_access, np.int32)
+    ev_fault = np.asarray(outs_lane["fault"])[:e]
+    ev_thrash = np.asarray(outs_lane["thrash"])[:e]
+    ev_we = np.asarray(outs_lane["was_evicted"])[:e]
+    fault[ev.dt] = ev_fault
+    thrash[ev.dt] = ev_thrash
+    was_evicted = np.repeat(ev_we, ev.rl)
+    return {"fault": fault, "thrash": thrash, "was_evicted": was_evicted}
+
+
+def run_segment(
+    state: SimState,
+    blocks: np.ndarray,
+    next_use: np.ndarray,
+    *,
+    capacity: int,
+    policy: str,
+    prefetch: str,
+    n_valid: int,
+    want_outs: bool = True,
+):
+    """Run one trace segment (compress -> batched scan -> decompress)."""
+    state = _ensure_key(state)
+    ev = compress_events(blocks, next_use)
+    if ev.n_access == 0:
+        z = np.zeros(0)
+        return state, {"fault": z.astype(bool), "thrash": z.astype(np.int32), "was_evicted": z.astype(bool)}
+    cell = (POLICY_IDS[policy], PREFETCH_IDS[prefetch], int(capacity))
+    out_states, outs, _ = _run_cells([state], ev, [cell], n_valid)
+    st = _lane(out_states, 0)
+    return st, (_decompress_outs(_lane(outs, 0), ev) if want_outs else None)
+
+
+def _run_segment(state, blocks, next_use, n_blocks=None, capacity=None, policy=None, prefetch=None, n_valid=None, want_outs=True):
+    """Back-compat wrapper with the pre-refactor keyword signature."""
+    return run_segment(
+        state, np.asarray(blocks), np.asarray(next_use),
+        capacity=capacity, policy=policy, prefetch=prefetch, n_valid=n_valid, want_outs=want_outs,
+    )
 
 
 class SimResult(NamedTuple):
@@ -233,12 +474,6 @@ def capacity_for(n_blocks: int, oversubscription: float) -> int:
     return max(int(np.floor(n_blocks / oversubscription)), 1)
 
 
-@partial(jax.jit, static_argnames=("n_blocks", "capacity", "policy", "prefetch", "n_valid"))
-def _run_segment(state, blocks, next_use, n_blocks, capacity, policy, prefetch, n_valid):
-    step = make_step(n_blocks, capacity, policy, prefetch, n_valid)
-    return jax.lax.scan(step, state, (blocks, next_use))
-
-
 def pad_blocks(n_valid: int) -> int:
     return int(np.ceil(n_valid / CHUNK_BLOCKS) * CHUNK_BLOCKS)
 
@@ -255,28 +490,75 @@ def run(
     """Run a full trace under (policy x prefetch) at an oversubscription level."""
     assert policy in POLICIES and prefetch in PREFETCHERS
     blocks = trace.block.astype(np.int32)
-    nb = pad_blocks(trace.n_blocks)
     cap = capacity_for(trace.n_blocks, oversubscription)
-    nxt = precompute_next_use(blocks, nb)
-    st = state if state is not None else init_state(nb, seed)
-    st, outs = _run_segment(
-        st, jnp.asarray(blocks), jnp.asarray(nxt),
-        n_blocks=nb, capacity=cap, policy=policy,
+    nxt = next_use_for(trace)
+    if state is not None:
+        st = _ensure_key(jax.tree.map(jnp.asarray, state))
+    else:
+        st = init_state(bucket_blocks(trace.n_blocks), seed)
+    st, outs = run_segment(
+        st, blocks, nxt,
+        capacity=cap, policy=policy,
         prefetch="demand" if prefetch == "none" else prefetch,
         n_valid=trace.n_blocks,
     )
     st = st._replace(key=jax.random.key_data(st.key))  # numpy-safe
     return SimResult(
         state=jax.tree.map(np.asarray, st),
-        fault=np.asarray(outs["fault"]),
-        thrash=np.asarray(outs["thrash"]),
-        was_evicted=np.asarray(outs["was_evicted"]),
+        fault=outs["fault"],
+        thrash=outs["thrash"],
+        was_evicted=outs["was_evicted"],
     )
 
 
-def apply_prefetch(state: SimState, blocks_mask, *, capacity: int, policy: str = "learned") -> SimState:
-    """Stage externally-predicted prefetches (the learned runtime's async path)."""
-    newly = jnp.asarray(blocks_mask) & ~state.resident & ~state.pinned
+def run_batch(
+    trace: Trace,
+    cells: list[tuple[str, str, float]],
+    *,
+    seed: int = 0,
+    seeds: list[int] | None = None,
+) -> list[dict]:
+    """Sweep many (policy, prefetch, oversubscription) cells over one trace
+    in a single vmapped scan; returns one stats dict per cell, bit-identical
+    (for non-``random`` policies) to running each cell through :func:`run`.
+    """
+    blocks = trace.block.astype(np.int32)
+    nb = bucket_blocks(trace.n_blocks)
+    ev = compress_events(blocks, next_use_for(trace))
+    id_cells = []
+    for policy, prefetch, oversub in cells:
+        assert policy in POLICIES and prefetch in PREFETCHERS
+        id_cells.append((
+            POLICY_IDS[policy],
+            PREFETCH_IDS["demand" if prefetch == "none" else prefetch],
+            capacity_for(trace.n_blocks, oversub),
+        ))
+    lane_seeds = seeds if seeds is not None else [seed] * len(cells)
+    states = [init_state(nb, s) for s in lane_seeds]
+    out_states, _, b_real = _run_cells(states, ev, id_cells, trace.n_blocks)
+    # one host sync for the whole sweep
+    counters = jax.device_get({
+        "thrash_events": out_states.thrash_events,
+        "faults": out_states.faults,
+        "migrations": out_states.migrations,
+        "zero_copy": out_states.zero_copy,
+        "occupancy": out_states.occupancy,
+    })
+    return [
+        {
+            "pages_thrashed": int(counters["thrash_events"][i]) * PAGES_PER_BLOCK,
+            "faults": int(counters["faults"][i]),
+            "migrated_blocks": int(counters["migrations"][i]),
+            "zero_copy": int(counters["zero_copy"][i]),
+            "occupancy": int(counters["occupancy"][i]),
+        }
+        for i in range(b_real)
+    ]
+
+
+@jax.jit
+def _apply_prefetch_jit(state: SimState, mask, capacity, policy_id):
+    newly = mask & ~state.resident & ~state.pinned
     n_new = newly.sum(dtype=jnp.int32)
     thrash = (newly & state.evicted_once).sum(dtype=jnp.int32)
     interval_now = state.fault_count // INTERVAL
@@ -288,4 +570,13 @@ def apply_prefetch(state: SimState, blocks_mask, *, capacity: int, policy: str =
         last_interval=jnp.where(newly, interval_now, state.last_interval),
         last_access=jnp.where(newly, state.time, state.last_access),
     )
-    return _evict_until_fit(st, capacity, policy, jnp.zeros_like(newly), interval_now)
+    return _evict_fit(st, capacity, policy_id, jnp.zeros_like(newly), interval_now, state.time)
+
+
+def apply_prefetch(state: SimState, blocks_mask, *, capacity: int, policy: str = "learned") -> SimState:
+    """Stage externally-predicted prefetches (the learned runtime's async path)."""
+    state = _ensure_key(state)
+    return _apply_prefetch_jit(
+        state, jnp.asarray(blocks_mask),
+        jnp.asarray(capacity, jnp.int32), jnp.asarray(POLICY_IDS[policy], jnp.int32),
+    )

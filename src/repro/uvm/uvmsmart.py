@@ -23,12 +23,12 @@ from repro.uvm.trace import Trace
 
 
 def run_uvmsmart(trace: Trace, *, oversubscription: float = 1.25, epoch: int = 2048, seed: int = 0):
-    nb = S.pad_blocks(trace.n_blocks)
+    nb = S.bucket_blocks(trace.n_blocks)
     cap = S.capacity_for(trace.n_blocks, oversubscription)
     state = S.init_state(nb, seed)
     classifier = PatternClassifier()
     blocks = trace.block.astype(np.int32)
-    nxt = S.precompute_next_use(blocks, nb)
+    nxt = S.next_use_for(trace)  # cached per trace across cells
 
     import jax.numpy as jnp
 
@@ -51,8 +51,9 @@ def run_uvmsmart(trace: Trace, *, oversubscription: float = 1.25, epoch: int = 2
         else:  # regular / mixed / reuse
             policy, prefetch = "lru", "tree"
         state, _ = S._run_segment(
-            state, jnp.asarray(blocks[lo:hi]), jnp.asarray(nxt[lo:hi]),
+            state, blocks[lo:hi], nxt[lo:hi],
             n_blocks=nb, capacity=cap, policy=policy, prefetch=prefetch, n_valid=trace.n_blocks,
+            want_outs=False,  # the epoch loop only carries the state
         )
 
     stats = {

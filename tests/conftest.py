@@ -10,6 +10,18 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
+
+# Share the persistent XLA compilation cache with benchmarks/ (same dir as
+# benchmarks.common): a test run pre-warms the simulator/predictor compiles,
+# so a benchmark run right after starts from warm executables.
+try:
+    jax.config.update(
+        "jax_compilation_cache_dir",
+        os.environ.get("REPRO_JAX_CACHE", str(Path.home() / ".cache" / "repro_jax")),
+    )
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.3)
+except Exception:
+    pass
 import pytest  # noqa: E402
 
 from repro.configs.base import ShapeConfig  # noqa: E402

@@ -3,8 +3,6 @@ prediction-frequency table, feature extraction."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import losses, pattern
 from repro.core.features import DeltaVocab, FeatureStream, extract
@@ -128,20 +126,7 @@ def test_storage_matches_paper():
 
 # --- features --------------------------------------------------------------------
 
-@settings(max_examples=10, deadline=None)
-@given(pages=st.lists(st.integers(0, 500), min_size=15, max_size=80))
-def test_feature_windows_alignment(pages):
-    pages = np.asarray(pages, np.int32)
-    n = len(pages)
-    tr = T.Trace("x", pages, np.zeros(n, np.int32), np.zeros(n, np.int32), np.zeros(n, np.int32), 512)
-    vocab = DeltaVocab(256)
-    fs = extract(tr, vocab, history=4)
-    # label at sample i is the delta class of access t_index[i]
-    deltas = np.diff(pages.astype(np.int64), prepend=pages[0])
-    for i in range(len(fs)):
-        t = fs.t_index[i]
-        assert fs.label[i] == vocab.table.get(int(deltas[t]), fs.label[i])
-        assert fs.label_page[i] == pages[t]
+# (test_feature_windows_alignment moved to test_properties.py — hypothesis-guarded)
 
 
 def test_stream_matches_batch_extract():

@@ -1,0 +1,63 @@
+"""Bit-exactness suite for the simulator fast path (ISSUE 1 tentpole).
+
+The committed goldens in tests/golden/sim_golden.json were produced by the
+pre-refactor per-access scan (now frozen as repro.uvm.reference) for all 11
+benchmarks x {lru, belady, hpe, learned} x {demand, tree} x {1.25, 1.5}.
+The packed-priority / fault-event-compressed fast path — single-run AND
+vmapped batch — must reproduce every counter exactly.
+
+(`random` is exempt by documented contract: its draws depend on the padded
+state shape. Random-trace equivalence against the live reference, including
+per-access outputs and final state arrays, is covered by the hypothesis
+tests in test_properties.py.)
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.uvm import simulator as S
+from repro.uvm import trace as T
+
+GOLDEN = json.loads((Path(__file__).parent / "golden" / "sim_golden.json").read_text())
+SCALE, CAP = 0.25, 2000  # must match tests/golden/generate_sim_golden.py
+COUNTERS = ("pages_thrashed", "faults", "migrated_blocks", "zero_copy")
+
+
+def _trace(name):
+    tr = T.get_trace(name, scale=SCALE)
+    return tr.slice(0, min(len(tr), CAP))
+
+
+@pytest.mark.parametrize("name", sorted(T.BENCHMARKS))
+def test_counters_match_prerefactor_golden(name):
+    tr = _trace(name)
+    cells = [
+        (pol, pf, os_)
+        for pol in ("lru", "belady", "hpe", "learned")
+        for pf in ("demand", "tree")
+        for os_ in (1.25, 1.5)
+    ]
+    # the whole benchmark row in ONE vmapped scan
+    batch = S.run_batch(tr, cells)
+    for (pol, pf, os_), got in zip(cells, batch):
+        want = GOLDEN[f"{name}|{pol}|{pf}|{os_}"]
+        assert {k: got[k] for k in COUNTERS} == want, (name, pol, pf, os_)
+
+
+def test_golden_covers_full_matrix():
+    assert len(GOLDEN) == 11 * 4 * 2 * 2
+
+
+def test_single_run_matches_golden_spot_checks():
+    """A few cells through the unbatched path too (it shares the scan but
+    not the lane padding with run_batch)."""
+    for name, pol, pf, os_ in (
+        ("NW", "belady", "tree", 1.25),
+        ("Hotspot", "hpe", "demand", 1.5),
+        ("BICG", "learned", "tree", 1.5),
+        ("StreamTriad", "lru", "tree", 1.25),
+    ):
+        got = S.run(_trace(name), policy=pol, prefetch=pf, oversubscription=os_).stats
+        want = GOLDEN[f"{name}|{pol}|{pf}|{os_}"]
+        assert {k: got[k] for k in COUNTERS} == want, (name, pol, pf, os_)

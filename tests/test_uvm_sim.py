@@ -1,9 +1,6 @@
-"""UVM simulator invariants — including hypothesis property tests over random
-traces."""
+"""UVM simulator invariants (hypothesis property tests over random traces
+live in test_properties.py, guarded on hypothesis being installed)."""
 import numpy as np
-import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.uvm import simulator as S
 from repro.uvm import trace as T
@@ -14,39 +11,6 @@ def _trace_from_blocks(blocks, n_blocks):
     pages = blocks * T.PAGES_PER_BLOCK
     n = len(pages)
     return T.Trace("h", pages, np.zeros(n, np.int32), np.zeros(n, np.int32), np.zeros(n, np.int32), n_blocks * T.PAGES_PER_BLOCK)
-
-
-@settings(max_examples=12, deadline=None)
-@given(
-    blocks=st.lists(st.integers(0, 31), min_size=20, max_size=120),
-    policy=st.sampled_from(["lru", "random", "hpe", "learned"]),
-)
-def test_invariants_random_traces(blocks, policy):
-    tr = _trace_from_blocks(blocks, 32)
-    res = S.run(tr, policy=policy, prefetch="demand", oversubscription=1.5)
-    st_ = res.state
-    cap = S.capacity_for(tr.n_blocks, 1.5)
-    assert int(st_.occupancy) <= cap
-    assert int(st_.resident.sum()) == int(st_.occupancy)
-    # thrash events can't exceed migrations, faults can't exceed accesses
-    assert int(st_.thrash_events) <= int(st_.migrations)
-    assert int(st_.faults) <= len(tr)
-    # every accessed block was resident or pinned at some point => no fault
-    # for blocks re-accessed while resident
-    assert int(st_.migrations) >= int(st_.faults) * 0  # migrations well-defined
-
-
-@settings(max_examples=10, deadline=None)
-@given(blocks=st.lists(st.integers(0, 23), min_size=40, max_size=160))
-def test_belady_minimizes_faults(blocks):
-    """Belady's MIN provably minimises misses: with demand migration,
-    faults(Belady) <= faults(any other policy)."""
-    oversub = 1.6
-    tr = _trace_from_blocks(blocks, 24)
-    f_bel = S.run(tr, policy="belady", prefetch="demand", oversubscription=oversub).stats["faults"]
-    for policy in ("lru", "random", "hpe"):
-        f = S.run(tr, policy=policy, prefetch="demand", oversubscription=oversub).stats["faults"]
-        assert f_bel <= f, f"belady {f_bel} > {policy} {f}"
 
 
 def test_no_oversubscription_no_thrash():
@@ -127,3 +91,56 @@ def test_table_iii_delta_growth():
     assert srad[-1] > srad[0]
     stream = unique_deltas_per_phase(T.get_trace("StreamTriad", scale=0.6))
     assert stream[-1] <= stream[0] + 2
+
+
+def test_resume_state_roundtrip():
+    """run() returns `key` as raw key_data; feeding that state back in (the
+    documented resume path) must re-wrap it — and a segmented run must match
+    the single-shot run exactly for time-consistent policies."""
+    tr = T.get_trace("Hotspot", scale=0.2)
+    half = len(tr) // 2
+    for policy in ("lru", "random"):
+        full = S.run(tr, policy=policy, prefetch="tree", oversubscription=1.25, seed=3)
+        first = S.run(tr.slice(0, half), policy=policy, prefetch="tree", oversubscription=1.25, seed=3)
+        assert isinstance(first.state.key, np.ndarray)  # raw key_data round-trips
+        resumed = S.run(tr.slice(half, len(tr)), policy=policy, prefetch="tree",
+                        oversubscription=1.25, state=first.state)
+        assert resumed.stats == full.stats, policy
+        np.testing.assert_array_equal(resumed.state.resident, full.state.resident)
+        assert int(resumed.state.time) == len(tr)
+
+
+def test_precompute_next_use_matches_scalar_loop():
+    rng = np.random.default_rng(0)
+    blocks = rng.integers(0, 37, 500).astype(np.int32)
+    got = S.precompute_next_use(blocks, 37)
+    # scalar reference
+    ref = np.full(len(blocks), S.NO_USE, np.int64)
+    last = np.full(37, S.NO_USE, np.int64)
+    for t in range(len(blocks) - 1, -1, -1):
+        ref[t] = last[blocks[t]]
+        last[blocks[t]] = t
+    np.testing.assert_array_equal(got, np.minimum(ref, S.NO_USE).astype(np.int32))
+    assert S.precompute_next_use(np.zeros(0, np.int32), 4).shape == (0,)
+
+
+def test_compress_events_roundtrip():
+    blocks = np.array([3, 3, 3, 1, 1, 2, 3, 3], np.int32)
+    nxt = S.precompute_next_use(blocks, 4)
+    ev = S.compress_events(blocks, nxt)
+    np.testing.assert_array_equal(ev.blk, [3, 1, 2, 3])
+    np.testing.assert_array_equal(ev.dt, [0, 3, 5, 6])
+    np.testing.assert_array_equal(ev.rl, [3, 2, 1, 2])
+    # the event carries the LAST access's next-use (the value that must
+    # persist in state), and run lengths cover the stream exactly
+    np.testing.assert_array_equal(ev.nxt, nxt[ev.dt + ev.rl - 1])
+    assert ev.rl.sum() == len(blocks) == ev.n_access
+
+
+def test_run_batch_matches_single_runs():
+    tr = T.get_trace("ATAX", scale=0.3)
+    cells = [(p, f, o) for p in ("lru", "belady", "hpe") for f in ("demand", "tree") for o in (1.25, 1.5)]
+    batch = S.run_batch(tr, cells)
+    for (p, f, o), got in zip(cells, batch):
+        want = S.run(tr, policy=p, prefetch=f, oversubscription=o).stats
+        assert got == want, (p, f, o)
