@@ -134,14 +134,36 @@ class Ctx:
             list(pool.map(run_one, todo[1:]))
 
     def ours_many(self, names: list, oversub: float = 1.25, **kw) -> None:
-        """Warm the `ours` cache for many benchmarks concurrently (each run
-        clones the pretrained table and owns its freq table / classifier /
-        simulator state)."""
+        """Warm the `ours` cache for many benchmarks.
+
+        Two engines, picked adaptively:
+
+        * `R.run_ours_many` — every benchmark in lockstep, vmapping
+          predict/train/simulate across lanes (each lane still clones the
+          pretrained table and owns its freq table / classifier / simulator
+          state, so results match per-benchmark runs), with the lane axis
+          sharded across devices.  The default whenever >1 device is
+          visible; force with REPRO_OURS_BATCHED=1.
+        * thread-pooled serial runs — the default on a single device, where
+          the batched engine's extra per-process jit traces cost more than
+          its one-dispatch-per-stage saves (see BENCH_sim.json).  Force
+          with REPRO_OURS_BATCHED=0.
+        """
         self.pretrained()  # build (or load) the shared table once, serially
-        self._warm_many(
-            lambda n: self.ours(n, oversub, **kw),
-            [n for n in names if (n, oversub, tuple(sorted(kw.items()))) not in self._ours],
+        todo = [n for n in names if (n, oversub, tuple(sorted(kw.items()))) not in self._ours]
+        if not todo:
+            return
+        knob = os.environ.get("REPRO_OURS_BATCHED", "")
+        batched = len(todo) > 1 and knob != "0" and (knob == "1" or len(jax.devices()) > 1)
+        if not batched:
+            self._warm_many(lambda n: self.ours(n, oversub, **kw), todo)
+            return
+        results = R.run_ours_many(
+            [self.trace(n) for n in todo], self.pcfg, self.tcfg,
+            oversubscription=oversub, tables=[self.pretrained() for _ in todo], **kw,
         )
+        for n, res in zip(todo, results):
+            self._ours[(n, oversub, tuple(sorted(kw.items())))] = res
 
     def uvmsmart_many(self, names: list, oversub: float = 1.25) -> None:
         """Warm the UVMSmart cache concurrently (independent runs)."""

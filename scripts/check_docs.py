@@ -1,0 +1,85 @@
+"""Fail CI when the documented commands drift from the real entry points.
+
+Checks, without running any benchmark:
+  * every ``python -m <module>`` mentioned in docs/REPRODUCING.md and
+    README.md answers ``--help`` (argparse wiring exists),
+  * every ``--flag`` a doc attaches to a module appears in that module's
+    ``--help`` output,
+  * every ``--only <target>`` mentioned for benchmarks.run is a real key of
+    its SUITES registry,
+  * every repo-relative path the docs reference exists.
+
+    PYTHONPATH=src python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = [ROOT / "docs" / "REPRODUCING.md", ROOT / "README.md"]
+
+# python -m <module> [args ...] — up to a backtick, pipe or line end
+CMD_RE = re.compile(r"python (?:-m (?P<mod>[\w\.]+)|(?P<script>[\w\./]+\.py))(?P<args>[^`|\n]*)")
+PATH_RE = re.compile(r"\b(?:src|tests|docs|examples|experiments|benchmarks|scripts)/[\w\./-]+")
+
+
+def run_help(module: str) -> str:
+    out = subprocess.run(
+        [sys.executable, "-m", module, "--help"],
+        capture_output=True, text=True, cwd=ROOT, timeout=240,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin", "JAX_PLATFORMS": "cpu", "HOME": str(Path.home())},
+    )
+    assert out.returncode == 0, f"`python -m {module} --help` failed:\n{out.stderr[-2000:]}"
+    return out.stdout
+
+
+def main() -> int:
+    failures = []
+    helps: dict[str, str] = {}
+    cmds = []
+    for doc in DOCS:
+        text = doc.read_text()
+        cmds += [(doc.name, m) for m in CMD_RE.finditer(text)]
+        for p in PATH_RE.findall(text):
+            if not (ROOT / p.rstrip(".")).exists():
+                failures.append(f"{doc.name}: referenced path does not exist: {p}")
+
+    for doc_name, m in cmds:
+        mod, script, args = m.group("mod"), m.group("script"), m.group("args") or ""
+        if script:
+            if not (ROOT / script).exists():
+                failures.append(f"{doc_name}: script does not exist: {script}")
+            continue
+        if mod not in helps:
+            try:
+                helps[mod] = run_help(mod)
+            except AssertionError as e:
+                failures.append(f"{doc_name}: {e}")
+                helps[mod] = ""
+                continue
+        for flag in re.findall(r"--[\w-]+", args):
+            if flag not in helps[mod]:
+                failures.append(f"{doc_name}: `{flag}` not in `python -m {mod} --help` ({m.group(0).strip()!r})")
+        if mod == "benchmarks.run":
+            sys.path[:0] = [str(ROOT), str(ROOT / "src")]
+            from benchmarks.run import SUITES  # noqa: PLC0415
+
+            only = re.search(r"--only((?:\s+[\w]+)+)", args)
+            for target in (only.group(1).split() if only else []):
+                if target not in SUITES:
+                    failures.append(f"{doc_name}: `--only {target}` is not a benchmarks.run suite")
+
+    if failures:
+        print("docs drift detected:")
+        for f in failures:
+            print("  -", f)
+        return 1
+    print(f"docs ok: {len(cmds)} commands validated against --help, {len(helps)} modules probed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

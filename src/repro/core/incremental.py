@@ -26,9 +26,25 @@ from repro.core.baselines_nn import make_model
 from repro.core.features import DeltaVocab, FeatureSet, FeatureStream
 from repro.core.model_table import Entry, ModelTable
 from repro.core.pattern import PatternClassifier
+from repro.distributed.compat import lane_shardings
 from repro.optim import adamw
 from repro.util import pow2_bucket as _pow2_rows
 from repro.uvm.trace import Trace
+
+
+def _shard_lane_trees(n_lanes: int, *trees):
+    """Commit lane-stacked pytrees to a cross-device lanes sharding (lanes
+    are independent models/groups, so GSPMD partitions the vmapped dispatch
+    without communication).  No-op on a single device or when the lane
+    count does not divide the devices; any device_put failure falls back to
+    unsharded inputs."""
+    lane_sh, _ = lane_shardings(n_lanes)
+    if lane_sh is None:
+        return trees
+    try:
+        return tuple(jax.tree.map(lambda x: jax.device_put(x, lane_sh), t) for t in trees)
+    except Exception:
+        return trees
 
 
 @dataclasses.dataclass
@@ -119,6 +135,17 @@ def _build_trainer_fns(pcfg: PredictorConfig, kind: str, lr: float):
         (params, opt_state, _), _ = jax.lax.scan(body, (params, opt_state, step0), (idx_mat, valid))
         return params, opt_state
 
+    # Cross-benchmark lanes: the SAME per-group computation vmapped over a
+    # leading lane axis (params, features, labels, schedules, n_active all
+    # stacked). One dispatch serves every benchmark in the shape bucket.
+    def eval_scan_many(params, feats, labels, pidx, n_active):
+        return jax.vmap(eval_scan)(params, feats, labels, pidx, n_active)
+
+    def train_scan_many(params, opt_state, step0, feats, labels, et, prev_params, idx_mat, valid, n_active, use_lucir, use_thrash):
+        return jax.vmap(
+            lambda p, o, s, f, l, e, pp, im, v, na: train_scan(p, o, s, f, l, e, pp, im, v, na, use_lucir, use_thrash)
+        )(params, opt_state, step0, feats, labels, et, prev_params, idx_mat, valid, n_active)
+
     # n_active is a traced arg (class count grows); use_lucir/use_thrash static
     return (
         init_fn, forward, opt,
@@ -126,6 +153,8 @@ def _build_trainer_fns(pcfg: PredictorConfig, kind: str, lr: float):
         jax.jit(eval_step),
         jax.jit(eval_scan),
         jax.jit(train_scan, static_argnames=("use_lucir", "use_thrash")),
+        jax.jit(eval_scan_many),
+        jax.jit(train_scan_many, static_argnames=("use_lucir", "use_thrash")),
     )
 
 
@@ -146,7 +175,8 @@ class Trainer:
         if cache_key not in _TRAINER_FN_CACHE:
             _TRAINER_FN_CACHE[cache_key] = _build_trainer_fns(pcfg, kind, tcfg.lr)
         (self.init_fn, self.forward, self.opt, self._train_step, self._eval_step,
-         self._eval_scan, self._train_scan) = _TRAINER_FN_CACHE[cache_key]
+         self._eval_scan, self._train_scan,
+         self._eval_scan_many, self._train_scan_many) = _TRAINER_FN_CACHE[cache_key]
 
     @staticmethod
     def _stage(fs: FeatureSet):
@@ -172,14 +202,10 @@ class Trainer:
     def new_params(self, seed: int = 0):
         return self.init_fn(jax.random.key(seed))
 
-    def evaluate(self, params, fs: FeatureSet, n_active: int):
-        """Top-1 correctness per sample + predicted class ids (all batches in
-        one scanned dispatch; only the final padded batch carries junk rows,
-        which are sliced off exactly as the per-batch loop did)."""
+    def _eval_schedule(self, n: int) -> np.ndarray:
+        """Padded batch-index matrix for one group (host-identical to the
+        old per-batch loop's index construction)."""
         B = self.tcfg.batch_size
-        n = len(fs)
-        if n == 0:
-            return np.zeros(0, bool), np.zeros(0, np.int32)
         rows = []
         for lo in range(0, n, B):
             idx = np.arange(lo, min(lo + B, n))
@@ -187,7 +213,16 @@ class Trainer:
             rows.append(np.concatenate([idx, np.zeros(pad, int)]) if pad else idx)
         n_rows = len(rows)
         rows += [np.zeros(B, np.int64)] * (_pow2_rows(n_rows, 8) - n_rows)  # compile-bucket rows
-        pidx = np.stack(rows).astype(np.int32)
+        return np.stack(rows).astype(np.int32)
+
+    def evaluate(self, params, fs: FeatureSet, n_active: int):
+        """Top-1 correctness per sample + predicted class ids (all batches in
+        one scanned dispatch; only the final padded batch carries junk rows,
+        which are sliced off exactly as the per-batch loop did)."""
+        n = len(fs)
+        if n == 0:
+            return np.zeros(0, bool), np.zeros(0, np.int32)
+        pidx = self._eval_schedule(n)
         feats, labels = self._stage(fs)
         cs, ps = self._eval_scan(params, feats, labels, jnp.asarray(pidx), n_active)
         out = jax.device_get((cs, ps))  # one sync for the whole group
@@ -195,27 +230,71 @@ class Trainer:
         pred = out[1].reshape(-1)[:n].astype(np.int32)
         return correct, pred
 
+    # Below this lane count, batched dispatch is not worth a fresh vmapped
+    # trace: the serial jits are already compiled (and shared with every
+    # serial caller).  At or above it, lane counts pad to powers of two so
+    # every sweep round hits one of a handful of compiled shapes.
+    MIN_VMAP_LANES = 4
+
+    @staticmethod
+    def _pad_lanes(lanes: list, b_pad: int) -> list:
+        """Pad a lane group by replicating its first lane (outputs of the
+        padding lanes are discarded; replication keeps every array shape
+        and dtype identical without inventing degenerate inputs)."""
+        return lanes + [lanes[0]] * (b_pad - len(lanes))
+
+    def evaluate_many(self, params_list: list, fs_list: list, n_active_list: list):
+        """Batched :meth:`evaluate` across lanes (one model + feature group
+        per lane — the cross-benchmark case).  Lanes are grouped by their
+        padded (sample, schedule) shapes; each group runs as one vmapped
+        scan over stacked params.  Returns one (correct, pred) per lane."""
+        results: list = [None] * len(fs_list)
+        groups: dict = {}
+        for i, fs in enumerate(fs_list):
+            n = len(fs)
+            if n == 0:
+                results[i] = (np.zeros(0, bool), np.zeros(0, np.int32))
+                continue
+            pidx = self._eval_schedule(n)  # host-cheap; shapes decide the bucket
+            groups.setdefault((_pow2_rows(n, 1024), pidx.shape[0]), []).append((i, pidx))
+        for lanes in groups.values():
+            if len(lanes) < self.MIN_VMAP_LANES:
+                for i, _ in lanes:
+                    results[i] = self.evaluate(params_list[i], fs_list[i], n_active_list[i])
+                continue
+            idxs = [i for i, _ in lanes]
+            # device staging only happens once the bucket is known to vmap
+            staged = [(i, *self._stage(fs_list[i]), p) for i, p in lanes]
+            staged = self._pad_lanes(staged, _pow2_rows(len(staged), self.MIN_VMAP_LANES))
+            pidxs = [i for i, *_ in staged]
+            params = jax.tree.map(lambda *xs: jnp.stack(xs), *[params_list[i] for i in pidxs])
+            feats = {k: jnp.stack([f[k] for _, f, _, _ in staged]) for k in staged[0][1]}
+            labels = jnp.stack([l for _, _, l, _ in staged])
+            pidx = jnp.asarray(np.stack([p for _, _, _, p in staged]))
+            na = jnp.asarray(np.array([n_active_list[i] for i in pidxs], np.int32))
+            lanes = staged
+            params, feats, labels, pidx, na = _shard_lane_trees(len(lanes), params, feats, labels, pidx, na)
+            cs, ps = self._eval_scan_many(params, feats, labels, pidx, na)
+            out = jax.device_get((cs, ps))  # one sync per shape bucket
+            for j, i in enumerate(idxs):
+                n = len(fs_list[i])
+                results[i] = (
+                    out[0][j].reshape(-1)[:n].astype(bool),
+                    out[1][j].reshape(-1)[:n].astype(np.int32),
+                )
+        return results
+
     def old_features(self, prev_params, fs: FeatureSet, idx):
         if prev_params is None:
             return None
         _, _, f = self._eval_step(prev_params, _batch_of(fs, idx), jnp.asarray(fs.label[idx]), 1)
         return f
 
-    def train_group(self, entry: Entry, fs: FeatureSet, n_active: int, *, in_et=None, use_lucir=False, rng=None):
-        """Fine-tune on one group (a few epochs) in ONE scanned dispatch.
-
-        The batch-index schedule (per-epoch permutation, full batches, the
-        tiny-group resize fallback) is built host-side with the exact rng
-        call sequence of the old per-batch loop, so the sequence of batches
-        — and therefore every float — is unchanged."""
+    def _train_schedule(self, n: int, rng):
+        """Padded batch-index schedule for one group (per-epoch permutation,
+        full batches, tiny-group resize fallback) — host-identical rng call
+        sequence to the original per-batch loop."""
         tc = self.tcfg
-        if entry.opt_state is None:
-            entry.opt_state = self.opt.init(entry.params)
-        n = len(fs)
-        if n == 0:
-            return entry
-        rng = np.random.default_rng(tc.seed if rng is None else rng)
-        use_l = use_lucir and entry.prev_params is not None
         rows = []
         for _ in range(tc.epochs):
             order = rng.permutation(n)
@@ -227,13 +306,27 @@ class Trainer:
         n_pad = _pow2_rows(n_steps, 16) - n_steps  # one compiled scan per step-count bucket
         rows += [np.zeros(tc.batch_size, np.int64)] * n_pad
         valid = np.arange(len(rows)) < n_steps
-        idx_mat = np.stack(rows).astype(np.int32)
+        return np.stack(rows).astype(np.int32), valid, n_steps
+
+    def _stage_et(self, in_et, n: int):
+        if in_et is None:
+            return jnp.zeros(1, bool)
+        et_np = np.asarray(in_et, bool)  # pad to the features' sample bucket
+        return jnp.asarray(np.concatenate([et_np, np.zeros(_pow2_rows(n, 1024) - n, bool)]))
+
+    def train_group(self, entry: Entry, fs: FeatureSet, n_active: int, *, in_et=None, use_lucir=False, rng=None):
+        """Fine-tune on one group (a few epochs) in ONE scanned dispatch."""
+        tc = self.tcfg
+        if entry.opt_state is None:
+            entry.opt_state = self.opt.init(entry.params)
+        n = len(fs)
+        if n == 0:
+            return entry
+        rng = np.random.default_rng(tc.seed if rng is None else rng)
+        use_l = use_lucir and entry.prev_params is not None
+        idx_mat, valid, n_steps = self._train_schedule(n, rng)
         feats, labels = self._stage(fs)
-        if in_et is not None:  # pad to the same sample bucket as the features
-            et_np = np.asarray(in_et, bool)
-            et = jnp.asarray(np.concatenate([et_np, np.zeros(_pow2_rows(n, 1024) - n, bool)]))
-        else:
-            et = jnp.zeros(1, bool)
+        et = self._stage_et(in_et, n)
         prev = entry.prev_params if use_l else entry.params  # ignored unless use_lucir
         entry.params, entry.opt_state = self._train_scan(
             entry.params, entry.opt_state, jnp.asarray(entry.step, jnp.int32),
@@ -244,6 +337,68 @@ class Trainer:
         entry.step += n_steps
         entry.n_updates += 1
         return entry
+
+    def train_group_many(self, entries: list, fs_list: list, n_active_list: list, *, in_et_list=None, use_lucir=False):
+        """Batched :meth:`train_group` across lanes (one entry + group per
+        lane).  Lanes are grouped by (sample bucket, step bucket, LUCIR
+        eligibility, thrash-term presence) — the static jit flags and array
+        shapes that must agree inside one vmapped dispatch.  Entries are
+        updated in place, exactly as the serial path does."""
+        tc = self.tcfg
+        in_et_list = in_et_list if in_et_list is not None else [None] * len(entries)
+        groups: dict = {}
+        for i, (entry, fs) in enumerate(zip(entries, fs_list)):
+            n = len(fs)
+            if n == 0:
+                continue
+            if entry.opt_state is None:
+                entry.opt_state = self.opt.init(entry.params)
+            use_l = use_lucir and entry.prev_params is not None
+            # the schedule is host-cheap and its shape decides the bucket;
+            # device staging waits until the bucket is known to vmap
+            idx_mat, valid, n_steps = self._train_schedule(n, np.random.default_rng(tc.seed))
+            key = (_pow2_rows(n, 1024), idx_mat.shape[0], use_l, in_et_list[i] is not None)
+            groups.setdefault(key, []).append((i, idx_mat, valid, n_steps))
+        for (_, _, use_l, use_thrash), lanes in groups.items():
+            if len(lanes) < self.MIN_VMAP_LANES:
+                for i, *_ in lanes:
+                    self.train_group(
+                        entries[i], fs_list[i], n_active_list[i],
+                        in_et=in_et_list[i], use_lucir=use_lucir,
+                    )
+                continue
+            idxs = [i for i, *_ in lanes]
+            lanes = [
+                (i, *self._stage(fs_list[i]), self._stage_et(in_et_list[i], len(fs_list[i])), m, v, s)
+                for i, m, v, s in lanes
+            ]
+            lanes = self._pad_lanes(lanes, _pow2_rows(len(lanes), self.MIN_VMAP_LANES))
+            pidxs = [i for i, *_ in lanes]
+            stack = lambda xs: jax.tree.map(lambda *a: jnp.stack(a), *xs)
+            params = stack([entries[i].params for i in pidxs])
+            opt_state = stack([entries[i].opt_state for i in pidxs])
+            prev = stack([entries[i].prev_params if use_l else entries[i].params for i in pidxs])
+            step0 = jnp.asarray(np.array([entries[i].step for i in pidxs], np.int32))
+            feats = {k: jnp.stack([f[k] for _, f, *_ in lanes]) for k in lanes[0][1]}
+            labels = jnp.stack([l for _, _, l, *_ in lanes])
+            et = jnp.stack([e for _, _, _, e, *_ in lanes])
+            idx_mat = jnp.asarray(np.stack([m for _, _, _, _, m, _, _ in lanes]))
+            valid = jnp.asarray(np.stack([v for _, _, _, _, _, v, _ in lanes]))
+            na = jnp.asarray(np.array([n_active_list[i] for i in pidxs], np.int32))
+            params, opt_state, step0, feats, labels, et, prev, idx_mat, valid, na = _shard_lane_trees(
+                len(lanes), params, opt_state, step0, feats, labels, et, prev, idx_mat, valid, na,
+            )
+            new_params, new_opt = self._train_scan_many(
+                params, opt_state, step0, feats, labels, et, prev, idx_mat, valid, na,
+                use_lucir=use_l, use_thrash=use_thrash,
+            )
+            # only the real lanes (padding replicas of lane 0 are discarded)
+            for j, (i, *_, n_steps) in zip(range(len(idxs)), lanes):
+                entries[i].params = jax.tree.map(lambda x: x[j], new_params)
+                entries[i].opt_state = jax.tree.map(lambda x: x[j], new_opt)
+                entries[i].step += n_steps
+                entries[i].n_updates += 1
+        return entries
 
 
 @dataclasses.dataclass

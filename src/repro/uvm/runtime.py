@@ -12,6 +12,13 @@ Per group of accesses:
   4. run the simulator segment (demand migration + learned eviction)
   5. fine-tune the model on the group, with the E∪T membership of each
      sample's target page feeding the thrashing term
+
+:func:`run_ours` runs one trace serially; :func:`run_ours_many` runs many
+traces in lockstep with the same per-lane semantics, batching predict /
+simulate / fine-tune across benchmarks through the vmapped ``Trainer``
+methods and ``simulator.run_segments_many`` (lanes bucketed by shape share
+one dispatch).  Lanes never share state, so per-benchmark results match
+stand-alone runs.
 """
 from __future__ import annotations
 
@@ -29,7 +36,7 @@ from repro.configs.predictor_paper import PredictorConfig
 from repro.core.features import DeltaVocab, FeatureStream
 from repro.core.incremental import TrainConfig, Trainer
 from repro.core.model_table import ModelTable
-from repro.core.pattern import PatternClassifier
+from repro.core.pattern import LINEAR, RANDOM, RANDOM_REUSE, PatternClassifier
 from repro.core.policy import PredictionFrequencyTable, predicted_blocks
 from repro.uvm import simulator as S
 from repro.uvm import timing
@@ -162,6 +169,33 @@ def pretrain_table(
     return table
 
 
+def _prefetch_warm(entry, pat) -> bool:
+    """Pattern-aware aggressiveness gate (see the comment in run_ours):
+    cold models and random-classified phases must not drive prefetch, and
+    the PREVIOUS group's measured accuracy must clear a pattern-dependent
+    floor before speculative migration is worth PCIe bandwidth."""
+    acc_floor = 0.4 if pat == LINEAR else 0.6
+    return entry.n_updates > 0 and pat not in (RANDOM, RANDOM_REUSE) and entry.last_acc >= acc_floor
+
+
+def _prefetch_mask(dense: np.ndarray, pred_pages: np.ndarray, last_acc: float, nb: int, cap: int) -> np.ndarray:
+    """Section IV-D prefetch candidate selection: gate by repeated
+    prediction and cap the in-flight budget, scaled by model confidence."""
+    pblocks = predicted_blocks(pred_pages, PAGES_PER_BLOCK)
+    pblocks = pblocks[pblocks < nb]
+    # confidence-scaled aggressiveness: a highly-accurate model may
+    # prefetch every predicted block; a mediocre one only repeated ones
+    min_freq = 1 if last_acc >= 0.7 else 2
+    pblocks = pblocks[dense[pblocks] >= min_freq]
+    budget = cap if last_acc >= 0.7 else cap // 2
+    if len(pblocks) > budget:
+        order = np.argsort(-dense[pblocks], kind="stable")
+        pblocks = pblocks[order[:budget]]
+    mask = np.zeros(nb, bool)
+    mask[pblocks] = True
+    return mask
+
+
 def run_ours(
     trace: Trace,
     pcfg: PredictorConfig | None = None,
@@ -205,8 +239,6 @@ def run_ours(
         n_active = max(vocab.n_classes, 2)
 
         in_et = None
-        from repro.core.pattern import LINEAR, RANDOM, RANDOM_REUSE
-
         # pattern-aware aggressiveness: cold models must not drive prefetch;
         # random-classified phases get eviction-only management (their delta
         # predictions are noise by construction — the same reasoning UVMSmart
@@ -216,8 +248,7 @@ def run_ours(
         # Pure streaming (no re-reference) is cheap to speculate on — wrong
         # blocks are evicted harmlessly; reuse patterns risk evicting hot
         # pages, so they need a higher confidence bar.
-        acc_floor = 0.4 if pat == LINEAR else 0.6
-        warm = entry.n_updates > 0 and pat not in (RANDOM, RANDOM_REUSE) and entry.last_acc >= acc_floor
+        warm = _prefetch_warm(entry, pat)
         if len(fs):
             # 2. strictly-causal prediction for the group
             corr, pred_cls = trainer.evaluate(entry.params, fs, n_active)
@@ -244,19 +275,7 @@ def run_ours(
             # amount of prefetching while the oversubscription level is high":
             # gate by repeated prediction + cap the in-flight budget, so a
             # weakly-trained predictor cannot flood the device with garbage.
-            pblocks = predicted_blocks(pred_pages, PAGES_PER_BLOCK)
-            pblocks = pblocks[pblocks < nb]
-            # confidence-scaled aggressiveness: a highly-accurate model may
-            # prefetch every predicted block (tree-prefetcher-like coverage);
-            # a mediocre one only repeatedly-predicted ones
-            min_freq = 1 if entry.last_acc >= 0.7 else 2
-            pblocks = pblocks[dense[pblocks] >= min_freq]
-            budget = cap if entry.last_acc >= 0.7 else cap // 2
-            if len(pblocks) > budget:
-                order = np.argsort(-dense[pblocks], kind="stable")
-                pblocks = pblocks[order[:budget]]
-            mask = np.zeros(nb, bool)
-            mask[pblocks] = True
+            mask = _prefetch_mask(dense, pred_pages, entry.last_acc, nb, cap)
             state = S.apply_prefetch(state, jnp.asarray(mask), capacity=cap, policy="learned")
 
         # 4. simulator segment under the learned policy
@@ -291,3 +310,161 @@ def run_ours(
     top1 = float(np.concatenate(all_corr).mean()) if all_corr else 0.0
     warm = float(np.concatenate(warm_corr).mean()) if warm_corr else top1
     return LearnedRunResult(stats, top1, n_pred, vocab.n_classes, table.n_models, per_group, warm)
+
+
+@dataclasses.dataclass
+class _Lane:
+    """Per-trace runtime state for :func:`run_ours_many` (each lane owns its
+    model table, vocabulary, classifier, frequency table and simulator
+    state — lanes are fully independent, exactly as serial runs are)."""
+
+    trace: Trace
+    table: ModelTable
+    vocab: DeltaVocab
+    stream: FeatureStream
+    classifier: PatternClassifier
+    freq_table: PredictionFrequencyTable
+    nb: int
+    cap: int
+    state: object
+    blocks: np.ndarray
+    nxt: np.ndarray
+    dtable: dict = dataclasses.field(default_factory=dict)
+    per_group: list = dataclasses.field(default_factory=list)
+    all_corr: list = dataclasses.field(default_factory=list)
+    warm_corr: list = dataclasses.field(default_factory=list)
+    n_pred: int = 0
+    last_interval: int = 0
+
+
+def run_ours_many(
+    traces: list[Trace],
+    pcfg: PredictorConfig | None = None,
+    tcfg: TrainConfig | None = None,
+    *,
+    oversubscription: float = 1.25,
+    kind: str = "transformer",
+    tables: list[ModelTable] | None = None,
+    use_thrash_term: bool = True,
+    use_lucir: bool = True,
+    seed: int = 0,
+) -> list[LearnedRunResult]:
+    """Run the full learned system over MANY traces in lockstep.
+
+    The per-group serial pipeline of :func:`run_ours` (classify -> predict
+    -> prefetch -> simulate -> fine-tune) is kept, but each stage is batched
+    across benchmarks: predictions and fine-tuning go through the vmapped
+    ``Trainer.evaluate_many`` / ``train_group_many`` (lanes bucketed by
+    shape share one dispatch), and simulator segments run through
+    :func:`repro.uvm.simulator.run_segments_many` (per-lane event streams,
+    one vmapped scan per shape bucket).  Lanes never interact — each trace
+    keeps its own model table, vocabulary, frequency table and simulator
+    state.  The simulator stages are exactly per-lane-equivalent; the
+    vmapped predictor reproduced serial floats bit-for-bit on CPU
+    (tests/test_system.py pins counters AND top1 against serial runs), but
+    a backend whose batched kernels round differently could shift a
+    prediction across a prefetch-gate threshold and with it the learned
+    run's counters — if paper-table stability across device counts matters
+    more than throughput, force the serial engine with
+    ``REPRO_OURS_BATCHED=0``.
+    """
+    pcfg = pcfg or PredictorConfig()
+    tcfg = tcfg or TrainConfig()
+    trainer = Trainer(pcfg, tcfg, kind)
+    lanes: list[_Lane] = []
+    for li, trace in enumerate(traces):
+        table = tables[li] if tables is not None else ModelTable(lambda s: trainer.new_params(s), n_slots=tcfg.table_slots)
+        vocab = DeltaVocab(pcfg.delta_vocab)
+        nb = S.bucket_blocks(trace.n_blocks)
+        lanes.append(_Lane(
+            trace=trace, table=table, vocab=vocab,
+            stream=FeatureStream(trace, vocab, pcfg.history, page_vocab=pcfg.page_vocab, pc_vocab=pcfg.pc_vocab, tb_vocab=pcfg.tb_vocab),
+            classifier=PatternClassifier(), freq_table=PredictionFrequencyTable(),
+            nb=nb, cap=S.capacity_for(trace.n_blocks, oversubscription),
+            state=S.init_state(nb, seed), blocks=trace.block.astype(np.int32),
+            nxt=S.next_use_for(trace),
+        ))
+    G = tcfg.group_size
+    max_n = max((len(l.trace) for l in lanes), default=0)
+    for g0 in range(0, max_n, G):
+        act = [l for l in lanes if g0 < len(l.trace)]
+        work = []  # (lane, g1, fs, pat, entry, n_active)
+        for l in act:
+            g1 = min(g0 + G, len(l.trace))
+            fs = l.stream.windows(g0, g1)
+            pat = l.classifier.classify(l.blocks[g0:g1], l.trace.kernel[g0:g1])
+            entry = l.table.get(pat)
+            work.append((l, g1, fs, pat, entry, max(l.vocab.n_classes, 2)))
+
+        # 2. strictly-causal predictions for every lane's group, one
+        #    vmapped dispatch per shape bucket
+        evals = [w for w in work if len(w[2])]
+        results = trainer.evaluate_many(
+            [w[4].params for w in evals], [w[2] for w in evals], [w[5] for w in evals],
+        )
+        for (l, g1, fs, pat, entry, n_active), (corr, pred_cls) in zip(evals, results):
+            warm = _prefetch_warm(entry, pat)  # uses the PREVIOUS group's acc
+            l.per_group.append(float(corr.mean()))
+            l.all_corr.append(corr)
+            if entry.n_updates > 0:
+                l.warm_corr.append(corr)
+            l.n_pred += len(fs)
+            entry.last_acc = float(corr.mean())  # informs the NEXT group's gate
+            # 3. predicted pages -> frequency table + staged prefetches
+            l.dtable.update(l.vocab.decode_table())
+            pred_delta = np.array([l.dtable.get(int(c), 0) for c in pred_cls], np.int64)
+            prev_page = l.trace.page[fs.t_index - 1].astype(np.int64)
+            pred_pages = np.clip(prev_page + pred_delta, 0, l.trace.n_pages - 1)
+            if warm:
+                l.freq_table.update(np.asarray(pred_pages, np.int64) // PAGES_PER_BLOCK)
+                dense = l.freq_table.dense(l.nb)
+                l.state = l.state._replace(freq=jnp.asarray(dense))
+                mask = _prefetch_mask(dense, pred_pages, entry.last_acc, l.nb, l.cap)
+                l.state = S.apply_prefetch(l.state, jnp.asarray(mask), capacity=l.cap, policy="learned")
+
+        # 4. simulator segments under the learned policy, vmapped across
+        #    lanes (each lane has its own compressed event stream)
+        cell = lambda l: (S.POLICY_IDS["learned"], S.PREFETCH_IDS["demand"], l.cap)
+        seg = S.run_segments_many(
+            [l.state for l, *_ in work],
+            [(l.blocks[g0:g1], l.nxt[g0:g1]) for l, g1, *_ in work],
+            [cell(l) for l, *_ in work],
+            [l.trace.n_blocks for l, *_ in work],
+        )
+        train_entries, train_fs, train_na, train_et = [], [], [], []
+        train_work = []
+        for (l, g1, fs, pat, entry, n_active), (state, outs) in zip(work, seg):
+            l.state = state
+            interval_now = int(state.fault_count) // S.INTERVAL
+            if interval_now > l.last_interval:
+                l.freq_table.on_intervals(interval_now - l.last_interval)
+                l.last_interval = interval_now
+            if len(fs):
+                if use_lucir:
+                    l.table.snapshot_prev(pat)
+                    entry = l.table.get(pat)
+                was_evicted = np.asarray(outs["was_evicted"])
+                train_entries.append(entry)
+                train_fs.append(fs)
+                train_na.append(n_active)
+                train_et.append(was_evicted[fs.t_index - g0] if use_thrash_term else None)
+                train_work.append((l, pat, entry))
+
+        # 5. fine-tune every lane's model, one vmapped dispatch per bucket
+        trainer.train_group_many(train_entries, train_fs, train_na, in_et_list=train_et, use_lucir=use_lucir)
+        for l, pat, entry in train_work:
+            l.table.put(pat, entry)
+
+    out = []
+    for l in lanes:
+        stats = {
+            "pages_thrashed": int(l.state.thrash_events) * PAGES_PER_BLOCK,
+            "faults": int(l.state.faults),
+            "migrated_blocks": int(l.state.migrations),
+            "zero_copy": int(l.state.zero_copy),
+            "occupancy": int(l.state.occupancy),
+        }
+        top1 = float(np.concatenate(l.all_corr).mean()) if l.all_corr else 0.0
+        warm = float(np.concatenate(l.warm_corr).mean()) if l.warm_corr else top1
+        out.append(LearnedRunResult(stats, top1, l.n_pred, l.vocab.n_classes, l.table.n_models, l.per_group, warm))
+    return out

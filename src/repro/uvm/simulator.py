@@ -21,8 +21,13 @@ Prefetchers (Section II-B):
     none     — alias of demand; the learned prefetcher stages its blocks via
                :func:`apply_prefetch` between scan segments (async analogue)
 
-Hot-path design (bit-identical to :mod:`repro.uvm.reference` for every
-policy except ``random``, whose draws depend on array padding):
+Hot-path design — bit-identical to :mod:`repro.uvm.reference` for every
+policy except ``random``: the random policy's victim draws are
+``fold_in(key, t)`` over the padded block axis, so its draws (and therefore
+its counters) depend on the padded state width, which the fast path is free
+to change.  That padding-PRNG dependence is the ONE documented divergence;
+every other policy's counters, per-access outputs and state arrays are
+exact (see tests/test_properties.py and tests/test_sim_equivalence.py).
 
   * **fault-event compression** — consecutive accesses to the same block
     cannot fault after the first (the block was just migrated and is
@@ -31,6 +36,22 @@ policy except ``random``, whose draws depend on array padding):
     (final ``last_access``/``next_use``, pinned ``zero_copy`` mass, the
     interval-boundary fix-up for the page-set chain). The scan length
     shrinks by the repeat-run hit rate (1x-10x on the paper's suite).
+  * **period-p event compression** — streaming traces interleave p arrays
+    (block stream ``b0 b1 b2 b0 b1 b2 ...``), which plain RLE cannot
+    shorten.  Fixed-period windows are detected host-side and each
+    position's repeat occurrences merge into one stride-p aggregate event.
+    Invariant: once the window's first period has run, a fault-free window
+    stays fault-free (no fault => no migration => no eviction => residency
+    frozen), so aggregates are pure bookkeeping.  Whether the window IS
+    fault-free depends on runtime state, so it is verified in-scan (the
+    ``pfault`` output); on divergence the segment transparently reruns on
+    plain RLE events.  Compression is thus a pure scan-length optimisation
+    with unconditionally exact counters (8x on AddVectors/StreamTriad).
+  * **device-sharded sweeps** — multi-lane scans commit their lane axis to
+    a 1-D mesh over ``jax.devices()`` when several devices are visible
+    (``REPRO_SIM_SHARD=0`` disables); lanes are independent, so GSPMD
+    partitions the sweep without communication and counters stay
+    bit-identical to single-device runs.
   * **packed-priority eviction** — every policy's victim key is one
     uniform padded 3-tuple of int32 arrays (constant for the whole step:
     nothing an eviction changes feeds back into the keys), so victim
@@ -54,6 +75,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.compat import lane_shardings
 from repro.util import pow2_bucket
 from repro.uvm.trace import PAGES_PER_BLOCK, Trace
 
@@ -141,36 +163,122 @@ def next_use_for(trace: Trace) -> np.ndarray:
 
 
 class Events(NamedTuple):
-    """Run-length-compressed access stream (host side).
+    """Compressed access stream (host side).
 
-    One event per maximal run of consecutive same-block accesses:
-    ``blk`` the block, ``nxt`` the next-use index of the run's LAST access
-    (the value ``next_use[blk]`` must hold after the run — the first
-    access's value is only ever read for the protected block itself, so it
-    cannot influence eviction), ``dt`` the run's first-access offset within
-    the segment, ``rl`` the run length (0 marks a padding no-op event).
+    One event covers ``rl`` accesses to block ``blk`` at segment offsets
+    ``dt, dt + stride, ..., dt + (rl-1)*stride`` (``rl`` = 0 marks a padding
+    no-op event).  ``nxt`` is the next-use index of the event's LAST covered
+    access — the value ``next_use[blk]`` must hold after the event; earlier
+    values are only ever read for the protected block itself, so they cannot
+    influence eviction.  Two compression modes produce events:
+
+    * ``stride == 1`` — a maximal run of consecutive same-block accesses.
+      The block is protected during its own step, so accesses after the
+      first cannot fault; merging them is unconditionally exact.
+    * ``stride == p > 1`` — one position of a period-``p`` window (the
+      ``_interleave`` idiom behind streaming traces): ``p`` distinct-ish
+      blocks repeated ``r`` times.  The window's first period is emitted as
+      ``p`` ordinary events; each position's remaining ``r-1`` occurrences
+      are merged into one aggregate event.  Aggregates are exact ONLY if no
+      covered access faults — verified at runtime via the ``pfault`` scan
+      output; on divergence the caller reruns with ``periodic=False``
+      (see :func:`run_segment` / :func:`run_batch`).
     """
 
     blk: np.ndarray  # int32 (E,)
     nxt: np.ndarray  # int32 (E,)
     dt: np.ndarray  # int32 (E,)
     rl: np.ndarray  # int32 (E,)
+    stride: np.ndarray  # int32 (E,) access-index gap between covered accesses
     n_access: int  # original segment length
 
 
-def compress_events(blocks: np.ndarray, next_use: np.ndarray) -> Events:
+P_MAX = 8  # largest interleave period the host-side detector looks for
+MIN_REPS = 4  # shortest window worth compressing (2p events vs ~r*p raw)
+
+
+def _rle_parts(b: np.ndarray, nxt: np.ndarray, lo: int, hi: int):
+    """Plain run-length events for the slice ``b[lo:hi]`` (stride == 1)."""
+    n = hi - lo
+    seg = b[lo:hi]
+    change = np.empty(n, bool)
+    change[0] = True
+    np.not_equal(seg[1:], seg[:-1], out=change[1:])
+    starts = (lo + np.nonzero(change)[0]).astype(np.int32)
+    run_len = np.diff(np.append(starts, hi)).astype(np.int32)
+    ends = starts + run_len - 1
+    return seg[change], nxt[ends], starts, run_len, np.ones(len(starts), np.int32)
+
+
+def _periodic_windows(b: np.ndarray) -> list[tuple[int, int, int]]:
+    """Detect non-overlapping fixed-period windows: ``(start, p, reps)``.
+
+    A window matches when ``b[t] == b[t-p]`` over its whole span.  Smaller
+    periods claim coverage first; a window is kept only when its 2p events
+    beat the run count plain RLE would emit for the same span.
+    """
+    n = len(b)
+    covered = np.zeros(n, bool)
+    boundary = np.empty(n, bool)  # boundary[i]: run starts at i (for the RLE-win check)
+    boundary[0] = True
+    np.not_equal(b[1:], b[:-1], out=boundary[1:])
+    run_count = np.concatenate([[0], np.cumsum(boundary)])  # runs in b[:i] = run_count[i]
+    wins = []
+    for p in range(2, P_MAX + 1):
+        if n < MIN_REPS * p:
+            break
+        m = b[p:] == b[:-p]
+        edges = np.flatnonzero(np.diff(np.concatenate([[False], m, [False]]).astype(np.int8)))
+        for s, e_m in zip(edges[0::2], edges[1::2]):
+            length = (e_m - s) + p  # accesses b[s : s+length] are period-p
+            if covered[s : s + length].any():
+                bad = np.flatnonzero(covered[s : s + length])
+                length = int(bad[0])
+            r = length // p
+            if r < MIN_REPS:
+                continue
+            length = r * p
+            # worth it only if RLE would emit more than our 2p events
+            if run_count[s + length] - run_count[s] <= 2 * p:
+                continue
+            covered[s : s + length] = True
+            wins.append((int(s), p, r))
+    wins.sort()
+    return wins
+
+
+def compress_events(blocks: np.ndarray, next_use: np.ndarray, *, periodic: bool = False) -> Events:
     b = np.asarray(blocks, np.int32)
+    nxt_arr = np.asarray(next_use, np.int32)
     n = len(b)
     if n == 0:
         e = np.zeros(0, np.int32)
-        return Events(e, e, e, e, 0)
-    change = np.empty(n, bool)
-    change[0] = True
-    np.not_equal(b[1:], b[:-1], out=change[1:])
-    starts = np.nonzero(change)[0].astype(np.int32)
-    run_len = np.diff(np.append(starts, n)).astype(np.int32)
-    ends = starts + run_len - 1
-    return Events(b[starts], np.asarray(next_use, np.int32)[ends], starts, run_len, n)
+        return Events(e, e, e, e, e, 0)
+    wins = _periodic_windows(b) if periodic else []
+    if not wins:
+        return Events(*_rle_parts(b, nxt_arr, 0, n), n)
+    parts = []
+    pos = 0
+    for s, p, r in wins:
+        if pos < s:
+            parts.append(_rle_parts(b, nxt_arr, pos, s))
+        j = np.arange(p, dtype=np.int32)
+        ones = np.ones(p, np.int32)
+        # first period: ordinary events (these may fault and evict)
+        parts.append((b[s + j], nxt_arr[s + j], (s + j).astype(np.int32), ones, ones))
+        # aggregates: position j's occurrences 2..r, spaced p apart
+        parts.append((
+            b[s + j],
+            nxt_arr[s + (r - 1) * p + j],  # next use after the LAST occurrence
+            (s + p + j).astype(np.int32),
+            np.full(p, r - 1, np.int32),
+            np.full(p, p, np.int32),
+        ))
+        pos = s + r * p
+    if pos < n:
+        parts.append(_rle_parts(b, nxt_arr, pos, n))
+    cat = [np.concatenate([pt[i] for pt in parts]) for i in range(5)]
+    return Events(*cat, n)
 
 
 _bucket_pow2 = pow2_bucket
@@ -194,10 +302,10 @@ def _pad_events(ev: Events) -> Events:
         return ev
     pad = target - e
 
-    def z(a):
-        return np.concatenate([a, np.zeros(pad, np.int32)])
+    def z(a, fill=0):
+        return np.concatenate([a, np.full(pad, fill, np.int32)])
 
-    return Events(z(ev.blk), z(ev.nxt), z(ev.dt), z(ev.rl), ev.n_access)
+    return Events(z(ev.blk), z(ev.nxt), z(ev.dt), z(ev.rl), z(ev.stride, 1), ev.n_access)
 
 
 def _tree_mask(resident, blk, valid, n_blocks: int):
@@ -276,7 +384,7 @@ def _evict_fit(state: SimState, capacity, policy_id, protect, interval_now, t_no
     return state._replace(resident=resident, evicted_once=evicted_once, occupancy=occ)
 
 
-def _scan_events(state: SimState, blk, nxt, dt, rl, capacity, policy_id, prefetch_id, n_valid):
+def _scan_events(state: SimState, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid):
     """One lane: scan the compressed event stream. All cell parameters are
     traced values — a single compile serves every (policy, prefetch,
     capacity, n_valid) combination of this shape."""
@@ -286,10 +394,10 @@ def _scan_events(state: SimState, blk, nxt, dt, rl, capacity, policy_id, prefetc
     t0 = state.time
 
     def step(state: SimState, inp):
-        b, nx, d, r = inp
+        b, nx, d, r, sd = inp
         active = r > 0
         t_first = t0 + d
-        t_last = t_first + r - 1
+        t_last = t_first + (r - 1) * sd
         is_pinned = state.pinned[b]
         fault = (~state.resident[b]) & (~is_pinned) & active
 
@@ -347,18 +455,21 @@ def _scan_events(state: SimState, blk, nxt, dt, rl, capacity, policy_id, prefetc
             "fault": fault,
             "thrash": thrash,
             "was_evicted": state.evicted_once[b],
+            # a faulting periodic aggregate breaks the no-fault merge
+            # assumption: the caller must rerun with plain RLE events
+            "pfault": fault & (sd > 1),
         }
         return state3._replace(time=jnp.where(active, t_last + 1, state.time)), out
 
-    return jax.lax.scan(step, state, (blk, nxt, dt, rl))
+    return jax.lax.scan(step, state, (blk, nxt, dt, rl, stride))
 
 
 @jax.jit
-def _run_events(states, blk, nxt, dt, rl, capacity, policy_id, prefetch_id, n_valid):
+def _run_events(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid):
     """Batched event scan: ``states`` and the cell parameters carry a
     leading lane axis; the event stream is shared across lanes."""
     return jax.vmap(
-        lambda st, cap, pol, pf, nv: _scan_events(st, blk, nxt, dt, rl, cap, pol, pf, nv)
+        lambda st, cap, pol, pf, nv: _scan_events(st, blk, nxt, dt, rl, stride, cap, pol, pf, nv)
     )(states, capacity, policy_id, prefetch_id, n_valid)
 
 
@@ -373,6 +484,28 @@ def _lane(tree, i):
 _INERT = ("lru", "demand")  # padding lane: huge capacity, cheapest policy
 
 
+def _shard_lanes(stacked: SimState, lane_arrays: tuple, rep_arrays: tuple, b_pad: int):
+    """Commit lane-stacked inputs to a cross-device lanes sharding.
+
+    Lanes are fully independent, so GSPMD partitions the whole vmapped scan
+    with no communication (the batched ``while_loop`` condition is the only
+    cross-lane reduction).  No-ops on a single device, on an indivisible
+    lane/device ratio, or with REPRO_SIM_SHARD=0 (checked inside
+    :func:`lane_shardings`); any device_put failure (e.g. typed PRNG keys
+    on an odd backend) falls back to unsharded execution — results are
+    bit-identical either way, lanes just stop overlapping across devices."""
+    lane_sh, rep_sh = lane_shardings(b_pad)
+    if lane_sh is None:
+        return stacked, lane_arrays, rep_arrays
+    try:
+        st = jax.tree.map(lambda x: jax.device_put(x, lane_sh), stacked)
+        la = tuple(jax.device_put(x, lane_sh) for x in lane_arrays)
+        ra = tuple(jax.device_put(x, rep_sh) for x in rep_arrays)
+        return st, la, ra
+    except Exception:
+        return stacked, lane_arrays, rep_arrays
+
+
 def _run_cells(
     states: list[SimState],
     ev: Events,
@@ -382,7 +515,8 @@ def _run_cells(
     """Run one compressed stream under many cells in a single vmapped scan.
 
     Lanes are padded to a power of two with inert no-evict lanes so batch
-    sizes fall into a few compile buckets."""
+    sizes fall into a few compile buckets; when several devices are
+    visible, lanes are sharded across them (see :func:`_shard_lanes`)."""
     n_blocks = states[0].resident.shape[0]
     b_real = len(cells)
     # lane buckets {1, 8, 16, ...}: single runs stay cheap, sweeps share compiles
@@ -394,16 +528,18 @@ def _run_cells(
     pf = jnp.asarray(np.array([c[1] for c in cells], np.int32))
     cap = jnp.asarray(np.array([c[2] for c in cells], np.int32))
     nv = jnp.full(b_pad, n_valid, jnp.int32)
-    out_states, outs = _run_events(
-        _stack_states(states),
-        jnp.asarray(ev.blk), jnp.asarray(ev.nxt), jnp.asarray(ev.dt), jnp.asarray(ev.rl),
-        cap, pol, pf, nv,
-    )
+    evs = tuple(jnp.asarray(getattr(ev, f)) for f in ("blk", "nxt", "dt", "rl", "stride"))
+    stacked, (cap, pol, pf, nv), evs = _shard_lanes(_stack_states(states), (cap, pol, pf, nv), evs, b_pad)
+    out_states, outs = _run_events(stacked, *evs, cap, pol, pf, nv)
     return out_states, outs, b_real
 
 
 def _decompress_outs(outs_lane: dict, ev: Events) -> dict:
-    """Expand per-event scan outputs back to per-access arrays."""
+    """Expand per-event scan outputs back to per-access arrays.
+
+    Periodic aggregates cover interleaved (non-contiguous) access indices,
+    so per-access values are scattered to ``dt + k*stride`` rather than
+    repeated contiguously."""
     e = len(ev.blk)
     fault = np.zeros(ev.n_access, bool)
     thrash = np.zeros(ev.n_access, np.int32)
@@ -412,7 +548,10 @@ def _decompress_outs(outs_lane: dict, ev: Events) -> dict:
     ev_we = np.asarray(outs_lane["was_evicted"])[:e]
     fault[ev.dt] = ev_fault
     thrash[ev.dt] = ev_thrash
-    was_evicted = np.repeat(ev_we, ev.rl)
+    was_evicted = np.zeros(ev.n_access, bool)
+    intra = np.arange(int(ev.rl.sum())) - np.repeat(np.cumsum(ev.rl) - ev.rl, ev.rl)
+    pos = np.repeat(ev.dt, ev.rl) + intra * np.repeat(ev.stride, ev.rl)
+    was_evicted[pos] = np.repeat(ev_we, ev.rl)
     return {"fault": fault, "thrash": thrash, "was_evicted": was_evicted}
 
 
@@ -427,16 +566,28 @@ def run_segment(
     n_valid: int,
     want_outs: bool = True,
 ):
-    """Run one trace segment (compress -> batched scan -> decompress)."""
+    """Run one trace segment (compress -> batched scan -> decompress).
+
+    Period-p compression is attempted first; if any periodic aggregate
+    faulted (its merged occurrences are then not provably fault-free), the
+    segment is rerun with plain run-length events — so the returned
+    counters are always bit-identical to the per-access reference.
+    """
     state = _ensure_key(state)
-    ev = compress_events(blocks, next_use)
-    if ev.n_access == 0:
-        z = np.zeros(0)
-        return state, {"fault": z.astype(bool), "thrash": z.astype(np.int32), "was_evicted": z.astype(bool)}
+    blocks = np.asarray(blocks)
+    next_use = np.asarray(next_use)
     cell = (POLICY_IDS[policy], PREFETCH_IDS[prefetch], int(capacity))
-    out_states, outs, _ = _run_cells([state], ev, [cell], n_valid)
-    st = _lane(out_states, 0)
-    return st, (_decompress_outs(_lane(outs, 0), ev) if want_outs else None)
+    for periodic in (True, False):
+        ev = compress_events(blocks, next_use, periodic=periodic)
+        if ev.n_access == 0:
+            z = np.zeros(0)
+            return state, {"fault": z.astype(bool), "thrash": z.astype(np.int32), "was_evicted": z.astype(bool)}
+        out_states, outs, _ = _run_cells([state], ev, [cell], n_valid)
+        lane = _lane(outs, 0)
+        if periodic and (ev.stride > 1).any() and bool(np.asarray(lane["pfault"]).any()):
+            continue  # divergence: a merged occurrence may have faulted
+        st = _lane(out_states, 0)
+        return st, (_decompress_outs(lane, ev) if want_outs else None)
 
 
 def _run_segment(state, blocks, next_use, n_blocks=None, capacity=None, policy=None, prefetch=None, n_valid=None, want_outs=True):
@@ -524,7 +675,7 @@ def run_batch(
     """
     blocks = trace.block.astype(np.int32)
     nb = bucket_blocks(trace.n_blocks)
-    ev = compress_events(blocks, next_use_for(trace))
+    nxt = next_use_for(trace)
     id_cells = []
     for policy, prefetch, oversub in cells:
         assert policy in POLICIES and prefetch in PREFETCHERS
@@ -535,7 +686,12 @@ def run_batch(
         ))
     lane_seeds = seeds if seeds is not None else [seed] * len(cells)
     states = [init_state(nb, s) for s in lane_seeds]
-    out_states, _, b_real = _run_cells(states, ev, id_cells, trace.n_blocks)
+    for periodic in (True, False):
+        ev = compress_events(blocks, nxt, periodic=periodic)
+        out_states, outs, b_real = _run_cells(states, ev, id_cells, trace.n_blocks)
+        if periodic and (ev.stride > 1).any() and bool(np.asarray(jnp.any(outs["pfault"]))):
+            continue  # some lane's periodic merge diverged: rerun all on RLE
+        break
     # one host sync for the whole sweep
     counters = jax.device_get({
         "thrash_events": out_states.thrash_events,
@@ -554,6 +710,98 @@ def run_batch(
         }
         for i in range(b_real)
     ]
+
+
+@jax.jit
+def _run_events_lanes(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid):
+    """Batched event scan where EVERY input carries a leading lane axis —
+    unlike :func:`_run_events`, each lane walks its OWN event stream (the
+    cross-benchmark case: different traces, same shape bucket)."""
+    return jax.vmap(_scan_events)(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid)
+
+
+def run_segments_many(
+    states: list[SimState],
+    segments: list[tuple[np.ndarray, np.ndarray]],  # (blocks, next_use) per lane
+    cells: list[tuple[int, int, int]],  # (policy_id, prefetch_id, capacity) per lane
+    n_valids: list[int],
+    *,
+    want_outs: bool = True,
+) -> list[tuple[SimState, dict | None]]:
+    """Run one trace segment per lane in bucketed vmapped scans.
+
+    Lanes are grouped by (state width, padded event length); each group runs
+    as ONE vmapped scan over stacked per-lane event streams (short lanes are
+    padded with no-op events).  Lanes whose periodic aggregates diverged are
+    rerun individually on plain RLE events, so every lane's counters stay
+    bit-identical to the reference regardless of batching.
+    """
+    results: list = [None] * len(states)
+    groups: dict = {}
+    for i, (st, (blocks, next_use)) in enumerate(zip(states, segments)):
+        st = _ensure_key(st)
+        ev = compress_events(np.asarray(blocks), np.asarray(next_use), periodic=True)
+        if ev.n_access == 0:
+            z = np.zeros(0)
+            results[i] = (st, {"fault": z.astype(bool), "thrash": z.astype(np.int32), "was_evicted": z.astype(bool)})
+            continue
+        padded = _pad_events(ev)
+        key = (st.resident.shape[0], len(padded.blk))
+        # decompression must see the UNPADDED events (padding rows carry
+        # dt=0 and would scatter junk over the first access's outputs)
+        groups.setdefault(key, []).append((i, st, ev, padded))
+
+    def _rle_rerun(i, st):
+        """Exact single-lane rerun on plain RLE events (shares the b_pad=1
+        compile bucket with run/run_segment)."""
+        ev_r = compress_events(np.asarray(segments[i][0]), np.asarray(segments[i][1]))
+        o_st, o_outs, _ = _run_cells([st], ev_r, [cells[i]], n_valids[i])
+        return _lane(o_st, 0), (_decompress_outs(_lane(o_outs, 0), ev_r) if want_outs else None)
+
+    for (nb, e_len), lanes in groups.items():
+        if len(lanes) < 4:
+            # small groups route through the single-lane path: reuses the
+            # compiled shapes every serial caller already has, instead of
+            # minting one vmapped compile per odd lane count
+            for i, st, ev, _ in lanes:
+                out_states, outs, _ = _run_cells([st], ev, [cells[i]], n_valids[i])
+                lane = _lane(outs, 0)
+                if (ev.stride > 1).any() and bool(np.asarray(lane["pfault"]).any()):
+                    results[i] = _rle_rerun(i, st)
+                else:
+                    results[i] = (_lane(out_states, 0), _decompress_outs(lane, ev) if want_outs else None)
+            continue
+        # lane counts fall into power-of-two buckets (inert padding lanes:
+        # empty no-op event streams, never migrate) so every round of a
+        # sweep reuses one compiled scan per bucket
+        b_real = len(lanes)
+        b_pad = _bucket_pow2(b_real, 4)
+        idxs = [i for i, *_ in lanes]
+        pad_ev = Events(*(np.zeros(e_len, np.int32),) * 5, 0)
+        stacked = _stack_states([st for _, st, _, _ in lanes] + [init_state(nb)] * (b_pad - b_real))
+        arrs = [
+            jnp.asarray(np.stack([getattr(p, f) for *_, p in lanes] + [getattr(pad_ev, f)] * (b_pad - b_real)))
+            for f in ("blk", "nxt", "dt", "rl", "stride")
+        ]
+        pad_cell = (POLICY_IDS[_INERT[0]], PREFETCH_IDS[_INERT[1]], nb + 1)
+        cell_arr = [
+            jnp.asarray(np.array([cells[i][k] for i in idxs] + [pad_cell[k]] * (b_pad - b_real), np.int32))
+            for k in range(3)
+        ]
+        nv = jnp.asarray(np.array([n_valids[i] for i in idxs] + [nb] * (b_pad - b_real), np.int32))
+        stacked, lane_arrs, _ = _shard_lanes(stacked, (*arrs, *cell_arr, nv), (), b_pad)
+        *arrs, pol_a, pf_a, cap_a, nv = lane_arrs
+        out_states, outs = _run_events_lanes(stacked, *arrs, cap_a, pol_a, pf_a, nv)
+        pdiv = np.asarray(outs["pfault"]).any(axis=1)
+        for j, (i, st, ev, _) in enumerate(lanes):
+            if pdiv[j]:
+                results[i] = _rle_rerun(i, st)  # periodic merge diverged
+            else:
+                results[i] = (
+                    _lane(out_states, j),
+                    _decompress_outs(_lane(outs, j), ev) if want_outs else None,
+                )
+    return results
 
 
 @jax.jit

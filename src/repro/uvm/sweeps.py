@@ -1,0 +1,55 @@
+"""Shared sweep definitions + the forced-multi-device subprocess harness.
+
+One home for the policy x prefetch x oversubscription equivalence matrix
+(previously copied into the golden suite, the sharded test and the perf
+gate) and for the "rerun this sweep in a subprocess with N forced host XLA
+devices" check both CI entry points use — XLA fixes its device count at
+process start, so exercising the lane-sharded path from a single-device
+process requires a child process.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+EQUIV_CELLS = [
+    (pol, pf, os_)
+    for pol in ("lru", "belady", "hpe", "learned")
+    for pf in ("demand", "tree")
+    for os_ in (1.25, 1.5)
+]  # 16 cells: the equivalence-suite matrix (`random` exempt by contract)
+
+_REPO = Path(__file__).resolve().parents[3]
+
+
+def run_batch_forced_devices(bench: str, scale: float, cap: int, cells=EQUIV_CELLS, devices: int = 4) -> list[dict]:
+    """`simulator.run_batch` over a named benchmark trace in a subprocess
+    with ``devices`` forced host devices; returns its per-cell stats.
+
+    The child asserts the device count AND that the lane mesh engaged, so a
+    silently-unsharded run cannot masquerade as a passing check.  Counters
+    are integer state, so callers may require bit-equality with their own
+    single-device run.
+    """
+    code = (
+        "import json\n"
+        "import jax\n"
+        f"assert len(jax.devices()) == {devices}, jax.devices()\n"
+        "from repro.distributed.compat import lanes_mesh\n"
+        f"assert lanes_mesh({len(cells)}) is not None  # the sweep really is sharded\n"
+        "from repro.uvm import simulator as S, trace as T\n"
+        f"tr = T.get_trace({bench!r}, scale={scale}); tr = tr.slice(0, min(len(tr), {cap}))\n"
+        f"print(json.dumps(S.run_batch(tr, {cells!r})))\n"
+    )
+    env = dict(
+        os.environ,
+        PYTHONPATH=str(_REPO / "src"),
+        JAX_PLATFORMS="cpu",
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={devices} " + os.environ.get("XLA_FLAGS", ""),
+    )
+    out = subprocess.run([sys.executable, "-c", code], env=env, capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])

@@ -15,6 +15,17 @@ characterisation:
 A trace is page-granular: (page, pc, tb, kernel) per access. The simulator
 migrates at 64KB basic-block granularity (16 x 4KB pages), like the CUDA
 runtime it models.
+
+Generator contract the simulator's period-p event compression relies on:
+streaming kernels are built with :func:`_interleave`, which walks its p
+streams in lockstep — one access from each stream per iteration.  With
+chunk-aligned allocations (:func:`_align`) the resulting BLOCK stream is a
+fixed-period sequence (``b0 b1 .. bp-1`` repeated ``PAGES_PER_BLOCK``
+times before every block advances), which the simulator detects host-side
+and compresses into per-window aggregate events
+(see ``repro/uvm/simulator.py``).  Nothing here may assume that
+compression exists — it is exactness-checked at runtime — but keeping the
+interleave idiom periodic is what makes streaming sweeps fast.
 """
 from __future__ import annotations
 

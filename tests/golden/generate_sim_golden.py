@@ -8,7 +8,8 @@ The goldens come from the FROZEN pre-refactor reference scan
 (repro.uvm.reference) — never from the fast path the goldens exist to
 check. They pin pages_thrashed/faults/migrated_blocks/zero_copy for all 11
 benchmarks x {lru, belady, hpe, learned} x {demand, tree} x {1.25, 1.5}
-at scale=0.25 / cap=2000 (integer-only simulator state => platform-stable).
+at scale=0.25 / cap=2000 (integer-only simulator state => platform-stable),
+plus one Section V-F concurrent multi-workload trace over the same matrix.
 `random` is excluded: its draws depend on array padding, which the fast path
 is free to change.
 """
@@ -26,11 +27,26 @@ PREFETCHERS = ("demand", "tree")
 OVERSUBS = (1.25, 1.5)
 
 
+def golden_concurrent_trace() -> T.Trace:
+    """The pinned Section V-F cell: a streaming + a regular workload
+    interleaved at scheduler-slice granularity (same construction in
+    tests/test_sim_equivalence.py)."""
+    parts = []
+    for name in ("StreamTriad", "Hotspot"):
+        tr = T.get_trace(name, scale=SCALE)
+        parts.append(tr.slice(0, min(len(tr), CAP)))
+    return T.concurrent(parts, seed=0, slice_len=256)
+
+
 def main():
     out = {}
+    traces = {name: None for name in T.BENCHMARKS}
     for name in T.BENCHMARKS:
         tr = T.get_trace(name, scale=SCALE)
-        tr = tr.slice(0, min(len(tr), CAP))
+        traces[name] = tr.slice(0, min(len(tr), CAP))
+    conc = golden_concurrent_trace()
+    traces[f"concurrent:{conc.name}"] = conc
+    for name, tr in traces.items():
         for pol in POLICIES:
             for pf in PREFETCHERS:
                 for os_ in OVERSUBS:

@@ -63,6 +63,20 @@ def test_belady_minimizes_faults(blocks):
         assert f_bel <= f, f"belady {f_bel} > {policy} {f}"
 
 
+def _assert_fast_matches_reference(tr, policy, prefetch, oversub):
+    a = S.run(tr, policy=policy, prefetch=prefetch, oversubscription=oversub)
+    b = REF.run(tr, policy=policy, prefetch=prefetch, oversubscription=oversub)
+    assert a.stats == b.stats
+    np.testing.assert_array_equal(a.fault, b.fault)
+    np.testing.assert_array_equal(a.thrash, b.thrash)
+    np.testing.assert_array_equal(a.was_evicted, b.was_evicted)
+    nb = len(b.state.resident)  # fast path may pad the block axis further
+    for field in ("resident", "evicted_once", "last_access", "last_interval", "next_use"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.state, field))[:nb], np.asarray(getattr(b.state, field)), err_msg=field
+        )
+
+
 @settings(max_examples=8, deadline=None)
 @given(
     blocks=st.lists(st.integers(0, 47), min_size=10, max_size=200),
@@ -75,18 +89,43 @@ def test_fast_path_matches_reference(blocks, policy, prefetch, oversub):
     frozen pre-refactor reference on arbitrary traces: counters, per-access
     outputs, AND the final per-block state (`random` is exempt by contract —
     its draws depend on array padding)."""
-    tr = _trace_from_blocks(blocks, 48)
-    a = S.run(tr, policy=policy, prefetch=prefetch, oversubscription=oversub)
-    b = REF.run(tr, policy=policy, prefetch=prefetch, oversubscription=oversub)
-    assert a.stats == b.stats
-    np.testing.assert_array_equal(a.fault, b.fault)
-    np.testing.assert_array_equal(a.thrash, b.thrash)
-    np.testing.assert_array_equal(a.was_evicted, b.was_evicted)
-    nb = len(b.state.resident)  # fast path may pad the block axis further
-    for field in ("resident", "evicted_once", "last_access", "last_interval", "next_use"):
-        np.testing.assert_array_equal(
-            np.asarray(getattr(a.state, field))[:nb], np.asarray(getattr(b.state, field)), err_msg=field
-        )
+    _assert_fast_matches_reference(_trace_from_blocks(blocks, 48), policy, prefetch, oversub)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    period=st.lists(st.integers(0, 47), min_size=2, max_size=8),
+    reps=st.integers(4, 24),
+    prefix=st.lists(st.integers(0, 47), min_size=0, max_size=30),
+    suffix=st.lists(st.integers(0, 47), min_size=0, max_size=30),
+    policy=st.sampled_from(["lru", "belady", "hpe", "learned"]),
+    prefetch=st.sampled_from(["demand", "tree"]),
+    oversub=st.sampled_from([1.1, 1.25, 1.5, 2.0, 8.0]),
+)
+def test_fast_path_matches_reference_periodic(period, reps, prefix, suffix, policy, prefetch, oversub):
+    """Period-p traces (the streaming `_interleave` idiom) exercise the
+    aggregate-event merge AND — at high oversubscription, where windows get
+    evicted mid-flight — the runtime divergence fallback.  Both paths must
+    stay bit-identical to the reference."""
+    blocks = prefix + list(period) * reps + suffix
+    _assert_fast_matches_reference(_trace_from_blocks(blocks, 48), policy, prefetch, oversub)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    blocks_a=st.lists(st.integers(0, 15), min_size=20, max_size=120),
+    blocks_b=st.lists(st.integers(0, 15), min_size=20, max_size=120),
+    policy=st.sampled_from(["lru", "belady", "hpe", "learned"]),
+    seed=st.integers(0, 3),
+)
+def test_fast_path_matches_reference_concurrent(blocks_a, blocks_b, policy, seed):
+    """Section V-F multi-workload traces (disjoint-range scheduler-slice
+    interleaving) through the fast path, against the reference."""
+    tr = T.concurrent(
+        [_trace_from_blocks(blocks_a, 16), _trace_from_blocks(blocks_b, 16)],
+        seed=seed, slice_len=16,
+    )
+    _assert_fast_matches_reference(tr, policy, "tree", 1.25)
 
 
 # --- compression -----------------------------------------------------------------

@@ -24,29 +24,42 @@ SCALE, CAP = 0.25, 2000  # must match tests/golden/generate_sim_golden.py
 COUNTERS = ("pages_thrashed", "faults", "migrated_blocks", "zero_copy")
 
 
+from repro.uvm.sweeps import EQUIV_CELLS as CELLS  # noqa: E402
+
+
 def _trace(name):
     tr = T.get_trace(name, scale=SCALE)
     return tr.slice(0, min(len(tr), CAP))
 
 
+def _concurrent_trace():
+    # must match tests/golden/generate_sim_golden.py:golden_concurrent_trace
+    return T.concurrent([_trace("StreamTriad"), _trace("Hotspot")], seed=0, slice_len=256)
+
+
 @pytest.mark.parametrize("name", sorted(T.BENCHMARKS))
 def test_counters_match_prerefactor_golden(name):
     tr = _trace(name)
-    cells = [
-        (pol, pf, os_)
-        for pol in ("lru", "belady", "hpe", "learned")
-        for pf in ("demand", "tree")
-        for os_ in (1.25, 1.5)
-    ]
     # the whole benchmark row in ONE vmapped scan
-    batch = S.run_batch(tr, cells)
-    for (pol, pf, os_), got in zip(cells, batch):
+    batch = S.run_batch(tr, CELLS)
+    for (pol, pf, os_), got in zip(CELLS, batch):
         want = GOLDEN[f"{name}|{pol}|{pf}|{os_}"]
         assert {k: got[k] for k in COUNTERS} == want, (name, pol, pf, os_)
 
 
+def test_concurrent_counters_match_prerefactor_golden():
+    """The Section V-F multi-workload cell: disjoint-range interleaved
+    streams through the same fast path (periodic compression sees the
+    per-tenant streaming phases; counters must still be bit-exact)."""
+    tr = _concurrent_trace()
+    batch = S.run_batch(tr, CELLS)
+    for (pol, pf, os_), got in zip(CELLS, batch):
+        want = GOLDEN[f"concurrent:{tr.name}|{pol}|{pf}|{os_}"]
+        assert {k: got[k] for k in COUNTERS} == want, (pol, pf, os_)
+
+
 def test_golden_covers_full_matrix():
-    assert len(GOLDEN) == 11 * 4 * 2 * 2
+    assert len(GOLDEN) == (11 + 1) * 4 * 2 * 2
 
 
 def test_single_run_matches_golden_spot_checks():

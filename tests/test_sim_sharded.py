@@ -1,0 +1,30 @@
+"""Device-sharded `run_batch` (ISSUE 2): sweep lanes are split across every
+visible device.  XLA device counts are fixed at process start, so the
+multi-device run happens in a subprocess with forced host devices (via the
+shared `repro.uvm.sweeps` harness); its counters must be bit-identical to
+this process's single-device run (the simulator state is integer-only and
+lanes are independent)."""
+from repro.uvm import simulator as S
+from repro.uvm import trace as T
+from repro.uvm.sweeps import EQUIV_CELLS, run_batch_forced_devices
+
+
+def test_sharded_run_batch_matches_single_device():
+    tr = T.get_trace("BICG", scale=0.25)
+    tr = tr.slice(0, min(len(tr), 1500))
+    want = S.run_batch(tr, EQUIV_CELLS)
+    got = run_batch_forced_devices("BICG", scale=0.25, cap=1500)
+    assert got == want
+
+
+def test_lane_shardings_single_device_fallback():
+    """In this (single-device) process the helpers must decline to shard."""
+    import jax
+
+    from repro.distributed.compat import lane_shardings, lanes_mesh
+
+    if len(jax.devices()) == 1:
+        assert lanes_mesh(16) is None
+        assert lane_shardings(16) == (None, None)
+    # an indivisible lane count must never be sharded
+    assert lanes_mesh(7) is None or 7 % len(jax.devices()) == 0

@@ -73,6 +73,27 @@ def test_crash_benchmarks_survive_at_150():
     assert ours.stats["pages_thrashed"] <= base.pages_thrashed
 
 
+def test_run_ours_many_matches_serial(hotspot):
+    """The cross-benchmark vmapped engine runs each lane with its own model
+    table / freq table / simulator state, so its results must match running
+    each trace alone (integer simulator counters are scheduling-invariant;
+    the vmapped predictor reproduced serial floats exactly on CPU).  Four
+    lanes, so the >=MIN_VMAP_LANES vmapped evaluate/train/simulate branches
+    actually engage rather than the small-group serial fallbacks."""
+    traces = [
+        hotspot,
+        T.get_trace("ATAX", scale=0.3).slice(0, 3000),
+        T.get_trace("Srad-v2", scale=0.3).slice(0, 3000),
+        T.get_trace("StreamTriad", scale=0.3).slice(0, 3000),
+    ]
+    serial = [R.run_ours(tr, SMOKE, TCFG) for tr in traces]
+    batched = R.run_ours_many(traces, SMOKE, TCFG)
+    for s, b in zip(serial, batched):
+        assert b.stats == s.stats
+        assert b.n_predictions == s.n_predictions
+        assert abs(b.top1 - s.top1) < 1e-6
+
+
 def test_serving_offload_learned_beats_lru():
     """The paper's policy engine applied to KV pages: on a skewed attention
     pattern, learned residency must hit at least as often as LRU."""

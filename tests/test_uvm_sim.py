@@ -110,6 +110,115 @@ def test_resume_state_roundtrip():
         assert int(resumed.state.time) == len(tr)
 
 
+def test_concurrent_disjoint_page_ranges():
+    """Section V-F: each tenant lives in its own page range; the merged
+    trace must preserve every access, remap each workload into a disjoint
+    window, and keep per-workload temporal order."""
+    a = T.get_trace("StreamTriad", scale=0.3)
+    b = T.get_trace("Hotspot", scale=0.3)
+    tr = T.concurrent([a, b], seed=5)
+    assert len(tr) == len(a) + len(b)
+    assert tr.n_pages == a.n_pages + b.n_pages
+    # tenant of each access is identified by the kernel-id offset (64 * w)
+    w = tr.kernel // 64
+    pages_a, pages_b = tr.page[w == 0], tr.page[w == 1]
+    assert pages_a.max() < a.n_pages  # tenant 0 window: [0, a.n_pages)
+    assert pages_b.min() >= a.n_pages and pages_b.max() < tr.n_pages
+    np.testing.assert_array_equal(pages_a, a.page)  # temporal order kept
+    np.testing.assert_array_equal(pages_b, b.page + a.n_pages)
+
+
+def test_concurrent_deterministic_under_seed():
+    parts = [T.get_trace("ATAX", scale=0.3), T.get_trace("Srad-v2", scale=0.3)]
+    t1 = T.concurrent(parts, seed=7)
+    t2 = T.concurrent(parts, seed=7)
+    t3 = T.concurrent(parts, seed=8)
+    np.testing.assert_array_equal(t1.page, t2.page)
+    np.testing.assert_array_equal(t1.kernel, t2.kernel)
+    assert not np.array_equal(t1.page, t3.page)  # the merge order is seeded
+
+
+def test_periodic_compression_exact_on_streaming():
+    """Period-p compression must shorten streaming scans (the _interleave
+    idiom defeats plain RLE) while keeping counters bit-identical to the
+    per-access reference."""
+    from repro.uvm import reference as REF
+
+    tr = T.get_trace("AddVectors", scale=0.25)
+    b = tr.block.astype(np.int32)
+    nxt = S.next_use_for(tr)
+    rle = S.compress_events(b, nxt)
+    per = S.compress_events(b, nxt, periodic=True)
+    assert len(per.blk) * 3 <= len(rle.blk)  # >=3x shorter scan
+    assert per.rl.sum() == len(b)  # every access is covered exactly once
+    for pol in ("lru", "belady", "hpe", "learned"):
+        fast = S.run(tr, policy=pol, prefetch="tree")
+        ref = REF.run(tr, policy=pol, prefetch="tree")
+        assert fast.stats == ref.stats, pol
+        np.testing.assert_array_equal(fast.was_evicted, ref.was_evicted)
+
+
+def test_periodic_divergence_falls_back_exactly():
+    """A tiny capacity forces evictions inside periodic windows; the
+    runtime divergence check must detect it and rerun on plain RLE events,
+    so the counters still match the reference bit-for-bit."""
+    from repro.uvm import reference as REF
+
+    blocks = np.concatenate([np.tile([0, 5, 9], 8), [1, 2, 3], np.tile([2, 7], 6)])
+    tr = _trace_from_blocks(blocks, 12)
+    ev = S.compress_events(tr.block.astype(np.int32), S.next_use_for(tr), periodic=True)
+    assert (ev.stride > 1).any()  # periodic windows were detected
+    for pol in ("lru", "belady", "hpe", "learned"):
+        for oversub in (1.25, 6.0):
+            fast = S.run(tr, policy=pol, prefetch="tree", oversubscription=oversub)
+            ref = REF.run(tr, policy=pol, prefetch="tree", oversubscription=oversub)
+            assert fast.stats == ref.stats, (pol, oversub)
+
+
+def _assert_segments_many_matches_runs(traces, lane_cells):
+    states = [S.init_state(S.bucket_blocks(tr.n_blocks)) for tr in traces]
+    cells = [
+        (S.POLICY_IDS[pol], S.PREFETCH_IDS[pf], S.capacity_for(tr.n_blocks, os_))
+        for tr, (pol, pf, os_) in zip(traces, lane_cells)
+    ]
+    segs = [(tr.block.astype(np.int32), S.next_use_for(tr)) for tr in traces]
+    out = S.run_segments_many(states, segs, cells, [tr.n_blocks for tr in traces])
+    for tr, (pol, pf, os_), (state, outs) in zip(traces, lane_cells, out):
+        want = S.run(tr, policy=pol, prefetch=pf, oversubscription=os_)
+        assert int(state.thrash_events) == int(want.state.thrash_events), (tr.name, pol)
+        assert int(state.faults) == int(want.state.faults), (tr.name, pol)
+        np.testing.assert_array_equal(outs["fault"], want.fault, err_msg=f"{tr.name}|{pol}")
+        np.testing.assert_array_equal(outs["was_evicted"], want.was_evicted, err_msg=f"{tr.name}|{pol}")
+
+
+def test_run_segments_many_matches_single_runs():
+    """The cross-trace lane-batched scan (different event streams per lane)
+    must equal per-trace run() for every lane — here with lanes landing in
+    DIFFERENT shape buckets, which routes through the single-lane path."""
+    traces = [
+        T.get_trace("ATAX", scale=0.25).slice(0, 1500),
+        T.get_trace("StreamTriad", scale=0.25),
+        T.get_trace("Hotspot", scale=0.25).slice(0, 1500),
+    ]
+    _assert_segments_many_matches_runs(traces, [("lru", "tree", 1.25)] * len(traces))
+
+
+def test_run_segments_many_vmapped_bucket_matches_single_runs():
+    """Five same-bucket lanes (same state width, same event bucket) with
+    per-lane policies/capacities: exercises the grouped vmapped scan with
+    inert lane padding (5 -> 8), not the small-group serial fallback."""
+    rng = np.random.default_rng(3)
+    traces = [
+        _trace_from_blocks(np.concatenate([np.tile(rng.integers(0, 24, p), 12), rng.integers(0, 24, 40)]), 24)
+        for p in (2, 3, 4, 5, 6)  # periodic heads so stride>1 events batch too
+    ]
+    lane_cells = [
+        ("lru", "tree", 1.25), ("belady", "demand", 1.5), ("hpe", "tree", 2.0),
+        ("learned", "demand", 1.25), ("lru", "demand", 4.0),
+    ]
+    _assert_segments_many_matches_runs(traces, lane_cells)
+
+
 def test_precompute_next_use_matches_scalar_loop():
     rng = np.random.default_rng(0)
     blocks = rng.integers(0, 37, 500).astype(np.int32)
