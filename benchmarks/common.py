@@ -1,191 +1,34 @@
-"""Shared context for the per-table/figure benchmark harnesses.
+"""Shared harness for the per-table/figure benchmarks — now a thin layer
+over :mod:`repro.uvm.api`.
 
-Results are cached per (benchmark, strategy, oversubscription) so the tables
-and figures that reuse the same runs (Table VI, Figs. 13/14) don't recompute
-the learned runtime. `--scale quick` (default) runs reduced traces on CPU in
-minutes; `--scale paper` uses the full generator sizes.
+The session/caching logic that used to live here (the ``Ctx`` dataclass and
+its in-process dicts) moved into :class:`repro.uvm.api.Session`, which
+additionally persists every computed cell in the content-addressed run
+store under ``experiments/runs/`` — rerunning a table after a crash (or
+after the CLI already swept the same cells) recomputes nothing.  ``Ctx``
+remains importable here as a deprecated alias accepting the historical
+``Ctx(scale, cap, pcfg, tcfg, benches)`` signature.
+
+`--scale quick` (default) runs reduced traces on CPU in minutes;
+`--scale paper` uses the full generator sizes.
 """
 from __future__ import annotations
 
 import csv
-import dataclasses
-import os
 import time
 from pathlib import Path
 
-import jax
-import numpy as np
+# importing the API configures the persistent XLA compile cache
+# (repro.uvm.api.session.enable_compile_cache) before any jit runs
+from repro.uvm.api import ALL_BENCH, FEATURED, Session  # noqa: F401
+from repro.uvm.api.session import Ctx  # noqa: F401  (deprecated shim)
 
-# Persistent XLA compilation cache: the simulator's unified scan and the
-# predictor's train/eval jits compile once per (shape-bucket) ever, not once
-# per process. Harmless if the dir is unwritable (JAX falls back silently).
-_CACHE_DIR = os.environ.get("REPRO_JAX_CACHE", str(Path.home() / ".cache" / "repro_jax"))
-try:
-    jax.config.update("jax_compilation_cache_dir", _CACHE_DIR)
-    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.3)
-except Exception:
-    pass
-
-from repro.configs.predictor_paper import CONFIG as PCFG_FULL
-from repro.configs.predictor_paper import PredictorConfig
-
-# Quick-scale predictor: small enough for CPU minutes, but with a delta
-# vocabulary that does NOT alias the benchmarks' delta sets (the smoke
-# config's 32-entry vocab hash-collides NW's hundreds of deltas into noise).
-PCFG_QUICK = PredictorConfig(
-    name="predictor-quick", d_model=32, num_heads=2, num_layers=1, d_ff=64,
-    page_vocab=2048, delta_vocab=512, pc_vocab=64, tb_vocab=64,
-)
-from repro.core.incremental import RunResult, TrainConfig, run_protocol
-from repro.uvm import runtime as R
-from repro.uvm import simulator as S
-from repro.uvm import timing
-from repro.uvm import trace as T
-from repro.uvm.uvmsmart import run_uvmsmart
+# Deprecated: the quick-scale predictor definition now lives with the other
+# predictor configs so the CLI and benchmarks share one source.
+from repro.configs.predictor_paper import CONFIG_QUICK as PCFG_QUICK  # noqa: F401
+from repro.configs.predictor_paper import CONFIG as PCFG_FULL  # noqa: F401
 
 OUT_DIR = Path("experiments/bench")
-
-ALL_BENCH = list(T.BENCHMARKS)
-FEATURED = ["ATAX", "BICG", "Hotspot", "NW", "Srad-v2"]  # the paper's focus set
-
-
-@dataclasses.dataclass
-class Ctx:
-    scale: float = 0.4
-    cap: int = 6000  # max trace length (quick mode)
-    pcfg: object = PCFG_QUICK
-    tcfg: TrainConfig = dataclasses.field(default_factory=lambda: TrainConfig(group_size=1024, epochs=2, batch_size=128))
-    benches: list = dataclasses.field(default_factory=lambda: list(ALL_BENCH))
-
-    def __post_init__(self):
-        self._traces: dict = {}
-        self._sims: dict = {}
-        self._ours: dict = {}
-        self._smart: dict = {}
-        self._proto: dict = {}
-
-    @classmethod
-    def paper(cls):
-        return cls(scale=1.0, cap=60_000, pcfg=PCFG_FULL, tcfg=TrainConfig(group_size=2048, epochs=3, batch_size=256))
-
-    def trace(self, name: str) -> T.Trace:
-        if name not in self._traces:
-            tr = T.get_trace(name, scale=self.scale)
-            self._traces[name] = tr.slice(0, min(len(tr), self.cap))
-        return self._traces[name]
-
-    # Every rule-based cell the tables/figures touch; computed together so one
-    # vmapped scan per (benchmark, oversubscription) fills the whole cache row.
-    STANDARD_CELLS = (
-        ("lru", "tree"), ("lru", "demand"), ("hpe", "demand"),
-        ("hpe", "tree"), ("belady", "demand"),
-    )
-
-    def sims(self, name: str, cells: list) -> list[dict]:
-        """Batched sweep: (policy, prefetch, oversub) cells in ONE vmapped
-        scan (bit-identical to per-cell S.run for non-random policies)."""
-        missing = [c for c in cells if (name, *c) not in self._sims]
-        if missing:
-            for c, st in zip(missing, S.run_batch(self.trace(name), missing)):
-                self._sims[(name, *c)] = st
-        return [self._sims[(name, *c)] for c in cells]
-
-    def sim(self, name: str, policy: str, prefetch: str, oversub: float = 1.25) -> dict:
-        key = (name, policy, prefetch, oversub)
-        if key not in self._sims:
-            cells = [(p, f, oversub) for p, f in self.STANDARD_CELLS]
-            if (policy, prefetch, oversub) not in cells:
-                cells.append((policy, prefetch, oversub))
-            self.sims(name, cells)
-        return self._sims[key]
-
-    def pretrained(self):
-        """Paper Section V-A: a per-pattern table pretrained on a corpus of
-        5 benchmarks with different inputs; cloned per run (fine-tuning
-        mutates the entries)."""
-        if not hasattr(self, "_pretrained"):
-            corpus = [T.BENCHMARKS[n](scale=self.scale * 0.6, seed=777 + i) for i, n in enumerate(["ATAX", "Backprop", "BICG", "Hotspot", "NW"])]
-            self._pretrained = R.pretrain_table(corpus, self.pcfg, self.tcfg, max_rounds=2)
-        return self._pretrained.clone()
-
-    def ours(self, name: str, oversub: float = 1.25, **kw) -> R.LearnedRunResult:
-        key = (name, oversub, tuple(sorted(kw.items())))
-        if key not in self._ours:
-            self._ours[key] = R.run_ours(
-                self.trace(name), self.pcfg, self.tcfg, oversubscription=oversub,
-                table=self.pretrained(), **kw,
-            )
-        return self._ours[key]
-
-    @staticmethod
-    def _warm_many(run_one, todo: list) -> None:
-        """Run one item serially (so the pool hits warm compiles), then the
-        rest through a small thread pool. Each item is a self-contained
-        computation, so results are identical to the serial path regardless
-        of scheduling; JAX releases the GIL during compiled execution and
-        the slight oversubscription hides host<->device sync stalls."""
-        from concurrent.futures import ThreadPoolExecutor
-
-        if todo:
-            run_one(todo[0])
-        if len(todo) <= 1:
-            return
-        with ThreadPoolExecutor(max_workers=min(4, 2 * (os.cpu_count() or 1))) as pool:
-            list(pool.map(run_one, todo[1:]))
-
-    def ours_many(self, names: list, oversub: float = 1.25, **kw) -> None:
-        """Warm the `ours` cache for many benchmarks.
-
-        Two engines, picked adaptively:
-
-        * `R.run_ours_many` — every benchmark in lockstep, vmapping
-          predict/train/simulate across lanes (each lane still clones the
-          pretrained table and owns its freq table / classifier / simulator
-          state, so results match per-benchmark runs), with the lane axis
-          sharded across devices.  The default whenever >1 device is
-          visible; force with REPRO_OURS_BATCHED=1.
-        * thread-pooled serial runs — the default on a single device, where
-          the batched engine's extra per-process jit traces cost more than
-          its one-dispatch-per-stage saves (see BENCH_sim.json).  Force
-          with REPRO_OURS_BATCHED=0.
-        """
-        self.pretrained()  # build (or load) the shared table once, serially
-        todo = [n for n in names if (n, oversub, tuple(sorted(kw.items()))) not in self._ours]
-        if not todo:
-            return
-        knob = os.environ.get("REPRO_OURS_BATCHED", "")
-        batched = len(todo) > 1 and knob != "0" and (knob == "1" or len(jax.devices()) > 1)
-        if not batched:
-            self._warm_many(lambda n: self.ours(n, oversub, **kw), todo)
-            return
-        results = R.run_ours_many(
-            [self.trace(n) for n in todo], self.pcfg, self.tcfg,
-            oversubscription=oversub, tables=[self.pretrained() for _ in todo], **kw,
-        )
-        for n, res in zip(todo, results):
-            self._ours[(n, oversub, tuple(sorted(kw.items())))] = res
-
-    def uvmsmart_many(self, names: list, oversub: float = 1.25) -> None:
-        """Warm the UVMSmart cache concurrently (independent runs)."""
-        self._warm_many(
-            lambda n: self.uvmsmart(n, oversub),
-            [n for n in names if (n, oversub) not in self._smart],
-        )
-
-    def uvmsmart(self, name: str, oversub: float = 1.25) -> dict:
-        key = (name, oversub)
-        if key not in self._smart:
-            self._smart[key] = run_uvmsmart(self.trace(name), oversubscription=oversub)
-        return self._smart[key]
-
-    def protocol(self, name: str, mode: str, kind: str = "transformer") -> RunResult:
-        key = (name, mode, kind)
-        if key not in self._proto:
-            self._proto[key] = run_protocol(self.trace(name), self.pcfg, self.tcfg, mode=mode, kind=kind)
-        return self._proto[key]
-
-    def ipc(self, name: str, stats: dict, **kw) -> float:
-        return timing.ipc(stats, len(self.trace(name)), **kw)
 
 
 def emit(name: str, rows: list[dict], t0: float) -> None:

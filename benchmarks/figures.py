@@ -8,10 +8,11 @@ import time
 
 import numpy as np
 
-from benchmarks.common import FEATURED, Ctx, emit
+from benchmarks.common import FEATURED, emit
+from repro.uvm.api import Session
 
 
-def fig3(ctx: Ctx):
+def fig3(ctx: Session):
     t0 = time.time()
     oversubs = (1.0, 1.1, 1.25, 1.5)
     rows = []
@@ -29,7 +30,7 @@ def fig3(ctx: Ctx):
     return rows
 
 
-def fig4(ctx: Ctx, benches=None):
+def fig4(ctx: Session, benches=None):
     """Online vs offline top-1 accuracy (the online-training gap)."""
     t0 = time.time()
     rows = []
@@ -44,7 +45,7 @@ def fig4(ctx: Ctx, benches=None):
     return rows
 
 
-def fig6(ctx: Ctx):
+def fig6(ctx: Session):
     """Hotspot: offline vs online-multi-model vs online-single-model."""
     t0 = time.time()
     b = "Hotspot"
@@ -58,7 +59,7 @@ def fig6(ctx: Ctx):
     return rows
 
 
-def fig10(ctx: Ctx, benches=None):
+def fig10(ctx: Session, benches=None):
     """Predictor architecture zoo under online training."""
     t0 = time.time()
     rows = []
@@ -72,21 +73,23 @@ def fig10(ctx: Ctx, benches=None):
     return rows
 
 
-def fig11(ctx: Ctx, benches=None):
+def fig11(ctx: Session, benches=None):
     """Normalized top-1 (online & ours, relative to offline upper bound).
-    Ours uses the paper's pretrain-then-finetune protocol (Section V-A)."""
-    t0 = time.time()
-    from repro.core.incremental import run_protocol
-    from repro.uvm.runtime import pretrain_table
-    from repro.uvm.trace import BENCHMARKS
+    Ours uses the paper's pretrain-then-finetune protocol (Section V-A);
+    the pretrained table is shared and fine-tuned ACROSS the featured
+    benchmarks in row order (a protocol chain — each link starts from the
+    table the previous links left behind)."""
+    import dataclasses
 
-    corpus = [BENCHMARKS[n](scale=ctx.scale * 0.6, seed=123 + i) for i, n in enumerate(["ATAX", "Backprop", "BICG", "Hotspot", "NW"])]
-    table = pretrain_table(corpus, ctx.pcfg, ctx.tcfg, max_rounds=2)
+    t0 = time.time()
+    benches = benches or FEATURED
+    pretrain = dataclasses.replace(ctx.default_pretrain, seed0=123)
+    ours_chain = ctx.protocol_chain(benches, "ours", pretrain=pretrain)
     rows = []
-    for b in benches or FEATURED:
+    for b, ours_res in zip(benches, ours_chain):
         off = ctx.protocol(b, "offline").top1
         on = ctx.protocol(b, "online_single").top1
-        ours = run_protocol(ctx.trace(b), ctx.pcfg, ctx.tcfg, mode="ours", table=table).top1
+        ours = ours_res.top1
         rows.append({
             "benchmark": b,
             "online_norm": round(on / max(off, 1e-9), 3),
@@ -98,7 +101,7 @@ def fig11(ctx: Ctx, benches=None):
     return rows
 
 
-def fig12(ctx: Ctx):
+def fig12(ctx: Session):
     """Thrashing-term ablation on the 4 worst-thrashing benchmarks."""
     t0 = time.time()
     rows = []
@@ -116,7 +119,7 @@ def fig12(ctx: Ctx):
     return rows
 
 
-def fig13(ctx: Ctx, benches=None):
+def fig13(ctx: Session, benches=None):
     """Normalized IPC vs prediction overhead {1,10,20,50,100} us (vs UVMSmart)."""
     t0 = time.time()
     rows = []
@@ -137,7 +140,7 @@ def fig13(ctx: Ctx, benches=None):
     return rows
 
 
-def fig14(ctx: Ctx, benches=None):
+def fig14(ctx: Session, benches=None):
     """Normalized IPC (vs UVMSmart) at 125% and 150% oversubscription."""
     t0 = time.time()
     rows = []

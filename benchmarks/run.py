@@ -15,7 +15,8 @@ import time
 from pathlib import Path
 
 from benchmarks import figures, tables
-from benchmarks.common import Ctx, emit
+from benchmarks.common import emit
+from repro.uvm.api import Session
 
 
 def roofline_summary(_ctx):
@@ -66,7 +67,7 @@ def main(argv=None) -> int:
     ap.add_argument("--scale", choices=["quick", "paper"], default="quick")
     ap.add_argument("--only", nargs="*", default=None)
     args = ap.parse_args(argv)
-    ctx = Ctx.paper() if args.scale == "paper" else Ctx()
+    ctx = Session.paper() if args.scale == "paper" else Session()
     names = args.only or ORDER
     t0 = time.time()
     for name in names:

@@ -7,10 +7,11 @@ import time
 
 import numpy as np
 
-from benchmarks.common import ALL_BENCH, Ctx, emit
+from benchmarks.common import ALL_BENCH, emit
+from repro.uvm.api import Session
 
 
-def table1(ctx: Ctx):
+def table1(ctx: Session):
     """Baseline / D.+HPE / UVMSmart / D.+Belady pages thrashed @125%."""
     t0 = time.time()
     ctx.uvmsmart_many(ctx.benches)  # independent runs overlap on the host
@@ -30,7 +31,7 @@ def table1(ctx: Ctx):
     return rows
 
 
-def table2(ctx: Ctx):
+def table2(ctx: Session):
     """Demand.+HPE vs Tree.+HPE (the interplay collapse)."""
     t0 = time.time()
     rows = []
@@ -42,7 +43,7 @@ def table2(ctx: Ctx):
     return rows
 
 
-def table3(ctx: Ctx):
+def table3(ctx: Session):
     """Unique page deltas per program phase (the growing-class problem that
     motivates incremental learning; paper Table III)."""
     from repro.core.features import unique_deltas_per_phase
@@ -63,7 +64,7 @@ def table3(ctx: Ctx):
     return rows
 
 
-def table4(ctx: Ctx):
+def table4(ctx: Session):
     """Predictor memory footprint with the paper's accounting (Eq. 4):
     Total = (Params*2 + Activations) * Patterns, 4-bit-ish quantised."""
     t0 = time.time()
@@ -91,7 +92,7 @@ def table4(ctx: Ctx):
     return rows
 
 
-def table6(ctx: Ctx):
+def table6(ctx: Session):
     """Full strategy matrix incl. our solution (the headline table)."""
     t0 = time.time()
     ctx.ours_many(ctx.benches)  # independent learned runs overlap on the host
@@ -120,26 +121,23 @@ def table6(ctx: Ctx):
     return rows
 
 
-def table7(ctx: Ctx):
+def table7(ctx: Session):
     """Concurrent multi-workload page-delta prediction (scalability).
     'Ours' follows the paper's Section V-A protocol: per-pattern models
     pretrained on a (different-input) corpus, then fine-tuned online."""
-    from repro.core.incremental import run_protocol
-    from repro.uvm.runtime import pretrain_table
-    from repro.uvm.trace import BENCHMARKS, concurrent
+    import dataclasses
 
     t0 = time.time()
-    corpus = [BENCHMARKS[n](scale=ctx.scale * 0.6, seed=321 + i) for i, n in enumerate(["ATAX", "Backprop", "BICG", "Hotspot", "NW"])]
+    pretrain = dataclasses.replace(ctx.default_pretrain, seed0=321)
     pairs = [("StreamTriad", "2DCONV"), ("Hotspot", "Srad-v2"), ("NW", "2DCONV"), ("ATAX", "Srad-v2")]
     rows = []
     for a, b in pairs:
         # slices aligned with the training group size: each group sees ONE
         # tenant's coherent stream, which is what the DFA classifies (per-access
         # mixing would blend pattern classes inside every group)
-        tr = concurrent([ctx.trace(a), ctx.trace(b)], slice_len=ctx.tcfg.group_size)
-        online = run_protocol(tr, ctx.pcfg, ctx.tcfg, mode="online_single")
-        table = pretrain_table(corpus, ctx.pcfg, ctx.tcfg, max_rounds=2)
-        ours = run_protocol(tr, ctx.pcfg, ctx.tcfg, mode="ours", table=table)
+        w = ctx.concurrent((a, b), slice_len=ctx.tcfg.group_size)
+        online = ctx.protocol(w, "online_single")
+        ours = ctx.protocol(w, "ours", pretrain=pretrain)
         rows.append({
             "workloads": f"{a}+{b}", "online_top1": round(online.top1, 3),
             "ours_top1": round(ours.top1, 3), "derived": f"delta={ours.top1 - online.top1:+.3f}",

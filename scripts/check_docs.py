@@ -1,10 +1,13 @@
 """Fail CI when the documented commands drift from the real entry points.
 
 Checks, without running any benchmark:
-  * every ``python -m <module>`` mentioned in docs/REPRODUCING.md and
-    README.md answers ``--help`` (argparse wiring exists),
+  * every ``python -m <module>`` mentioned in docs/REPRODUCING.md,
+    docs/API.md and README.md answers ``--help`` (argparse wiring exists),
   * every ``--flag`` a doc attaches to a module appears in that module's
-    ``--help`` output,
+    ``--help`` output (for ``repro.uvm.cli``, in the documented
+    SUBCOMMAND's own ``--help``),
+  * every ``python -m repro.uvm.cli <subcommand>`` names a real key of its
+    SUBCOMMANDS registry,
   * every ``--only <target>`` mentioned for benchmarks.run is a real key of
     its SUITES registry,
   * every repo-relative path the docs reference exists.
@@ -19,20 +22,24 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
-DOCS = [ROOT / "docs" / "REPRODUCING.md", ROOT / "README.md"]
+DOCS = [ROOT / "docs" / "REPRODUCING.md", ROOT / "docs" / "API.md", ROOT / "README.md"]
+
+#: modules whose first positional doc token is a subcommand with its own help
+SUBCOMMAND_MODULES = {"repro.uvm.cli"}
 
 # python -m <module> [args ...] — up to a backtick, pipe or line end
 CMD_RE = re.compile(r"python (?:-m (?P<mod>[\w\.]+)|(?P<script>[\w\./]+\.py))(?P<args>[^`|\n]*)")
 PATH_RE = re.compile(r"\b(?:src|tests|docs|examples|experiments|benchmarks|scripts)/[\w\./-]+")
 
 
-def run_help(module: str) -> str:
+def run_help(module: str, subcommand: str | None = None) -> str:
+    cmd = [sys.executable, "-m", module] + ([subcommand] if subcommand else []) + ["--help"]
     out = subprocess.run(
-        [sys.executable, "-m", module, "--help"],
-        capture_output=True, text=True, cwd=ROOT, timeout=240,
+        cmd, capture_output=True, text=True, cwd=ROOT, timeout=240,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin", "JAX_PLATFORMS": "cpu", "HOME": str(Path.home())},
     )
-    assert out.returncode == 0, f"`python -m {module} --help` failed:\n{out.stderr[-2000:]}"
+    label = f"{module} {subcommand}" if subcommand else module
+    assert out.returncode == 0, f"`python -m {label} --help` failed:\n{out.stderr[-2000:]}"
     return out.stdout
 
 
@@ -53,16 +60,35 @@ def main() -> int:
             if not (ROOT / script).exists():
                 failures.append(f"{doc_name}: script does not exist: {script}")
             continue
-        if mod not in helps:
+        sub = None
+        if mod in SUBCOMMAND_MODULES:
+            # the first bare token after the module is its subcommand; it
+            # must be a key of the module's SUBCOMMANDS registry and its
+            # OWN --help is what the documented flags are checked against
+            sys.path[:0] = [str(ROOT), str(ROOT / "src")]
+            from repro.uvm.cli import SUBCOMMANDS  # noqa: PLC0415
+
+            tok = re.match(r"\s*(\{?[\w,]+\}?)", args)
+            subs = [x for x in (tok.group(1) if tok else "").strip("{}").split(",") if x]
+            if not subs:
+                continue  # a bare `python -m repro.uvm.cli` mention
+            bad = [x for x in subs if x not in SUBCOMMANDS]
+            if bad:
+                failures.append(f"{doc_name}: {bad} not repro.uvm.cli subcommands ({m.group(0).strip()!r})")
+                continue
+            sub = subs[0]
+            args = args[tok.end():]
+        key = (mod, sub)
+        if key not in helps:
             try:
-                helps[mod] = run_help(mod)
+                helps[key] = run_help(mod, sub)
             except AssertionError as e:
                 failures.append(f"{doc_name}: {e}")
-                helps[mod] = ""
+                helps[key] = ""
                 continue
         for flag in re.findall(r"--[\w-]+", args):
-            if flag not in helps[mod]:
-                failures.append(f"{doc_name}: `{flag}` not in `python -m {mod} --help` ({m.group(0).strip()!r})")
+            if flag not in helps[key]:
+                failures.append(f"{doc_name}: `{flag}` not in `python -m {mod}{' ' + sub if sub else ''} --help` ({m.group(0).strip()!r})")
         if mod == "benchmarks.run":
             sys.path[:0] = [str(ROOT), str(ROOT / "src")]
             from benchmarks.run import SUITES  # noqa: PLC0415

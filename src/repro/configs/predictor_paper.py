@@ -33,3 +33,12 @@ class PredictorConfig:
 
 CONFIG = PredictorConfig()
 SMOKE = PredictorConfig(name="predictor-paper-smoke", d_model=16, d_ff=32, num_heads=2, num_layers=1, page_vocab=64, delta_vocab=32, pc_vocab=16, tb_vocab=16)
+
+# Quick-scale predictor (the benchmarks' and the CLI's `--scale quick`
+# default): small enough for CPU minutes, but with a delta vocabulary that
+# does NOT alias the benchmarks' delta sets (SMOKE's 32-entry vocab
+# hash-collides NW's hundreds of deltas into noise).
+CONFIG_QUICK = PredictorConfig(
+    name="predictor-quick", d_model=32, num_heads=2, num_layers=1, d_ff=64,
+    page_vocab=2048, delta_vocab=512, pc_vocab=64, tb_vocab=64,
+)

@@ -125,18 +125,36 @@ def mlp_features(params, batch, cfg):
 
 # --- unified factory ---------------------------------------------------------
 
+def _builder_from_specs(specs, feat):
+    """Wrap a (specs(cfg), features(params, batch, cfg)) pair — the shape all
+    cosine-head encoders share — into the registry builder contract."""
+
+    def build(cfg: PredictorConfig):
+        def fwd(params, batch):
+            f = feat(params, batch, cfg)
+            return P.cosine_logits(params, f, cfg), f
+
+        return (lambda rng: init_params(rng, specs(cfg))), fwd
+
+    return build
+
+
 def make_model(cfg: PredictorConfig, kind: str):
-    """Returns (init_fn(rng)->params, forward_fn(params, batch)->(logits, feats))."""
-    if kind == "transformer":
-        return (lambda rng: P.init(rng, cfg)), (lambda p, b: P.forward(p, b, cfg))
-    specs, feat = {
-        "lstm": (lstm_specs, lstm_features),
-        "cnn": (cnn_specs, cnn_features),
-        "mlp": (mlp_specs, mlp_features),
-    }[kind]
+    """Returns (init_fn(rng)->params, forward_fn(params, batch)->(logits, feats)).
 
-    def fwd(params, batch):
-        f = feat(params, batch, cfg)
-        return P.cosine_logits(params, f, cfg), f
+    ``kind`` is looked up in the predictor registry — the builtin
+    architectures below are default entries, and anything added via
+    :func:`repro.uvm.api.register_predictor` becomes a valid ``kind`` for
+    ``Trainer`` / ``run_protocol`` / ``ModelSpec``."""
+    return _registry.predictor_builder(kind)(cfg)
 
-    return (lambda rng: init_params(rng, specs(cfg))), fwd
+
+from repro.uvm import registry as _registry  # noqa: E402  (leaf module, no cycle)
+
+if "transformer" not in _registry.predictor_names():  # idempotent under reload
+    _registry.register_predictor(
+        "transformer", lambda cfg: ((lambda rng: P.init(rng, cfg)), (lambda p, b: P.forward(p, b, cfg)))
+    )
+    _registry.register_predictor("lstm", _builder_from_specs(lstm_specs, lstm_features))
+    _registry.register_predictor("cnn", _builder_from_specs(cnn_specs, cnn_features))
+    _registry.register_predictor("mlp", _builder_from_specs(mlp_specs, mlp_features))

@@ -1,0 +1,55 @@
+"""`repro.uvm.api` — the declarative experiment surface.
+
+One stable, composable seam over the five historical entry points
+(``simulator.run``/``run_batch``, ``runtime.run_ours``/``run_ours_many``,
+``uvmsmart.run_uvmsmart``, ``incremental.run_protocol`` and the
+benchmark-only ``Ctx`` cache):
+
+* **Specs** (:mod:`repro.uvm.api.specs`) — frozen, JSON-serializable
+  dataclasses (`WorkloadSpec`, `PolicySpec`, `PrefetchSpec`, `ModelSpec`,
+  `CellSpec`, `ProtocolSpec`, `ExperimentSpec`), each with a stable
+  content-hash `.key`.
+* **Registries** (:mod:`repro.uvm.registry`) — `register_policy`,
+  `register_prefetcher`, `register_predictor`: the builtin strategies are
+  default entries; a new policy is a ~20-line registration that rides the
+  packed-priority vmapped scan.
+* **Session + run store** (:mod:`repro.uvm.api.session`,
+  :mod:`repro.uvm.api.store`) — `Session` executes cells, auto-grouping
+  compatible ones into the batched `run_batch` / `run_ours_many` lanes, and
+  persists every result content-addressed under ``experiments/runs/``.
+* **CLI** — ``python -m repro.uvm.cli {run,sweep,report}``.
+
+See docs/API.md for the cookbook.
+"""
+from repro.uvm.api.specs import (
+    CellSpec,
+    ExperimentSpec,
+    ModelSpec,
+    PolicySpec,
+    PrefetchSpec,
+    PretrainSpec,
+    ProtocolSpec,
+    TrainSpec,
+    WorkloadSpec,
+    spec_from_dict,
+    spec_key,
+)
+from repro.uvm.api.store import RunStore
+from repro.uvm.api.session import ALL_BENCH, FEATURED, Session
+from repro.uvm.registry import (
+    register_policy,
+    register_prefetcher,
+    register_predictor,
+    policy_names,
+    prefetcher_names,
+    predictor_names,
+)
+
+__all__ = [
+    "WorkloadSpec", "PolicySpec", "PrefetchSpec", "TrainSpec", "PretrainSpec",
+    "ModelSpec", "CellSpec", "ProtocolSpec", "ExperimentSpec",
+    "spec_key", "spec_from_dict",
+    "RunStore", "Session", "ALL_BENCH", "FEATURED",
+    "register_policy", "register_prefetcher", "register_predictor",
+    "policy_names", "prefetcher_names", "predictor_names",
+]

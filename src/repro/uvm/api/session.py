@@ -1,0 +1,527 @@
+"""`Session`: the spec-driven experiment runner behind tables, figures,
+tests and the CLI.
+
+A Session executes :class:`~repro.uvm.api.specs.CellSpec` /
+:class:`~repro.uvm.api.specs.ProtocolSpec` cells and serves every repeat
+from two layers of cache:
+
+* an in-process memo (one entry per spec content key), and
+* the persistent content-addressed :class:`~repro.uvm.api.store.RunStore`
+  under ``experiments/runs/`` — so a second process (or a CLI invocation
+  after a benchmark run) never recomputes a cell it can look up.
+
+Compatible cells are auto-grouped into the batched engines:
+
+* ``sim`` cells on the same workload run as ONE vmapped
+  :func:`repro.uvm.simulator.run_batch` sweep (policy/prefetch/capacity are
+  traced lane parameters — any registered policy rides along);
+* ``ours`` cells sharing a model run through the adaptive cross-benchmark
+  engine (vmapped :func:`repro.uvm.runtime.run_ours_many` on multi-device,
+  thread-pooled serial otherwise — REPRO_OURS_BATCHED forces);
+* ``uvmsmart`` cells overlap on the host thread pool.
+
+Counters are bit-identical to the single-cell entry points for every policy
+except ``random`` (whose PRNG draws depend on lane padding — documented
+contract; its cells are therefore memoised in-process but never persisted).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import warnings
+from pathlib import Path
+
+from repro.uvm.api.specs import (
+    CellSpec,
+    ExperimentSpec,
+    ModelSpec,
+    PolicySpec,
+    PrefetchSpec,
+    PretrainSpec,
+    ProtocolSpec,
+    TrainSpec,
+    WorkloadSpec,
+    PAPER_TRAIN,
+    SCALE_PRESETS,
+)
+from repro.uvm.api.store import RunStore
+
+
+def enable_compile_cache() -> None:
+    """Persistent XLA compilation cache: the simulator's unified scan and
+    the predictor's train/eval jits compile once per shape-bucket EVER, not
+    once per process. Harmless if the dir is unwritable (JAX falls back
+    silently)."""
+    import jax
+
+    cache_dir = os.environ.get("REPRO_JAX_CACHE", str(Path.home() / ".cache" / "repro_jax"))
+    try:
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.3)
+    except Exception:
+        pass
+
+
+enable_compile_cache()
+
+from repro.configs.predictor_paper import CONFIG as PCFG_PAPER  # noqa: E402
+from repro.core.incremental import RunResult, run_protocol  # noqa: E402
+from repro.uvm import runtime as R  # noqa: E402
+from repro.uvm import simulator as S  # noqa: E402
+from repro.uvm import timing  # noqa: E402
+from repro.uvm import trace as T  # noqa: E402
+from repro.uvm.runtime import LearnedRunResult  # noqa: E402
+from repro.uvm.uvmsmart import run_uvmsmart  # noqa: E402
+
+ALL_BENCH = list(T.BENCHMARKS)
+FEATURED = ["ATAX", "BICG", "Hotspot", "NW", "Srad-v2"]  # the paper's focus set
+
+#: predictor kinds whose implementation lives in this repo (safe to persist)
+_BUILTIN_PREDICTORS = frozenset({"transformer", "lstm", "cnn", "mlp"})
+
+
+def _learned_to_payload(res: LearnedRunResult) -> dict:
+    return dataclasses.asdict(res)
+
+
+def _payload_to_learned(payload: dict) -> LearnedRunResult:
+    return LearnedRunResult(**payload)
+
+
+def _protocol_to_payload(res: RunResult) -> dict:
+    # the summary the tables/figures consume; the per-sample arrays are
+    # derived data too bulky to persist per cell
+    return {
+        "top1": res.top1, "per_group": list(res.per_group),
+        "n_classes": res.n_classes, "n_models": res.n_models, "n_samples": res.n_samples,
+    }
+
+
+def _payload_to_protocol(payload: dict) -> RunResult:
+    return RunResult(
+        top1=payload["top1"], per_group=payload["per_group"],
+        n_classes=payload["n_classes"], n_models=payload["n_models"],
+        n_samples=payload["n_samples"], predictions=None, t_index=None, correct=None,
+    )
+
+
+class Session:
+    """Spec-driven runner with a persistent run store (see module docs).
+
+    ``Session()`` is quick scale; ``Session.paper()`` is the full generator
+    sizes and the paper's predictor.  ``store=None`` uses the default
+    ``experiments/runs/`` store; pass a :class:`RunStore` to relocate it or
+    ``RunStore(enabled=False)`` / env ``REPRO_RUN_STORE=0`` to disable
+    persistence.
+    """
+
+    # Every rule-based cell the tables/figures touch; computed together so one
+    # vmapped scan per (benchmark, oversubscription) fills the whole cache row.
+    STANDARD_CELLS = (
+        ("lru", "tree"), ("lru", "demand"), ("hpe", "demand"),
+        ("hpe", "tree"), ("belady", "demand"),
+    )
+
+    def __init__(
+        self,
+        scale: float = SCALE_PRESETS["quick"][0],
+        cap: int = SCALE_PRESETS["quick"][1],
+        model: ModelSpec | None = None,
+        benches: list | None = None,
+        store: RunStore | None = None,
+    ):
+        self.scale = scale
+        self.cap = cap
+        self.model = model if model is not None else ModelSpec()
+        self.benches = list(benches) if benches is not None else list(ALL_BENCH)
+        self.store = store if store is not None else RunStore()
+        self._tcfg = self.model.train.to_train_config()
+        self._traces: dict = {}
+        self._results: dict = {}  # spec key -> result object (in-process memo)
+        self._pretrained: dict = {}  # (recipe, model-config) key -> ModelTable master
+        self.counters = {"memory_hits": 0, "store_hits": 0, "computed": 0}
+        # _lookup/_record run inside _warm_many's thread pool; the counters'
+        # read-modify-write (and the memo insert) must not lose updates —
+        # ci greps exact `computed=N` lines
+        self._cache_lock = threading.Lock()
+
+    @classmethod
+    def paper(cls, **kw) -> "Session":
+        kw.setdefault("scale", SCALE_PRESETS["paper"][0])
+        kw.setdefault("cap", SCALE_PRESETS["paper"][1])
+        kw.setdefault("model", ModelSpec(predictor=PCFG_PAPER, train=PAPER_TRAIN))
+        return cls(**kw)
+
+    # -- config views (what the old Ctx exposed) ----------------------------
+
+    @property
+    def pcfg(self):
+        return self.model.predictor
+
+    @property
+    def tcfg(self):
+        return self._tcfg
+
+    @property
+    def default_pretrain(self) -> PretrainSpec:
+        """The benchmark suite's Section V-A recipe at this session's scale."""
+        return PretrainSpec(scale=self.scale * 0.6)
+
+    # -- workloads ----------------------------------------------------------
+
+    def workload(self, name: str) -> WorkloadSpec:
+        return WorkloadSpec(name, self.scale, self.cap)
+
+    def concurrent(self, tenants, *, slice_len: int = 256, seed: int = 0) -> WorkloadSpec:
+        """A Section V-F multi-tenant workload of this session's scale."""
+        return WorkloadSpec.concurrent(tenants, scale=self.scale, cap=self.cap, slice_len=slice_len, seed=seed)
+
+    def _workload(self, w) -> WorkloadSpec:
+        return self.workload(w) if isinstance(w, str) else w
+
+    def trace(self, w: WorkloadSpec | str) -> T.Trace:
+        w = self._workload(w)
+        if w.key not in self._traces:
+            if w.tenants:
+                parts = [self.trace(WorkloadSpec(t, w.scale, w.cap)) for t in w.tenants]
+                self._traces[w.key] = T.concurrent(parts, seed=w.seed, slice_len=w.slice_len)
+            else:
+                tr = T.get_trace(w.benchmark, scale=w.scale)
+                self._traces[w.key] = tr.slice(0, min(len(tr), w.cap))
+        return self._traces[w.key]
+
+    def ipc(self, w: WorkloadSpec | str, stats: dict, **kw) -> float:
+        return timing.ipc(stats, len(self.trace(w)), **kw)
+
+    # -- cache plumbing ------------------------------------------------------
+
+    def _lookup(self, spec, from_payload):
+        """Memory first, then the persistent store (reconstructing the
+        result object); None on a full miss."""
+        key = spec.key
+        with self._cache_lock:
+            if key in self._results:
+                self.counters["memory_hits"] += 1
+                return self._results[key]
+        payload = self.store.get(spec)
+        if payload is not None:
+            res = from_payload(payload)
+            with self._cache_lock:
+                self._results[key] = res
+                self.counters["store_hits"] += 1
+            return res
+        return None
+
+    def _record(self, spec, result, to_payload, *, persist: bool = True):
+        with self._cache_lock:
+            self._results[spec.key] = result
+            self.counters["computed"] += 1
+        if persist:
+            self.store.put(spec, to_payload(result))
+        return result
+
+    # -- spec execution ------------------------------------------------------
+
+    def run(self, cell: CellSpec):
+        """Execute (or look up) one cell; returns its stats dict
+        (sim/uvmsmart) or :class:`LearnedRunResult` (ours)."""
+        return self.sweep([cell])[0]
+
+    def sweep(self, cells) -> list:
+        """Execute a list of cells (or an :class:`ExperimentSpec`), serving
+        repeats from the store and auto-grouping the misses into the batched
+        engines. Results align with the input order."""
+        if isinstance(cells, ExperimentSpec):
+            cells = cells.cells()
+        cells = list(cells)
+        results: dict[int, object] = {}
+        missing: list[tuple[int, CellSpec]] = []
+        for i, cell in enumerate(cells):
+            hit = self._lookup(cell, self._payload_decoder(cell))
+            if hit is not None:
+                results[i] = hit
+            else:
+                missing.append((i, cell))
+
+        sim_by_workload: dict[str, list[tuple[int, CellSpec]]] = {}
+        ours_by_model: dict[str, list[tuple[int, CellSpec]]] = {}
+        smart: list[tuple[int, CellSpec]] = []
+        for i, cell in missing:
+            if cell.strategy == "sim":
+                sim_by_workload.setdefault(cell.workload.key, []).append((i, cell))
+            elif cell.strategy == "ours":
+                ours_by_model.setdefault(f"{cell.model.key}|{cell.oversubscription}|{cell.seed}", []).append((i, cell))
+            else:
+                smart.append((i, cell))
+
+        for group in sim_by_workload.values():
+            results.update(self._run_sim_group(group))
+        for group in ours_by_model.values():
+            results.update(self._run_ours_group(group))
+        results.update(self._run_uvmsmart_group(smart))
+        return [results[i] for i in range(len(cells))]
+
+    @staticmethod
+    def _payload_decoder(cell: CellSpec):
+        return _payload_to_learned if cell.strategy == "ours" else (lambda p: p)
+
+    def _run_sim_group(self, group) -> dict[int, dict]:
+        """All sim cells of one workload in ONE vmapped run_batch sweep."""
+        _, first = group[0]
+        tr = self.trace(first.workload)
+        tuples = [(c.policy.name, c.prefetch.name, c.oversubscription) for _, c in group]
+        stats = S.run_batch(tr, tuples, seeds=[c.seed for _, c in group])
+        out = {}
+        for (i, cell), st in zip(group, stats):
+            out[i] = self._record(cell, st, lambda p: p, persist=self._persistable(cell))
+        return out
+
+    @staticmethod
+    def _persistable(cell: CellSpec) -> bool:
+        """Whether a cell's result may enter the PERSISTENT store.
+
+        Two exemptions (memoised in-process only):
+        * ``random`` — counters depend on lane padding (documented contract);
+        * plugin strategies — a spec hashes a registered policy/prefetcher/
+          predictor by NAME only, so a changed implementation under the same
+          name would silently be served the old result across processes.
+          Builtins are pinned by the golden suite; plugins are not.
+        """
+        if cell.strategy == "uvmsmart":
+            return True
+        if cell.strategy == "ours":
+            return cell.model.kind in _BUILTIN_PREDICTORS
+        return (
+            cell.policy.name != "random"
+            and cell.policy.name in S.POLICIES
+            and cell.prefetch.name in S.PREFETCHERS
+        )
+
+    def _run_ours_group(self, group) -> dict[int, LearnedRunResult]:
+        """Learned cells sharing one ModelSpec: the adaptive engine of the
+        benchmark suite (vmapped lockstep on multi-device, thread-pooled
+        serial on one device; REPRO_OURS_BATCHED forces)."""
+        if not group:
+            return {}
+        import jax
+
+        _, first = group[0]
+        model, oversub = first.model, first.oversubscription
+        kw = dict(
+            kind=model.kind,
+            use_thrash_term=model.use_thrash_term,
+            use_lucir=model.use_lucir,
+            seed=first.seed,  # cells group by (model, oversub, seed)
+        )
+        tcfg = model.train.to_train_config()
+
+        def table():
+            if model.pretrain is None:
+                return None
+            # the table must be pretrained with the CELL's model configs
+            # (which may differ from this session's defaults)
+            return self.pretrained(
+                model.pretrain, pcfg=model.predictor, train=model.train, kind=model.kind
+            )
+
+        def run_one(item):
+            i, cell = item
+            res = R.run_ours(
+                self.trace(cell.workload), model.predictor, tcfg,
+                oversubscription=oversub, table=table(), **kw,
+            )
+            return i, self._record(cell, res, _learned_to_payload, persist=self._persistable(cell))
+
+        knob = os.environ.get("REPRO_OURS_BATCHED", "")
+        batched = len(group) > 1 and knob != "0" and (knob == "1" or len(jax.devices()) > 1)
+        if not batched:
+            if model.pretrain is not None:
+                table()  # build (or load) the shared table once, serially
+            return dict(self._warm_many(run_one, group))
+        results = R.run_ours_many(
+            [self.trace(c.workload) for _, c in group], model.predictor, tcfg,
+            oversubscription=oversub,
+            tables=[table() for _ in group] if model.pretrain is not None else None, **kw,
+        )
+        return {
+            i: self._record(cell, res, _learned_to_payload, persist=self._persistable(cell))
+            for (i, cell), res in zip(group, results)
+        }
+
+    def _run_uvmsmart_group(self, group) -> dict[int, dict]:
+        def run_one(item):
+            i, cell = item
+            st = run_uvmsmart(self.trace(cell.workload), oversubscription=cell.oversubscription, seed=cell.seed)
+            return i, self._record(cell, st, lambda p: p)
+
+        return dict(self._warm_many(run_one, group))
+
+    @staticmethod
+    def _warm_many(run_one, todo: list) -> list:
+        """Run one item serially (so the pool hits warm compiles), then the
+        rest through a small thread pool. Each item is a self-contained
+        computation, so results are identical to the serial path regardless
+        of scheduling; JAX releases the GIL during compiled execution and
+        the slight oversubscription hides host<->device sync stalls."""
+        from concurrent.futures import ThreadPoolExecutor
+
+        results = []
+        if todo:
+            results.append(run_one(todo[0]))
+        if len(todo) <= 1:
+            return results
+        with ThreadPoolExecutor(max_workers=min(4, 2 * (os.cpu_count() or 1))) as pool:
+            results.extend(pool.map(run_one, todo[1:]))
+        return results
+
+    # -- named conveniences (the shapes the tables/figures consume) ---------
+
+    def _sim_cell(self, w, policy: str, prefetch: str, oversub: float) -> CellSpec:
+        return CellSpec(self._workload(w), "sim", PolicySpec(policy), PrefetchSpec(prefetch), oversub)
+
+    def sims(self, w, cells: list) -> list[dict]:
+        """Batched sweep: (policy, prefetch, oversub) tuples over one
+        workload in ONE vmapped scan (bit-identical to per-cell S.run for
+        non-random policies)."""
+        return self.sweep([self._sim_cell(w, p, f, os_) for p, f, os_ in cells])
+
+    def sim(self, w, policy: str, prefetch: str, oversub: float = 1.25) -> dict:
+        """One rule-based cell; a miss warms the whole STANDARD_CELLS row
+        for (workload, oversub) in one sweep, like the row-oriented tables
+        consume it."""
+        cell = self._sim_cell(w, policy, prefetch, oversub)
+        hit = self._lookup(cell, self._payload_decoder(cell))
+        if hit is not None:
+            return hit
+        todo = [(p, f, oversub) for p, f in self.STANDARD_CELLS]
+        if (policy, prefetch, oversub) not in todo:
+            todo.append((policy, prefetch, oversub))
+        row = self.sims(w, todo)
+        return row[todo.index((policy, prefetch, oversub))]
+
+    def _ours_model(self, **kw) -> ModelSpec:
+        unknown = set(kw) - {"kind", "use_thrash_term", "use_lucir"}
+        if unknown:
+            raise TypeError(f"unknown learned-run options: {sorted(unknown)}")
+        return dataclasses.replace(self.model, pretrain=self.default_pretrain, **kw)
+
+    def ours_cell(self, w, oversub: float = 1.25, seed: int = 0, **kw) -> CellSpec:
+        return CellSpec(
+            self._workload(w), "ours", PolicySpec("learned"), PrefetchSpec("none"),
+            oversub, self._ours_model(**kw), seed,
+        )
+
+    def ours(self, w, oversub: float = 1.25, seed: int = 0, **kw) -> LearnedRunResult:
+        """The paper's full learned runtime on one workload (Section IV).
+        ``seed`` seeds the simulator state (like sim cells); model/training
+        seeds live in the ModelSpec's TrainSpec."""
+        return self.run(self.ours_cell(w, oversub, seed, **kw))
+
+    def ours_many(self, names: list, oversub: float = 1.25, **kw) -> list[LearnedRunResult]:
+        """Warm the learned-run cache for many benchmarks in one grouped
+        sweep (the engines overlap/batch across lanes)."""
+        return self.sweep([self.ours_cell(n, oversub, **kw) for n in names])
+
+    def _uvmsmart_cell(self, w, oversub: float) -> CellSpec:
+        return CellSpec(self._workload(w), "uvmsmart", PolicySpec("adaptive"), PrefetchSpec("adaptive"), oversub)
+
+    def uvmsmart(self, w, oversub: float = 1.25) -> dict:
+        return self.run(self._uvmsmart_cell(w, oversub))
+
+    def uvmsmart_many(self, names: list, oversub: float = 1.25) -> list[dict]:
+        return self.sweep([self._uvmsmart_cell(n, oversub) for n in names])
+
+    # -- pretraining + protocols --------------------------------------------
+
+    def pretrained(self, pspec: PretrainSpec | None = None, *,
+                   pcfg=None, train: TrainSpec | None = None, kind: str = "transformer"):
+        """Section V-A pretrained per-pattern table for ``pspec`` (default:
+        this session's recipe); built/loaded once per (recipe, predictor,
+        training, kind) and CLONED per use (fine-tuning mutates the
+        entries).
+
+        ``pcfg``/``train``/``kind`` default to this session's model, but
+        cells carry their own :class:`ModelSpec` — the table must be
+        pretrained with the configs AND architecture of the model that will
+        fine-tune it (transformer weights fed to an lstm trainer crash)."""
+        pspec = pspec or self.default_pretrain
+        pcfg = pcfg if pcfg is not None else self.pcfg
+        train = train if train is not None else self.model.train
+        memo_key = (pspec.key, pcfg, train, kind)
+        if memo_key not in self._pretrained:
+            corpus = [
+                T.BENCHMARKS[n](scale=pspec.scale, seed=pspec.seed0 + i)
+                for i, n in enumerate(pspec.benchmarks)
+            ]
+            self._pretrained[memo_key] = R.pretrain_table(
+                corpus, pcfg, train.to_train_config(), kind=kind, max_rounds=pspec.max_rounds
+            )
+        return self._pretrained[memo_key].clone()
+
+    def protocol(self, w, mode: str, kind: str = "transformer",
+                 pretrain: PretrainSpec | None = None) -> RunResult:
+        """One prediction-accuracy protocol run (strictly-causal top-1).
+        ``pretrain`` (with ``mode='ours'``) starts from a fresh clone of
+        that recipe's table — the paper's pretrain-then-finetune protocol."""
+        return self.protocol_chain([w], mode, kind=kind, pretrain=pretrain)[0]
+
+    def protocol_chain(self, workloads: list, mode: str, *, kind: str = "transformer",
+                       pretrain: PretrainSpec | None = None) -> list[RunResult]:
+        """Protocol runs that SHARE one pretrained table, fine-tuned link by
+        link (fig11's shape): link i's result depends on links < i, so each
+        link's spec carries the chain prefix in ``prior`` and the chain is
+        served from the store only when every link hits."""
+        model = dataclasses.replace(self.model, kind=kind, pretrain=pretrain)
+        specs, prior = [], ()
+        for w in workloads:
+            w = self._workload(w)
+            specs.append(ProtocolSpec(w, mode, model, prior))
+            if pretrain is not None:
+                prior = prior + (w.key,)
+        hits = [self._lookup(s, _payload_to_protocol) for s in specs]
+        if all(h is not None for h in hits):
+            return hits
+        table = (
+            self.pretrained(pretrain, pcfg=model.predictor, train=model.train, kind=kind)
+            if pretrain is not None else None
+        )
+        tcfg = model.train.to_train_config()
+        out = []
+        for spec in specs:
+            res = run_protocol(
+                self.trace(spec.workload), model.predictor, tcfg,
+                mode=mode, kind=kind, table=table,
+            )
+            out.append(self._record(
+                spec, res, _protocol_to_payload,
+                persist=spec.model.kind in _BUILTIN_PREDICTORS,
+            ))
+        return out
+
+
+class Ctx(Session):
+    """Deprecated: the benchmark suite's pre-API context object.
+
+    Kept as a thin shim over :class:`Session` for the historical
+    ``Ctx(scale, cap, pcfg, tcfg, benches)`` signature; new code should
+    construct a :class:`Session` (optionally with a :class:`ModelSpec`).
+    """
+
+    def __init__(self, scale: float = 0.4, cap: int = 6000, pcfg=None, tcfg=None, benches=None):
+        warnings.warn(
+            "benchmarks.common.Ctx is deprecated; use repro.uvm.api.Session",
+            DeprecationWarning, stacklevel=2,
+        )
+        model = ModelSpec(
+            predictor=pcfg if pcfg is not None else ModelSpec().predictor,
+            train=TrainSpec.from_train_config(tcfg) if tcfg is not None else TrainSpec(),
+        )
+        super().__init__(scale=scale, cap=cap, model=model, benches=benches)
+
+    @classmethod
+    def paper(cls) -> "Ctx":
+        """The historical paper-scale context (Ctx.paper() predates
+        Session.paper() and keeps the old constructor signature)."""
+        scale, cap = SCALE_PRESETS["paper"]
+        return cls(scale=scale, cap=cap, pcfg=PCFG_PAPER, tcfg=PAPER_TRAIN.to_train_config())

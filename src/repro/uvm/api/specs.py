@@ -1,0 +1,322 @@
+"""Frozen, JSON-serializable experiment specs with stable content-hash keys.
+
+Every spec is an immutable dataclass whose canonical JSON (sorted keys,
+no whitespace) is hashed into a 16-hex ``key`` — the content address the
+run store files results under.  Two specs with equal fields have equal
+keys in every process; any field change (including nested specs) changes
+the key.  ``SCHEMA`` is folded into the hash so that a semantic change to
+what a result MEANS can invalidate every stored run at once.
+
+Round trip: ``spec.to_dict()`` / ``spec.to_json()`` and
+``spec_from_dict(kind, d)`` / ``SpecClass.from_dict(d)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Iterator
+
+from repro.configs.predictor_paper import CONFIG_QUICK, PredictorConfig
+from repro.core.incremental import TrainConfig
+
+SCHEMA = 1  # bump to invalidate every stored run
+
+#: corpus the paper's Section V-A pretraining draws from (5 benchmarks,
+#: different inputs) — shared default of Session.pretrained / fig11 / table7
+PRETRAIN_BENCHES = ("ATAX", "Backprop", "BICG", "Hotspot", "NW")
+
+
+def spec_key(spec) -> str:
+    """Stable 16-hex content hash of a spec (type name + schema + fields)."""
+    payload = json.dumps(
+        {"kind": type(spec).__name__, "schema": SCHEMA, "spec": dataclasses.asdict(spec)},
+        sort_keys=True, separators=(",", ":"),
+    )
+    return hashlib.md5(payload.encode()).hexdigest()[:16]
+
+
+class _SpecBase:
+    """Mixin: content key + JSON round trip for frozen spec dataclasses."""
+
+    @property
+    def key(self) -> str:
+        return spec_key(self)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True, separators=(",", ":"))
+
+    @classmethod
+    def from_json(cls, s: str):
+        return cls.from_dict(json.loads(s))
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec(_SpecBase):
+    """A trace to drive: one benchmark generator, or a concurrent merge.
+
+    ``tenants`` non-empty makes this a Section V-F multi-workload trace:
+    each tenant benchmark is generated at (scale, cap) and merged at
+    scheduler-slice granularity into disjoint page ranges
+    (:func:`repro.uvm.trace.concurrent` with ``slice_len``/``seed``)."""
+
+    benchmark: str
+    scale: float = 0.4
+    cap: int = 6000  # max trace length (quick mode)
+    tenants: tuple[str, ...] = ()
+    slice_len: int = 256
+    seed: int = 0  # concurrent-merge seed (unused for single-tenant)
+
+    @classmethod
+    def concurrent(cls, tenants, *, scale: float = 0.4, cap: int = 6000,
+                   slice_len: int = 256, seed: int = 0) -> "WorkloadSpec":
+        tenants = tuple(tenants)
+        return cls("+".join(tenants), scale, cap, tenants, slice_len, seed)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "WorkloadSpec":
+        return cls(
+            benchmark=d["benchmark"], scale=d["scale"], cap=d["cap"],
+            tenants=tuple(d.get("tenants", ())),
+            slice_len=d.get("slice_len", 256), seed=d.get("seed", 0),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySpec(_SpecBase):
+    """An eviction policy by registered name (see registry.policy_names())."""
+
+    name: str = "lru"
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PolicySpec":
+        return cls(name=d["name"])
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefetchSpec(_SpecBase):
+    """A prefetcher by registered name (see registry.prefetcher_names())."""
+
+    name: str = "tree"
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PrefetchSpec":
+        return cls(name=d["name"])
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSpec(_SpecBase):
+    """Frozen mirror of :class:`repro.core.incremental.TrainConfig`."""
+
+    group_size: int = 1024
+    epochs: int = 2
+    batch_size: int = 128
+    lr: float = 3e-3
+    seed: int = 0
+    table_slots: int = 8
+
+    def to_train_config(self) -> TrainConfig:
+        return TrainConfig(**dataclasses.asdict(self))
+
+    @classmethod
+    def from_train_config(cls, tcfg: TrainConfig) -> "TrainSpec":
+        return cls(**dataclasses.asdict(tcfg))
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TrainSpec":
+        return cls(**d)
+
+
+#: the paper-scale training schedule (Ctx.paper() historically)
+PAPER_TRAIN = TrainSpec(group_size=2048, epochs=3, batch_size=256)
+
+#: the shared (trace scale, cap) presets behind every `--scale quick|paper`
+#: flag (CLI, sim_perf) and the Session defaults / Session.paper()
+SCALE_PRESETS = {"quick": (0.4, 6000), "paper": (1.0, 60_000)}
+
+
+def parse_scale(scale_arg: str, cap_arg: int | None = None) -> tuple[float, int]:
+    """Resolve a `--scale` flag ('quick'/'paper'/float string) + optional
+    `--cap` override to (scale, cap) — the one parser every CLI shares."""
+    if scale_arg in SCALE_PRESETS:
+        scale, cap = SCALE_PRESETS[scale_arg]
+    else:
+        scale, cap = float(scale_arg), SCALE_PRESETS["quick"][1]
+    return scale, (cap_arg if cap_arg is not None else cap)
+
+
+@dataclasses.dataclass(frozen=True)
+class PretrainSpec(_SpecBase):
+    """Section V-A offline pretraining recipe: a corpus of benchmark runs
+    with different inputs (``seed0 + i``) feeding ``pretrain_table``."""
+
+    benchmarks: tuple[str, ...] = PRETRAIN_BENCHES
+    scale: float = 0.24
+    seed0: int = 777
+    max_rounds: int = 2
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PretrainSpec":
+        return cls(
+            benchmarks=tuple(d.get("benchmarks", PRETRAIN_BENCHES)),
+            scale=d["scale"], seed0=d["seed0"], max_rounds=d["max_rounds"],
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec(_SpecBase):
+    """Everything that determines a learned run besides the workload:
+    predictor architecture (a registered ``kind``), its config, the
+    training schedule, the Eq. 3 ablation switches, and the optional
+    Section V-A pretraining recipe."""
+
+    kind: str = "transformer"
+    predictor: PredictorConfig = CONFIG_QUICK
+    train: TrainSpec = TrainSpec()
+    use_thrash_term: bool = True
+    use_lucir: bool = True
+    pretrain: PretrainSpec | None = None
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ModelSpec":
+        return cls(
+            kind=d["kind"],
+            predictor=PredictorConfig(**d["predictor"]),
+            train=TrainSpec.from_dict(d["train"]),
+            use_thrash_term=d["use_thrash_term"],
+            use_lucir=d["use_lucir"],
+            pretrain=PretrainSpec.from_dict(d["pretrain"]) if d.get("pretrain") else None,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec(_SpecBase):
+    """One experiment cell: a workload under one management strategy.
+
+    ``strategy`` picks the engine:
+      * ``sim``       — rule-based (policy, prefetch) through the simulator
+      * ``ours``      — the paper's learned runtime (``model`` required)
+      * ``uvmsmart``  — the UVMSmart adaptive baseline
+    """
+
+    workload: WorkloadSpec
+    strategy: str = "sim"
+    policy: PolicySpec = PolicySpec("lru")
+    prefetch: PrefetchSpec = PrefetchSpec("tree")
+    oversubscription: float = 1.25
+    model: ModelSpec | None = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.strategy not in ("sim", "ours", "uvmsmart"):
+            raise ValueError(f"unknown strategy {self.strategy!r}")
+        if self.strategy == "ours" and self.model is None:
+            raise ValueError("strategy 'ours' needs a ModelSpec")
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CellSpec":
+        return cls(
+            workload=WorkloadSpec.from_dict(d["workload"]),
+            strategy=d["strategy"],
+            policy=PolicySpec.from_dict(d["policy"]),
+            prefetch=PrefetchSpec.from_dict(d["prefetch"]),
+            oversubscription=d["oversubscription"],
+            model=ModelSpec.from_dict(d["model"]) if d.get("model") else None,
+            seed=d.get("seed", 0),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolSpec(_SpecBase):
+    """A prediction-accuracy protocol run (Figs. 4/6/10/11, Table VII).
+
+    ``prior`` is the chain context: the benchmark names whose ``ours``
+    protocol runs already fine-tuned the shared pretrained table before
+    this one (fig11 reuses ONE table across its featured benchmarks, so a
+    link's result depends on the links before it — the content hash must
+    too). Empty for independent runs."""
+
+    workload: WorkloadSpec
+    mode: str = "online_single"  # online_single | online_multi | ours | offline
+    model: ModelSpec = ModelSpec()
+    prior: tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if self.mode not in ("online_single", "online_multi", "ours", "offline"):
+            raise ValueError(f"unknown protocol mode {self.mode!r}")
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ProtocolSpec":
+        return cls(
+            workload=WorkloadSpec.from_dict(d["workload"]),
+            mode=d["mode"],
+            model=ModelSpec.from_dict(d["model"]),
+            prior=tuple(d.get("prior", ())),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec(_SpecBase):
+    """A named cross product of cells: workloads x policies x prefetchers x
+    oversubscription levels (for ``strategy='sim'``), or workloads x
+    oversubscriptions (for ``ours`` / ``uvmsmart``, which have no
+    policy/prefetch axis). ``extra_cells`` appends arbitrary cells."""
+
+    name: str = "experiment"
+    workloads: tuple[WorkloadSpec, ...] = ()
+    strategy: str = "sim"
+    policies: tuple[PolicySpec, ...] = (PolicySpec("lru"),)
+    prefetchers: tuple[PrefetchSpec, ...] = (PrefetchSpec("tree"),)
+    oversubscriptions: tuple[float, ...] = (1.25,)
+    model: ModelSpec | None = None
+    seed: int = 0
+    extra_cells: tuple[CellSpec, ...] = ()
+
+    def cells(self) -> list[CellSpec]:
+        out: list[CellSpec] = []
+        for w in self.workloads:
+            for os_ in self.oversubscriptions:
+                if self.strategy == "sim":
+                    out += [
+                        CellSpec(w, "sim", pol, pf, os_, None, self.seed)
+                        for pol in self.policies for pf in self.prefetchers
+                    ]
+                else:
+                    out.append(CellSpec(
+                        w, self.strategy, PolicySpec("learned" if self.strategy == "ours" else "adaptive"),
+                        PrefetchSpec("none" if self.strategy == "ours" else "adaptive"),
+                        os_, self.model, self.seed,
+                    ))
+        return out + list(self.extra_cells)
+
+    def __iter__(self) -> Iterator[CellSpec]:
+        return iter(self.cells())
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentSpec":
+        return cls(
+            name=d.get("name", "experiment"),
+            workloads=tuple(WorkloadSpec.from_dict(w) for w in d.get("workloads", ())),
+            strategy=d.get("strategy", "sim"),
+            policies=tuple(PolicySpec.from_dict(p) for p in d.get("policies", ({"name": "lru"},))),
+            prefetchers=tuple(PrefetchSpec.from_dict(p) for p in d.get("prefetchers", ({"name": "tree"},))),
+            oversubscriptions=tuple(d.get("oversubscriptions", (1.25,))),
+            model=ModelSpec.from_dict(d["model"]) if d.get("model") else None,
+            seed=d.get("seed", 0),
+            extra_cells=tuple(CellSpec.from_dict(c) for c in d.get("extra_cells", ())),
+        )
+
+
+_SPEC_KINDS = {
+    cls.__name__: cls
+    for cls in (WorkloadSpec, PolicySpec, PrefetchSpec, TrainSpec, PretrainSpec,
+                ModelSpec, CellSpec, ProtocolSpec, ExperimentSpec)
+}
+
+
+def spec_from_dict(kind: str, d: dict):
+    """Reconstruct any spec from (class name, to_dict() payload)."""
+    return _SPEC_KINDS[kind].from_dict(d)

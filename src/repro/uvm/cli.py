@@ -1,0 +1,223 @@
+"""Command-line front end for the declarative experiment API.
+
+    PYTHONPATH=src python -m repro.uvm.cli run   --benchmark ATAX --policy lru --prefetch tree
+    PYTHONPATH=src python -m repro.uvm.cli sweep --benchmarks ATAX BICG --policies lru hpe \
+        --prefetchers demand tree --oversubs 1.25 1.5
+    PYTHONPATH=src python -m repro.uvm.cli sweep --spec experiment.json
+    PYTHONPATH=src python -m repro.uvm.cli report
+
+Every executed cell is published to the content-addressed run store
+(``experiments/runs/`` by default; ``--runs-dir`` relocates it), so a
+repeated invocation is served entirely from disk — the final
+``# sweep cells=N hits=H computed=C`` line says how much work actually ran
+(CI asserts ``computed=0`` on the second pass). ``--dump-spec`` writes the
+composed :class:`~repro.uvm.api.specs.ExperimentSpec` as JSON, the
+declarative artifact ``sweep --spec`` replays.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+
+from repro.uvm.api import (
+    ExperimentSpec,
+    ModelSpec,
+    PolicySpec,
+    PrefetchSpec,
+    RunStore,
+    Session,
+    WorkloadSpec,
+)
+from repro.uvm.api.specs import PAPER_TRAIN, TrainSpec, parse_scale
+from repro.uvm.trace import BENCHMARKS
+
+
+def _add_common(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--scale", default="quick",
+                    help="'quick' (0.4x traces, <=6000 accesses), 'paper', or a float")
+    ap.add_argument("--cap", type=int, default=None, help="max trace length (overrides the scale preset)")
+    ap.add_argument("--runs-dir", default=None, help="run-store root (default experiments/runs)")
+    ap.add_argument("--no-store", action="store_true", help="compute without reading/writing the run store")
+
+
+def _session(args) -> Session:
+    scale, cap = parse_scale(args.scale, args.cap)
+    store = RunStore(args.runs_dir) if args.runs_dir else RunStore()
+    if args.no_store:
+        store.enabled = False
+    model = ModelSpec(train=PAPER_TRAIN if args.scale == "paper" else TrainSpec())
+    if args.scale == "paper":
+        from repro.configs.predictor_paper import CONFIG
+
+        model = dataclasses.replace(model, predictor=CONFIG)
+    return Session(scale=scale, cap=cap, model=model, store=store)
+
+
+def _strategy_model(session: Session, strategy: str, kind: str) -> ModelSpec | None:
+    if strategy != "ours":
+        return None
+    return dataclasses.replace(session.model, kind=kind, pretrain=session.default_pretrain)
+
+
+def _print_cell(cell, result) -> None:
+    if cell.strategy == "sim":
+        label = f"{cell.policy.name}+{cell.prefetch.name}"
+    elif cell.strategy == "ours":
+        label = f"ours[{cell.model.kind}]"
+    else:
+        label = "uvmsmart"
+    stats = result.stats if hasattr(result, "stats") else result
+    extra = f" top1={result.top1:.3f}" if hasattr(result, "top1") else ""
+    print(f"{cell.workload.benchmark:>12} {label:>16} @{cell.oversubscription:<5} "
+          f"thrash={stats['pages_thrashed']} faults={stats['faults']} "
+          f"migrated={stats['migrated_blocks']}{extra}  key={cell.key}")
+
+
+def cmd_run(args) -> int:
+    session = _session(args)
+    # build the cell through ExperimentSpec so it hashes IDENTICALLY to the
+    # sweep path (non-sim strategies canonicalise their policy/prefetch
+    # fields there — a different spelling here would duplicate store entries)
+    spec = ExperimentSpec(
+        name="run",
+        workloads=(session.workload(args.benchmark),),
+        strategy=args.strategy,
+        policies=(PolicySpec(args.policy),),
+        prefetchers=(PrefetchSpec(args.prefetch),),
+        oversubscriptions=(args.oversub,),
+        model=_strategy_model(session, args.strategy, args.kind),
+    )
+    [cell] = spec.cells()
+    result = session.run(cell)
+    _print_cell(cell, result)
+    _report_counts("run", session, 1)
+    return 0
+
+
+def _sweep_spec(args, session: Session) -> ExperimentSpec:
+    if args.spec:
+        return ExperimentSpec.from_json(Path(args.spec).read_text())
+    workloads = tuple(session.workload(b) for b in (args.benchmarks or session.benches))
+    return ExperimentSpec(
+        name=args.name,
+        workloads=workloads,
+        strategy=args.strategy,
+        policies=tuple(PolicySpec(p) for p in args.policies),
+        prefetchers=tuple(PrefetchSpec(p) for p in args.prefetchers),
+        oversubscriptions=tuple(args.oversubs),
+        model=_strategy_model(session, args.strategy, args.kind),
+    )
+
+
+def _report_counts(verb: str, session: Session, n_cells: int) -> None:
+    c = session.counters
+    hits = c["memory_hits"] + c["store_hits"]
+    print(f"# {verb} cells={n_cells} hits={hits} computed={c['computed']} store={session.store.root}")
+
+
+def cmd_sweep(args) -> int:
+    session = _session(args)
+    spec = _sweep_spec(args, session)
+    if args.dump_spec:
+        Path(args.dump_spec).write_text(json.dumps(spec.to_dict(), indent=2, sort_keys=True) + "\n")
+        print(f"# wrote {args.dump_spec} (replay with: python -m repro.uvm.cli sweep --spec {args.dump_spec})")
+    cells = spec.cells()
+    results = session.sweep(cells)
+    for cell, result in zip(cells, results):
+        _print_cell(cell, result)
+    _report_counts("sweep", session, len(cells))
+    return 0
+
+
+def cmd_report(args) -> int:
+    store = RunStore(args.runs_dir) if args.runs_dir else RunStore()
+    rows = []
+    for key, rec in store.records():
+        spec, result = rec.get("spec", {}), rec.get("result", {})
+        if rec.get("kind") == "CellSpec":
+            w = spec["workload"]
+            stats = result.get("stats", result)
+            rows.append({
+                "key": key, "kind": "cell", "benchmark": w["benchmark"],
+                "strategy": spec["strategy"],
+                "policy": spec["policy"]["name"], "prefetch": spec["prefetch"]["name"],
+                "oversub": spec["oversubscription"], "scale": w["scale"],
+                "pages_thrashed": stats.get("pages_thrashed"), "faults": stats.get("faults"),
+                "top1": round(result["top1"], 3) if "top1" in result else "",
+            })
+        elif rec.get("kind") == "ProtocolSpec":
+            rows.append({
+                "key": key, "kind": "protocol", "benchmark": spec["workload"]["benchmark"],
+                "strategy": spec["mode"], "policy": "", "prefetch": "",
+                "oversub": "", "scale": spec["workload"]["scale"],
+                "pages_thrashed": "", "faults": "",
+                "top1": round(result["top1"], 3),
+            })
+    if args.benchmark:
+        rows = [r for r in rows if r["benchmark"] == args.benchmark]
+    if not rows:
+        print(f"# empty run store at {store.root}")
+        return 0
+    cols = list(rows[0])
+    if args.csv:
+        import csv
+
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=cols)
+            w.writeheader()
+            w.writerows(rows)
+        print(f"# wrote {args.csv} ({len(rows)} rows)")
+    widths = {c: max(len(str(c)), *(len(str(r[c])) for r in rows)) for c in cols}
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(str(r[c]).ljust(widths[c]) for c in cols))
+    print(f"# {len(rows)} stored runs in {store.root}")
+    return 0
+
+
+SUBCOMMANDS = {"run": cmd_run, "sweep": cmd_sweep, "report": cmd_report}
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="python -m repro.uvm.cli", description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    p_run = sub.add_parser("run", help="execute (or look up) one experiment cell")
+    _add_common(p_run)
+    p_run.add_argument("--benchmark", required=True, choices=sorted(BENCHMARKS))
+    p_run.add_argument("--strategy", default="sim", choices=("sim", "ours", "uvmsmart"))
+    p_run.add_argument("--policy", default="lru", help="registered eviction policy (sim)")
+    p_run.add_argument("--prefetch", default="tree", help="registered prefetcher (sim)")
+    p_run.add_argument("--oversub", type=float, default=1.25)
+    p_run.add_argument("--kind", default="transformer", help="registered predictor kind (ours)")
+
+    p_sweep = sub.add_parser("sweep", help="execute a cross-product of cells in batched lanes")
+    _add_common(p_sweep)
+    p_sweep.add_argument("--spec", default=None, help="ExperimentSpec JSON to replay (overrides the axes)")
+    p_sweep.add_argument("--name", default="sweep")
+    p_sweep.add_argument("--benchmarks", nargs="*", default=None, choices=sorted(BENCHMARKS))
+    p_sweep.add_argument("--strategy", default="sim", choices=("sim", "ours", "uvmsmart"))
+    p_sweep.add_argument("--policies", nargs="*", default=["lru"])
+    p_sweep.add_argument("--prefetchers", nargs="*", default=["tree"])
+    p_sweep.add_argument("--oversubs", nargs="*", type=float, default=[1.25])
+    p_sweep.add_argument("--kind", default="transformer")
+    p_sweep.add_argument("--dump-spec", default=None, help="write the composed ExperimentSpec JSON here")
+
+    p_rep = sub.add_parser("report", help="tabulate the persistent run store")
+    p_rep.add_argument("--runs-dir", default=None)
+    p_rep.add_argument("--benchmark", default=None)
+    p_rep.add_argument("--csv", default=None, help="also write the table as CSV")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    return SUBCOMMANDS[args.command](args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

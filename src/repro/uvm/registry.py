@@ -1,0 +1,216 @@
+"""Plugin registries for eviction policies, prefetchers, and predictors.
+
+The simulator's victim-key builders (``lru``/``random``/``belady``/``hpe``/
+``learned``), its prefetch mask builders (``demand``/``tree``), and the
+predictor architectures (``transformer``/``lstm``/``cnn``/``mlp``) are all
+REGISTERED default entries of the tables below, not hardwired branches.  A
+new strategy is a ~20-line registration that rides the existing
+packed-priority vmapped scan — no edits to ``repro/uvm/simulator.py``:
+
+    from repro.uvm.api import register_policy
+
+    def mru_keys(state, interval_now, t_now):
+        # most-recently-used first: larger last_access = better victim
+        return (-state.last_access,)
+
+    register_policy("mru", mru_keys)
+    S.run_batch(trace, [("mru", "tree", 1.25), ...])   # vmapped as usual
+
+Contracts:
+
+* **policy key_fn(state, interval_now, t_now)** returns a tuple of up to 3
+  int32 arrays shaped like ``state.last_access`` — the lexicographic victim
+  key (smallest evicts first).  Keys must be constant for the whole step
+  (nothing an eviction changes may feed back into them); that invariant is
+  what lets ``_evict_fit`` pick victims by chained masked-argmin without
+  re-ranking.
+* **prefetcher mask_fn(resident, blk, valid, n_blocks)** returns a bool
+  mask of blocks to migrate alongside a faulted block (it runs only on
+  faulting steps; ``resident`` already includes the demand block).
+* **predictor builder(cfg)** returns ``(init_fn(rng) -> params,
+  forward(params, batch) -> (logits, features))`` — the
+  :func:`repro.core.baselines_nn.make_model` contract.
+
+Registration order is identity: entry ids are assigned densely in
+registration order and traced into the compiled scans as runtime values, so
+the builtin ids (lru=0 .. learned=4, demand=0, tree=1) are stable and the
+golden counters are unaffected by later registrations.  The simulator keys
+its jitted entry points on the branch tables themselves
+(:func:`policy_branches` / :func:`prefetch_branches`), so a scan compiled
+under one table is never reused with a different one — and restoring the
+tables (:func:`scoped`) re-hits the original compiles.  A monotonic
+version counter additionally tracks policy/prefetcher registrations for
+diagnostics.
+
+Names are single-owner: registering an existing name raises ``ValueError``.
+Tests (or notebooks) that want throwaway registrations should use
+:func:`scoped`, which restores all three tables on exit.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, NamedTuple
+
+__all__ = [
+    "register_policy",
+    "register_prefetcher",
+    "register_predictor",
+    "policy_names",
+    "prefetcher_names",
+    "predictor_names",
+    "policy_branches",
+    "prefetch_branches",
+    "predictor_builder",
+    "registry_version",
+    "scoped",
+    "POLICY_IDS",
+    "PREFETCH_IDS",
+]
+
+
+class _PolicyEntry(NamedTuple):
+    name: str
+    pid: int
+    key_fn: Callable  # (state, interval_now, t_now) -> tuple of int32 arrays
+
+
+class _PrefetchEntry(NamedTuple):
+    name: str
+    pid: int
+    mask_fn: Callable | None  # (resident, blk, valid, n_blocks) -> bool mask
+
+
+_POLICIES: dict[str, _PolicyEntry] = {}
+_PREFETCHERS: dict[str, _PrefetchEntry] = {}
+_PREDICTORS: dict[str, Callable] = {}
+
+# name -> dense id (aliases share the target's id). These dict OBJECTS are
+# stable — the simulator imports and holds them — so registrations made
+# after import are visible everywhere.
+POLICY_IDS: dict[str, int] = {}
+PREFETCH_IDS: dict[str, int] = {}
+
+_VERSION = [0]
+
+
+def registry_version() -> int:
+    """Monotonic counter bumped by every policy/prefetcher registration
+    (diagnostics; predictor registrations never enter the simulator's
+    branch tables and so never bump it). The simulator's jit caches key on
+    the branch tables themselves, not on this counter."""
+    return _VERSION[0]
+
+
+def _claim(table: dict, name: str, kind: str) -> None:
+    if not name or not isinstance(name, str):
+        raise ValueError(f"{kind} name must be a non-empty string, got {name!r}")
+    if name in table:
+        raise ValueError(f"{kind} {name!r} is already registered")
+
+
+def register_policy(name: str, key_fn: Callable) -> None:
+    """Register an eviction policy by its victim-key builder.
+
+    ``key_fn(state, interval_now, t_now)`` must return a tuple of 1-3 int32
+    arrays shaped like ``state.last_access``; the resident block with the
+    lexicographically-smallest key is evicted first.
+    """
+    _claim(_POLICIES, name, "policy")
+    entry = _PolicyEntry(name, len(_POLICIES), key_fn)
+    _POLICIES[name] = entry
+    POLICY_IDS[name] = entry.pid
+    _VERSION[0] += 1
+
+
+def register_prefetcher(name: str, mask_fn: Callable | None = None, *, alias_of: str | None = None) -> None:
+    """Register a prefetcher by its migration-mask builder.
+
+    ``mask_fn(resident, blk, valid, n_blocks)`` returns the bool mask of
+    extra blocks to migrate when block ``blk`` faults (``mask_fn=None``
+    means demand-only: no extra migration).  ``alias_of`` registers a
+    second name for an existing entry (same id — e.g. ``none`` -> ``demand``).
+    """
+    _claim(_PREFETCHERS, name, "prefetcher")
+    if alias_of is not None:
+        if mask_fn is not None:
+            raise ValueError("pass either mask_fn or alias_of, not both")
+        if alias_of not in _PREFETCHERS:
+            raise ValueError(f"alias_of target {alias_of!r} is not a registered prefetcher")
+        target = _PREFETCHERS[alias_of]
+        entry = _PrefetchEntry(name, target.pid, target.mask_fn)
+    else:
+        n_real = len({e.pid for e in _PREFETCHERS.values()})
+        entry = _PrefetchEntry(name, n_real, mask_fn)
+    _PREFETCHERS[name] = entry
+    PREFETCH_IDS[name] = entry.pid
+    _VERSION[0] += 1
+
+
+def register_predictor(name: str, builder: Callable) -> None:
+    """Register a predictor architecture.
+
+    ``builder(cfg: PredictorConfig)`` returns ``(init_fn, forward)`` per the
+    :func:`repro.core.baselines_nn.make_model` contract; the name becomes a
+    valid ``kind`` for ``Trainer`` / ``run_protocol`` / ``ModelSpec``.
+    Predictors never enter the simulator's branch tables, so this does NOT
+    bump :func:`registry_version` (no pointless scan re-traces).
+    """
+    _claim(_PREDICTORS, name, "predictor")
+    _PREDICTORS[name] = builder
+
+
+def policy_names() -> tuple[str, ...]:
+    return tuple(_POLICIES)
+
+
+def prefetcher_names() -> tuple[str, ...]:
+    return tuple(_PREFETCHERS)
+
+
+def predictor_names() -> tuple[str, ...]:
+    return tuple(_PREDICTORS)
+
+
+def policy_branches() -> tuple[Callable, ...]:
+    """Victim-key builders ordered by id (the ``lax.switch`` branch table)."""
+    return tuple(e.key_fn for e in sorted(_POLICIES.values(), key=lambda e: e.pid))
+
+
+def prefetch_branches() -> tuple[Callable | None, ...]:
+    """Mask builders ordered by id, one per DISTINCT id (aliases collapse)."""
+    by_id: dict[int, Callable | None] = {}
+    for e in _PREFETCHERS.values():
+        by_id.setdefault(e.pid, e.mask_fn)
+    return tuple(by_id[i] for i in sorted(by_id))
+
+
+def predictor_builder(name: str) -> Callable:
+    try:
+        return _PREDICTORS[name]
+    except KeyError:
+        raise KeyError(f"unknown predictor kind {name!r}; registered: {sorted(_PREDICTORS)}") from None
+
+
+@contextlib.contextmanager
+def scoped():
+    """Restore all registry TABLES on exit — for tests and notebooks that
+    register throwaway entries.
+
+    The version counter is NOT rolled back: it is monotonic (a version
+    number must never refer to two different table states). The simulator's
+    jit caches key on the tables themselves, so exiting a scope re-hits the
+    compiles that existed before it."""
+    saved = (
+        dict(_POLICIES), dict(_PREFETCHERS), dict(_PREDICTORS),
+        dict(POLICY_IDS), dict(PREFETCH_IDS), _VERSION[0],
+    )
+    try:
+        yield
+    finally:
+        _POLICIES.clear(); _POLICIES.update(saved[0])
+        _PREFETCHERS.clear(); _PREFETCHERS.update(saved[1])
+        _PREDICTORS.clear(); _PREDICTORS.update(saved[2])
+        POLICY_IDS.clear(); POLICY_IDS.update(saved[3])
+        PREFETCH_IDS.clear(); PREFETCH_IDS.update(saved[4])
+        if _VERSION[0] != saved[5]:
+            _VERSION[0] += 1  # restored tables are a NEW state for the jits

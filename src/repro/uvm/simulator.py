@@ -69,6 +69,7 @@ exact (see tests/test_properties.py and tests/test_sim_equivalence.py).
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -77,16 +78,20 @@ import numpy as np
 
 from repro.distributed.compat import lane_shardings
 from repro.util import pow2_bucket
+from repro.uvm import registry as _registry
+from repro.uvm.registry import POLICY_IDS, PREFETCH_IDS
 from repro.uvm.trace import PAGES_PER_BLOCK, Trace
 
 CHUNK_BLOCKS = 32  # 2MB chunk = 32 x 64KB blocks
 INTERVAL = 64  # page-set-chain interval, in faults (same as HPE)
 NO_USE = np.int32(2**31 - 1)
 
+# The BUILTIN strategy set (the paper's matrix). The LIVE set — builtins
+# plus anything added via repro.uvm.api.register_policy/register_prefetcher
+# — is registry.policy_names()/prefetcher_names(); POLICY_IDS/PREFETCH_IDS
+# (imported from the registry) always reflect it.
 POLICIES = ("lru", "random", "belady", "hpe", "learned")
 PREFETCHERS = ("demand", "tree", "none")
-POLICY_IDS = {"lru": 0, "random": 1, "belady": 2, "hpe": 3, "learned": 4}
-PREFETCH_IDS = {"demand": 0, "tree": 1, "none": 0}
 
 
 class SimState(NamedTuple):
@@ -320,33 +325,54 @@ def _tree_mask(resident, blk, valid, n_blocks: int):
     return mask & valid & ~resident
 
 
-def _policy_keys(state: SimState, policy_id, interval_now, t_now):
+def _lru_keys(state: SimState, interval_now, t_now):
+    return (state.last_access,)
+
+
+def _random_keys(state: SimState, interval_now, t_now):
+    r = jax.random.randint(
+        jax.random.fold_in(state.key, t_now), state.last_access.shape, 0, 1 << 30, jnp.int32
+    )
+    return (r,)
+
+
+def _belady_keys(state: SimState, interval_now, t_now):
+    return (-state.next_use,)  # farthest next use evicted first
+
+
+def _hpe_keys(state: SimState, interval_now, t_now):
+    age = jnp.clip(interval_now - state.last_interval, 0, 2)  # 0=new..2=old
+    return (-age, state.last_access)
+
+
+def _learned_keys(state: SimState, interval_now, t_now):
+    age = jnp.clip(interval_now - state.last_interval, 0, 2)
+    return (-age, state.freq, state.last_access)
+
+
+def _policy_keys(state: SimState, policy_id, interval_now, t_now, policy_fns: tuple | None = None):
     """The policy's lexicographic victim-key tuple, padded to 3 int32 keys.
 
+    ``policy_fns`` is the registry branch table (builtins ride the same
+    path a `register_policy` entry does) — passed down from the jit-cache
+    key so the compiled switch always matches the table it was keyed on;
+    ``None`` falls back to the live registry (direct/untraced callers).
     Extra constant keys never change a lexicographic argmin, so every
     policy shares one (k1, k2, k3) shape and one sort."""
-    la = state.last_access
-    z = jnp.zeros_like(la)
+    z = jnp.zeros_like(state.last_access)
 
-    def k_lru():
-        return la, z, z
+    def pad(fn):
+        def branch():
+            ks = tuple(fn(state, interval_now, t_now))
+            if not 1 <= len(ks) <= 3:
+                raise ValueError(f"policy key_fn must return 1-3 keys, got {len(ks)}")
+            ks = tuple(jnp.asarray(k, jnp.int32) for k in ks)
+            return ks + (z,) * (3 - len(ks))
 
-    def k_random():
-        r = jax.random.randint(jax.random.fold_in(state.key, t_now), la.shape, 0, 1 << 30, jnp.int32)
-        return r, z, z
+        return branch
 
-    def k_belady():
-        return -state.next_use, z, z  # farthest next use evicted first
-
-    def k_hpe():
-        age = jnp.clip(interval_now - state.last_interval, 0, 2)  # 0=new..2=old
-        return -age, la, z
-
-    def k_learned():
-        age = jnp.clip(interval_now - state.last_interval, 0, 2)
-        return -age, state.freq, la
-
-    return jax.lax.switch(policy_id, (k_lru, k_random, k_belady, k_hpe, k_learned))
+    fns = policy_fns if policy_fns is not None else _registry.policy_branches()
+    return jax.lax.switch(policy_id, tuple(pad(fn) for fn in fns))
 
 
 def _lex_argmin(cand, *keys):
@@ -357,7 +383,8 @@ def _lex_argmin(cand, *keys):
     return jnp.argmax(cand)
 
 
-def _evict_fit(state: SimState, capacity, policy_id, protect, interval_now, t_now) -> SimState:
+def _evict_fit(state: SimState, capacity, policy_id, protect, interval_now, t_now,
+               policy_fns: tuple | None = None) -> SimState:
     """Evict lowest-priority resident blocks until occupancy <= capacity.
 
     The victim keys are constant for the whole step (an eviction changes
@@ -374,7 +401,7 @@ def _evict_fit(state: SimState, capacity, policy_id, protect, interval_now, t_no
 
     def body(c):
         resident, evicted_once, occ = c
-        k1, k2, k3 = _policy_keys(state, policy_id, interval_now, t_now)
+        k1, k2, k3 = _policy_keys(state, policy_id, interval_now, t_now, policy_fns)
         victim = _lex_argmin(resident & base, k1, k2, k3)
         return resident.at[victim].set(False), evicted_once.at[victim].set(True), occ - 1
 
@@ -384,10 +411,13 @@ def _evict_fit(state: SimState, capacity, policy_id, protect, interval_now, t_no
     return state._replace(resident=resident, evicted_once=evicted_once, occupancy=occ)
 
 
-def _scan_events(state: SimState, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid):
+def _scan_events(state: SimState, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid,
+                 policy_fns: tuple | None = None, prefetch_fns: tuple | None = None):
     """One lane: scan the compressed event stream. All cell parameters are
     traced values — a single compile serves every (policy, prefetch,
-    capacity, n_valid) combination of this shape."""
+    capacity, n_valid) combination of this shape. ``policy_fns`` /
+    ``prefetch_fns`` are the registry branch tables the caller keyed its
+    jit cache on (``None`` reads the live registry)."""
     n_blocks = state.resident.shape[0]
     iota = jnp.arange(n_blocks, dtype=jnp.int32)
     valid = iota < n_valid
@@ -401,14 +431,17 @@ def _scan_events(state: SimState, blk, nxt, dt, rl, stride, capacity, policy_id,
         is_pinned = state.pinned[b]
         fault = (~state.resident[b]) & (~is_pinned) & active
 
-        # demand block migrates on fault; tree prefetch rides along
+        # demand block migrates on fault; the registered prefetcher's mask
+        # rides along (branch 0 — demand — migrates nothing extra)
         mig = jnp.zeros(n_blocks, bool).at[b].set(fault)
         resident1 = state.resident | mig
-        pf = jax.lax.cond(
-            (prefetch_id == 1) & fault,
-            lambda: _tree_mask(resident1, b, valid, n_blocks),
-            lambda: jnp.zeros(n_blocks, bool),
+        zeros = lambda: jnp.zeros(n_blocks, bool)
+        pf_fns = prefetch_fns if prefetch_fns is not None else _registry.prefetch_branches()
+        branches = tuple(
+            zeros if fn is None else (lambda fn=fn: fn(resident1, b, valid, n_blocks))
+            for fn in pf_fns
         )
+        pf = jax.lax.cond(fault, lambda: jax.lax.switch(prefetch_id, branches), zeros)
         mig = mig | pf
         newly = mig & ~state.resident
         n_new = newly.sum(dtype=jnp.int32)
@@ -450,7 +483,7 @@ def _scan_events(state: SimState, blk, nxt, dt, rl, stride, capacity, policy_id,
         # padding events must not evict even if a caller handed us an
         # over-capacity state, so they see capacity == occupancy
         cap_eff = jnp.where(active, capacity, state2.occupancy)
-        state3 = _evict_fit(state2, cap_eff, policy_id, protect, interval_now, t_first)
+        state3 = _evict_fit(state2, cap_eff, policy_id, protect, interval_now, t_first, policy_fns)
         out = {
             "fault": fault,
             "thrash": thrash,
@@ -464,13 +497,63 @@ def _scan_events(state: SimState, blk, nxt, dt, rl, stride, capacity, policy_id,
     return jax.lax.scan(step, state, (blk, nxt, dt, rl, stride))
 
 
-@jax.jit
+@functools.lru_cache(maxsize=None)
+def _jits_for(policy_fns: tuple, prefetch_fns: tuple):
+    """The simulator's jitted entry points, keyed on the registry's branch
+    tables (the ordered tuples of key/mask builder functions).
+
+    ``lax.switch`` clamps out-of-range indices, so a scan compiled under
+    one table would silently run the wrong strategy for an id added later.
+    The key tuples are CLOSED OVER by the traced scans (never re-read from
+    the live registry), so key and compiled switch cannot disagree; keying
+    on the table contents forces a fresh trace whenever the tables change
+    AND re-hits the original compile when a ``registry.scoped()`` block
+    restores them (the cache keys keep the builder functions alive, so
+    identity can never be recycled onto a different function)."""
+
+    def scan(st, blk, nxt, dt, rl, stride, cap, pol, pf, nv):
+        # the cache-key tables are CLOSED OVER here, so the compiled switch
+        # can never disagree with the key (a concurrent registration between
+        # key computation and tracing would otherwise alias)
+        return _scan_events(st, blk, nxt, dt, rl, stride, cap, pol, pf, nv, policy_fns, prefetch_fns)
+
+    @jax.jit
+    def run_events(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid):
+        return jax.vmap(
+            lambda st, cap, pol, pf, nv: scan(st, blk, nxt, dt, rl, stride, cap, pol, pf, nv)
+        )(states, capacity, policy_id, prefetch_id, n_valid)
+
+    @jax.jit
+    def run_events_lanes(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid):
+        return jax.vmap(scan)(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid)
+
+    @jax.jit
+    def apply_prefetch(state, mask, capacity, policy_id):
+        newly = mask & ~state.resident & ~state.pinned
+        n_new = newly.sum(dtype=jnp.int32)
+        thrash = (newly & state.evicted_once).sum(dtype=jnp.int32)
+        interval_now = state.fault_count // INTERVAL
+        st = state._replace(
+            resident=state.resident | newly,
+            occupancy=state.occupancy + n_new,
+            thrash_events=state.thrash_events + thrash,
+            migrations=state.migrations + n_new,
+            last_interval=jnp.where(newly, interval_now, state.last_interval),
+            last_access=jnp.where(newly, state.time, state.last_access),
+        )
+        return _evict_fit(st, capacity, policy_id, jnp.zeros_like(newly), interval_now, state.time, policy_fns)
+
+    return run_events, run_events_lanes, apply_prefetch
+
+
+def _jits():
+    return _jits_for(_registry.policy_branches(), _registry.prefetch_branches())
+
+
 def _run_events(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid):
     """Batched event scan: ``states`` and the cell parameters carry a
     leading lane axis; the event stream is shared across lanes."""
-    return jax.vmap(
-        lambda st, cap, pol, pf, nv: _scan_events(st, blk, nxt, dt, rl, stride, cap, pol, pf, nv)
-    )(states, capacity, policy_id, prefetch_id, n_valid)
+    return _jits()[0](states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid)
 
 
 def _stack_states(states: list[SimState]) -> SimState:
@@ -639,7 +722,7 @@ def run(
     seed: int = 0,
 ) -> SimResult:
     """Run a full trace under (policy x prefetch) at an oversubscription level."""
-    assert policy in POLICIES and prefetch in PREFETCHERS
+    assert policy in POLICY_IDS and prefetch in PREFETCH_IDS, (policy, prefetch)
     blocks = trace.block.astype(np.int32)
     cap = capacity_for(trace.n_blocks, oversubscription)
     nxt = next_use_for(trace)
@@ -650,7 +733,7 @@ def run(
     st, outs = run_segment(
         st, blocks, nxt,
         capacity=cap, policy=policy,
-        prefetch="demand" if prefetch == "none" else prefetch,
+        prefetch=prefetch,  # "none" aliases demand's id in the registry
         n_valid=trace.n_blocks,
     )
     st = st._replace(key=jax.random.key_data(st.key))  # numpy-safe
@@ -678,10 +761,10 @@ def run_batch(
     nxt = next_use_for(trace)
     id_cells = []
     for policy, prefetch, oversub in cells:
-        assert policy in POLICIES and prefetch in PREFETCHERS
+        assert policy in POLICY_IDS and prefetch in PREFETCH_IDS, (policy, prefetch)
         id_cells.append((
-            POLICY_IDS[policy],
-            PREFETCH_IDS["demand" if prefetch == "none" else prefetch],
+            POLICY_IDS[policy],  # "none" aliases demand's id in the registry
+            PREFETCH_IDS[prefetch],
             capacity_for(trace.n_blocks, oversub),
         ))
     lane_seeds = seeds if seeds is not None else [seed] * len(cells)
@@ -712,12 +795,11 @@ def run_batch(
     ]
 
 
-@jax.jit
 def _run_events_lanes(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid):
     """Batched event scan where EVERY input carries a leading lane axis —
     unlike :func:`_run_events`, each lane walks its OWN event stream (the
     cross-benchmark case: different traces, same shape bucket)."""
-    return jax.vmap(_scan_events)(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid)
+    return _jits()[1](states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid)
 
 
 def run_segments_many(
@@ -804,21 +886,8 @@ def run_segments_many(
     return results
 
 
-@jax.jit
 def _apply_prefetch_jit(state: SimState, mask, capacity, policy_id):
-    newly = mask & ~state.resident & ~state.pinned
-    n_new = newly.sum(dtype=jnp.int32)
-    thrash = (newly & state.evicted_once).sum(dtype=jnp.int32)
-    interval_now = state.fault_count // INTERVAL
-    st = state._replace(
-        resident=state.resident | newly,
-        occupancy=state.occupancy + n_new,
-        thrash_events=state.thrash_events + thrash,
-        migrations=state.migrations + n_new,
-        last_interval=jnp.where(newly, interval_now, state.last_interval),
-        last_access=jnp.where(newly, state.time, state.last_access),
-    )
-    return _evict_fit(st, capacity, policy_id, jnp.zeros_like(newly), interval_now, state.time)
+    return _jits()[2](state, mask, capacity, policy_id)
 
 
 def apply_prefetch(state: SimState, blocks_mask, *, capacity: int, policy: str = "learned") -> SimState:
@@ -828,3 +897,19 @@ def apply_prefetch(state: SimState, blocks_mask, *, capacity: int, policy: str =
         state, jnp.asarray(blocks_mask),
         jnp.asarray(capacity, jnp.int32), jnp.asarray(POLICY_IDS[policy], jnp.int32),
     )
+
+
+# --- builtin registrations -------------------------------------------------
+# The paper's strategy matrix enters the SAME registry a user plugin does;
+# registration order fixes the traced ids (lru=0 .. learned=4, demand=0,
+# tree=1, none->demand) that the goldens and the batch-padding _INERT lane
+# rely on. Guarded for idempotence under importlib.reload.
+if "lru" not in POLICY_IDS:
+    _registry.register_policy("lru", _lru_keys)
+    _registry.register_policy("random", _random_keys)
+    _registry.register_policy("belady", _belady_keys)
+    _registry.register_policy("hpe", _hpe_keys)
+    _registry.register_policy("learned", _learned_keys)
+    _registry.register_prefetcher("demand", None)
+    _registry.register_prefetcher("tree", _tree_mask)
+    _registry.register_prefetcher("none", alias_of="demand")
