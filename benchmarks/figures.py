@@ -130,8 +130,9 @@ def fig13(ctx: Session, benches=None):
         r = {"benchmark": b}
         for us in (1, 10, 20, 50, 100):
             # LearnedRunResult.ipc charges prediction overhead on the
-            # fault-handling path (the predictor itself is asynchronous)
-            ipc = ours.ipc(pred_overhead_us=us, n_accesses=len(ctx.trace(b)))
+            # fault-handling path (the predictor itself is asynchronous);
+            # the result carries its own trace length
+            ipc = ours.ipc(pred_overhead_us=us)
             r[f"norm_ipc_{us}us"] = round(ipc / smart_ipc, 3)
             means.setdefault(us, []).append(ipc / smart_ipc)
         rows.append(r)
@@ -149,7 +150,7 @@ def fig14(ctx: Session, benches=None):
         for os_ in (1.25, 1.5):
             ours = ctx.ours(b, oversub=os_) if os_ != 1.25 else ctx.ours(b)
             smart_ipc = ctx.ipc(b, ctx.uvmsmart(b, os_))
-            ipc = ours.ipc(pred_overhead_us=1.0, n_accesses=len(ctx.trace(b)))
+            ipc = ours.ipc(pred_overhead_us=1.0)
             r[f"norm_ipc_{os_}"] = round(ipc / smart_ipc, 3)
         rows.append(r)
     emit("fig14_ipc", rows, t0)

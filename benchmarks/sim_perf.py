@@ -1,4 +1,4 @@
-"""Simulator hot-path throughput benchmark (ISSUEs 1 + 2).
+"""Simulator hot-path throughput benchmark (ISSUEs 1 + 2 + 4).
 
 Measures, per suite benchmark:
   * cold (compile-inclusive) and warm single-cell wall clock + accesses/sec
@@ -10,7 +10,15 @@ Measures, per suite benchmark:
 
     PYTHONPATH=src python -m benchmarks.sim_perf            # full quick-scale sweep
     PYTHONPATH=src python -m benchmarks.sim_perf --smoke    # CI: 3 benchmarks + concurrent + sharded lane
+    PYTHONPATH=src python -m benchmarks.sim_perf --manager  # manager section: vectorized vs loop freq table
     PYTHONPATH=src python -m benchmarks.sim_perf --update-baseline  # rewrite BENCH_sim.json "after"
+
+``--manager`` prepends the streaming-manager section to the requested
+run: the vectorized `PredictionFrequencyTable.update/dense` against the
+frozen per-block loop (`LoopPredictionFrequencyTable`) on real benchmark
+block streams, asserting identical table state and a real speedup;
+combined with ``--update-baseline`` it records before/after into
+BENCH_sim.json under ``manager``.
 
 Output: experiments/bench/sim_perf.csv (+ the `name,us_per_call,derived`
 contract line) and a comparison against the committed BENCH_sim.json
@@ -85,6 +93,54 @@ def _sharded_lane_check(scale: float, cap: int) -> None:
     print("# sharded lane ok (4 host devices, counters bit-identical)")
 
 
+def bench_manager(scale: float, cap: int) -> list[dict]:
+    """The `--manager` section: vectorized vs loop frequency-table engine
+    on real block streams (update + dense export per group, flush cadence
+    every 3 groups), table state asserted identical."""
+    from repro.core.policy import LoopPredictionFrequencyTable, PredictionFrequencyTable
+
+    rows = []
+    G = 1024
+    for name in ("ATAX", "Hotspot", "StreamTriad"):
+        tr = _suite_trace(name, scale, cap)
+        blocks = tr.block.astype(np.int64)
+        batches = [blocks[i : i + G] for i in range(0, len(blocks), G)]
+
+        def drive(make):
+            t = make()
+            t0 = time.time()
+            for i, b in enumerate(batches):
+                t.update(b)
+                t.dense(tr.n_blocks)
+                if i % 3 == 2:
+                    t.on_intervals(3)  # exercise the flush path
+            return time.time() - t0, t
+
+        loop_s, t_loop = drive(LoopPredictionFrequencyTable)
+        vec_s, t_vec = drive(PredictionFrequencyTable)
+        assert np.array_equal(t_loop.tags, t_vec.tags) and np.array_equal(t_loop.counters, t_vec.counters), name
+        n = len(blocks)
+        rows.append({
+            "benchmark": f"freq_table:{name}",
+            "blocks": n,
+            "loop_s": round(loop_s, 4),
+            "vec_s": round(vec_s, 4),
+            "speedup_x": round(loop_s / max(vec_s, 1e-9), 1),
+            "loop_blocks_per_s": int(n / max(loop_s, 1e-9)),
+            "vec_blocks_per_s": int(n / max(vec_s, 1e-9)),
+        })
+    agg = {
+        "benchmark": "MANAGER_AGGREGATE",
+        "blocks": sum(r["blocks"] for r in rows),
+        "loop_s": round(sum(r["loop_s"] for r in rows), 4),
+        "vec_s": round(sum(r["vec_s"] for r in rows), 4),
+        "speedup_x": round(sum(r["loop_s"] for r in rows) / max(sum(r["vec_s"] for r in rows), 1e-9), 1),
+        "loop_blocks_per_s": int(np.mean([r["loop_blocks_per_s"] for r in rows])),
+        "vec_blocks_per_s": int(np.mean([r["vec_blocks_per_s"] for r in rows])),
+    }
+    return [agg] + rows
+
+
 from repro.uvm.api.specs import SCALE_PRESETS, parse_scale  # noqa: E402
 
 
@@ -95,11 +151,35 @@ def main(argv=None) -> int:
                     help="'quick' (0.4x, cap 6000), 'paper' (full generator sizes, cap 60000"
                          " — records wall clock into BENCH_sim.json), or a float")
     ap.add_argument("--cap", type=int, default=None, help="max trace length (overrides the scale preset)")
+    ap.add_argument("--manager", action="store_true",
+                    help="also run the manager section (vectorized vs loop frequency table);"
+                         " with --update-baseline, record it into BENCH_sim.json")
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite the committed BENCH_sim.json 'after' section")
     args = ap.parse_args(argv)
     args.scale, args.cap = parse_scale(args.scale, args.cap)
     paper_scale = (args.scale, args.cap) == SCALE_PRESETS["paper"]
+
+    if args.manager:
+        t0 = time.time()
+        mrows = bench_manager(args.scale, args.cap)
+        emit("sim_perf_manager", mrows, t0)
+        assert mrows[0]["speedup_x"] >= 2.0, mrows[0]  # vectorization must actually pay
+        # the committed record follows the file's convention: rewrite only
+        # on an explicit --update-baseline, never from a routine/CI run
+        if args.update_baseline and BASELINE_PATH.exists():
+            base = json.loads(BASELINE_PATH.read_text())
+            base["manager"] = {
+                "freq_table_update": {
+                    "before_loop": {k: mrows[0][k] for k in ("loop_s", "loop_blocks_per_s")},
+                    "after_vectorized": {k: mrows[0][k] for k in ("vec_s", "vec_blocks_per_s", "speedup_x")},
+                },
+                "rows": mrows,
+            }
+            BASELINE_PATH.write_text(json.dumps(base, indent=2) + "\n")
+            print(f"# recorded manager section into {BASELINE_PATH}")
+        print("# manager section ok")
+        # fall through: --manager ADDS the section to the requested run
 
     names = ["ATAX", "Hotspot", "StreamTriad"] if args.smoke else list(T.BENCHMARKS)
     t0 = time.time()

@@ -7,7 +7,8 @@ Checks, without running any benchmark:
     ``--help`` output (for ``repro.uvm.cli``, in the documented
     SUBCOMMAND's own ``--help``),
   * every ``python -m repro.uvm.cli <subcommand>`` names a real key of its
-    SUBCOMMANDS registry,
+    SUBCOMMANDS registry, and every SUBCOMMANDS key is documented in at
+    least one of the scanned docs (a new subcommand must ship with docs),
   * every ``--only <target>`` mentioned for benchmarks.run is a real key of
     its SUITES registry,
   * every repo-relative path the docs reference exists.
@@ -47,6 +48,7 @@ def main() -> int:
     failures = []
     helps: dict[str, str] = {}
     cmds = []
+    seen_subcommands: set[str] = set()
     for doc in DOCS:
         text = doc.read_text()
         cmds += [(doc.name, m) for m in CMD_RE.finditer(text)]
@@ -76,6 +78,7 @@ def main() -> int:
             if bad:
                 failures.append(f"{doc_name}: {bad} not repro.uvm.cli subcommands ({m.group(0).strip()!r})")
                 continue
+            seen_subcommands.update(subs)
             sub = subs[0]
             args = args[tok.end():]
         key = (mod, sub)
@@ -98,12 +101,21 @@ def main() -> int:
                 if target not in SUITES:
                     failures.append(f"{doc_name}: `--only {target}` is not a benchmarks.run suite")
 
+    # coverage direction: a subcommand added to the CLI without a documented
+    # invocation is drift too (serve/run/sweep/report must all appear)
+    sys.path[:0] = [str(ROOT), str(ROOT / "src")]
+    from repro.uvm.cli import SUBCOMMANDS  # noqa: PLC0415
+
+    for missing in sorted(set(SUBCOMMANDS) - seen_subcommands):
+        failures.append(f"repro.uvm.cli subcommand {missing!r} is documented nowhere in {[d.name for d in DOCS]}")
+
     if failures:
         print("docs drift detected:")
         for f in failures:
             print("  -", f)
         return 1
-    print(f"docs ok: {len(cmds)} commands validated against --help, {len(helps)} modules probed")
+    print(f"docs ok: {len(cmds)} commands validated against --help, {len(helps)} modules probed, "
+          f"{len(seen_subcommands)} cli subcommands documented")
     return 0
 
 

@@ -11,6 +11,15 @@ importance in the near-future access stream.
     partition (the chain itself lives in the simulator state; the engine
     exports the dense counter array the simulator's `learned` policy reads).
 Blocks never predicted have frequency -1 (evicted first).
+
+``update`` is vectorized: a batch of predicted blocks is stably grouped by
+set, consecutive same-block runs within each set collapse into one
+saturating increment, and the remaining per-set sequences are walked in
+"waves" (the k-th distinct-block run of every set updates in one scatter).
+Way-conflict evictions, insertion order and counter saturation are exactly
+the per-block reference semantics — :class:`LoopPredictionFrequencyTable`
+keeps the original loop as the equality oracle
+(tests/test_manager.py pins them against each other on hypothesis streams).
 """
 from __future__ import annotations
 
@@ -29,24 +38,62 @@ class PredictionFrequencyTable:
         self.flushes = 0
 
     def update(self, blocks: np.ndarray):
-        """Count one prediction per block occurrence."""
-        for b in np.asarray(blocks, np.int64):
-            s = int(b % self.n_sets)
-            row_tags = self.tags[s]
-            hit = np.nonzero(row_tags == b)[0]
-            if len(hit):
-                w = hit[0]
-            else:
-                empty = np.nonzero(row_tags == -1)[0]
-                w = empty[0] if len(empty) else int(np.argmin(self.counters[s]))
-                self.tags[s, w] = b
-                self.counters[s, w] = 0
-            self.counters[s, w] = min(self.counters[s, w] + 1, COUNTER_MAX)
+        """Count one prediction per block occurrence (batched).
+
+        Bit-identical to the per-block loop: within a set, order is the
+        arrival order; a run of k same-block occurrences is one saturating
+        ``min(c + k, MAX)``; misses claim the first empty way, else evict
+        the lowest-counter way (first on ties, like ``argmin``).
+        """
+        b = np.asarray(blocks, np.int64).ravel()
+        if b.size == 0:
+            return
+        s = b % self.n_sets
+        order = np.argsort(s, kind="stable")  # per-set arrival order preserved
+        bs, ss = b[order], s[order]
+        # collapse consecutive same-(set, block) runs: k touches with no
+        # intervening same-set traffic are one saturating +k
+        change = np.empty(len(bs), bool)
+        change[0] = True
+        change[1:] = (bs[1:] != bs[:-1]) | (ss[1:] != ss[:-1])
+        starts = np.flatnonzero(change)
+        run_len = np.diff(np.append(starts, len(bs)))
+        rb, rs = bs[starts], ss[starts]
+        # wave index = position of the run within its set's sequence; sets
+        # are disjoint rows, so each wave is one conflict-free scatter
+        set_start = np.empty(len(rb), bool)
+        set_start[0] = True
+        set_start[1:] = rs[1:] != rs[:-1]
+        grp = np.flatnonzero(set_start)
+        within = np.arange(len(rb)) - np.repeat(grp, np.diff(np.append(grp, len(rb))))
+        for k in range(int(within.max()) + 1):
+            m = within == k
+            self._update_wave(rb[m], rs[m], run_len[m])
+
+    def _update_wave(self, b: np.ndarray, s: np.ndarray, k: np.ndarray):
+        """One batched update of distinct sets: ``k[i]`` touches of block
+        ``b[i]`` in set ``s[i]``."""
+        row_tags = self.tags[s]  # (m, ways)
+        hit = row_tags == b[:, None]
+        is_hit = hit.any(axis=1)
+        # first hit way / first empty way / lowest counter (first on ties)
+        empty = row_tags == -1
+        ins_way = np.where(empty.any(axis=1), empty.argmax(axis=1), self.counters[s].argmin(axis=1))
+        way = np.where(is_hit, hit.argmax(axis=1), ins_way)
+        self.tags[s, way] = b
+        base = np.where(is_hit, self.counters[s, way], 0)
+        self.counters[s, way] = np.minimum(base + k, COUNTER_MAX).astype(np.int32)
 
     def lookup(self, block: int) -> int:
-        s = int(block % self.n_sets)
-        hit = np.nonzero(self.tags[s] == block)[0]
-        return int(self.counters[s, hit[0]]) if len(hit) else -1
+        return int(self.lookup_many(np.array([block]))[0])
+
+    def lookup_many(self, blocks: np.ndarray) -> np.ndarray:
+        """Batched :meth:`lookup`: current counter per block, -1 on miss."""
+        b = np.asarray(blocks, np.int64).ravel()
+        row_tags = self.tags[b % self.n_sets]
+        hit = row_tags == b[:, None]
+        cnt = np.take_along_axis(self.counters[b % self.n_sets], hit.argmax(axis=1)[:, None], axis=1)[:, 0]
+        return np.where(hit.any(axis=1), cnt, -1).astype(np.int64)
 
     def dense(self, n_blocks: int) -> np.ndarray:
         """Dense per-block counter array for the simulator (-1 = never)."""
@@ -71,6 +118,25 @@ class PredictionFrequencyTable:
         return self.n_sets * (6 * self.ways + 48)
 
 
+class LoopPredictionFrequencyTable(PredictionFrequencyTable):
+    """The original per-block ``update`` loop, frozen as the semantics
+    oracle for the vectorized table (and the `--manager` perf baseline)."""
+
+    def update(self, blocks: np.ndarray):
+        for b in np.asarray(blocks, np.int64):
+            s = int(b % self.n_sets)
+            row_tags = self.tags[s]
+            hit = np.nonzero(row_tags == b)[0]
+            if len(hit):
+                w = hit[0]
+            else:
+                empty = np.nonzero(row_tags == -1)[0]
+                w = empty[0] if len(empty) else int(np.argmin(self.counters[s]))
+                self.tags[s, w] = b
+                self.counters[s, w] = 0
+            self.counters[s, w] = min(self.counters[s, w] + 1, COUNTER_MAX)
+
+
 def predicted_blocks(pred_pages: np.ndarray, pages_per_block: int = 16) -> np.ndarray:
     return np.unique(np.asarray(pred_pages, np.int64) // pages_per_block)
 
@@ -78,7 +144,7 @@ def predicted_blocks(pred_pages: np.ndarray, pages_per_block: int = 16) -> np.nd
 def rank_prefetches(table: PredictionFrequencyTable, blocks: np.ndarray, limit: int | None = None) -> np.ndarray:
     """Prefetch candidates ordered by prediction frequency (highest first)."""
     blocks = np.asarray(blocks, np.int64)
-    freq = np.array([table.lookup(int(b)) for b in blocks])
+    freq = table.lookup_many(blocks) if len(blocks) else np.zeros(0, np.int64)
     order = np.argsort(-freq, kind="stable")
     out = blocks[order]
     return out if limit is None else out[:limit]

@@ -23,7 +23,7 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=32)
-    ap.add_argument("--offload", choices=["none", "lru", "learned"], default="none")
+    ap.add_argument("--offload", choices=["none", "lru", "learned", "manager"], default="none")
     ap.add_argument("--hbm-fraction", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)

@@ -18,7 +18,13 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import lm
 from repro.serving.kv_cache import PAGE_TOKENS
-from repro.serving.offload import KVOffloadManager, LRUOffloadManager
+from repro.serving.offload import KVOffloadManager, LearnedOffloadManager, LRUOffloadManager
+
+#: offload manager per --offload kind: "lru" (baseline), "learned"
+#: (attention-mass EMA driving the paper's policy engine), "manager" (the
+#: full streaming OversubscriptionManager — classifier + per-pattern
+#: predictor + policy engine on the KV touch stream)
+OFFLOAD_KINDS = {"lru": LRUOffloadManager, "learned": KVOffloadManager, "manager": LearnedOffloadManager}
 
 
 @dataclasses.dataclass
@@ -51,7 +57,7 @@ class Engine:
         if self.offload_kind and cfg.family in ("dense", "moe", "vlm", "encdec"):
             n_pages = (total + PAGE_TOKENS - 1) // PAGE_TOKENS
             cap = max(int(n_pages * self.hbm_fraction), 1)
-            mk = KVOffloadManager if self.offload_kind == "learned" else LRUOffloadManager
+            mk = OFFLOAD_KINDS.get(self.offload_kind, LRUOffloadManager)
             mgr = mk(n_pages, cap)
 
         out = np.zeros((B, n_new), np.int32)

@@ -2,19 +2,20 @@
 
 TPU-native mapping of the paper's UVM problem (DESIGN.md §2): during
 long-context decode the KV cache oversubscribes HBM; cold pages live in host
-DRAM and must be prefetched back before attention needs them. This manager
-reuses the paper's policy engine verbatim:
+DRAM and must be prefetched back before attention needs them. Three
+managers share one decision-stream surface (:class:`OffloadStats`):
 
-  * per decode step, the attention "access stream" is the set of KV pages
-    whose attention mass is non-negligible for each sequence;
-  * the PREDICTION FREQUENCY TABLE (core.policy) counts predicted page ids —
-    here, pages predicted hot by an EMA of attention mass (the serving
-    analogue of the delta predictor; a learned predictor plugs into
-    `predict_hot` the same way);
-  * the PAGE-SET CHAIN partitions pages by recency interval; evictions to
-    host pick the lowest-frequency page from the oldest partition;
-  * prefetches pull the highest-frequency non-resident pages back to HBM
-    ahead of use.
+  * :class:`LRUOffloadManager` — plain LRU residency (ablation baseline);
+  * :class:`KVOffloadManager` — the paper's policy engine driven by an EMA
+    of attention mass (the serving analogue of the delta predictor);
+  * :class:`LearnedOffloadManager` — the FULL learned stack: KV-page touch
+    streams are adapted into
+    :class:`repro.uvm.manager.OversubscriptionManager` observations, so
+    the classifier -> per-pattern predictor -> policy engine pipeline that
+    drives the trace simulator also decides serving residency (prefetch
+    from ``Actions.prefetch_blocks``, eviction from the manager's
+    prediction-frequency counters, causal fine-tuning from the hit/miss
+    outcomes).
 
 The pool itself is simulated (CPU container): we track residency + move
 bytes and surface hit-rates/transfer volumes for the serving benchmarks.
@@ -80,8 +81,16 @@ class KVOffloadManager:
                     self.stats.thrash += 1
                 self._admit(p)
             self.last_interval[p] = interval
+            self._note_touch(int(p))
+        self._post_step()
+        self.step += 1
 
-        # predictions -> frequency table -> prefetch
+    def _note_touch(self, p: int):
+        """Per-touch hook (the manager adapter buffers its fault batches)."""
+
+    def _post_step(self):
+        """End-of-step prediction + prefetch (subclasses replace the source
+        of predictions; the default is the attention-mass EMA)."""
         hot = self.predict_hot(4 * self.prefetch_per_step)
         self.freq_table.update(hot)
         if self.step % INTERVAL_STEPS == INTERVAL_STEPS - 1:
@@ -90,7 +99,6 @@ class KVOffloadManager:
             if not self.resident[p] and self.prefetch_budget > 0:
                 self._admit(int(p))
                 self.stats.prefetches += 1
-        self.step += 1
 
     @property
     def prefetch_budget(self) -> int:
@@ -101,10 +109,14 @@ class KVOffloadManager:
             self._evict_one(exclude=p)
         self.resident[p] = True
 
+    def _freq_dense(self) -> np.ndarray:
+        """Per-page prediction-frequency counters the eviction key reads."""
+        return self.freq_table.dense(self.n_pages)
+
     def _evict_one(self, exclude: int):
         interval = self.step // INTERVAL_STEPS
         age = np.clip(interval - self.last_interval, 0, 2)
-        freq = self.freq_table.dense(self.n_pages)
+        freq = self._freq_dense()
         cand = self.resident.copy()
         cand[exclude] = False
         if not cand.any():
@@ -135,3 +147,91 @@ class LRUOffloadManager(KVOffloadManager):
         self.resident[victim] = False
         self.evicted_once[victim] = True
         self.stats.evictions += 1
+
+
+def _default_serving_manager(n_pages: int, capacity: int):
+    """A manager sized for KV pages: page == management unit
+    (``pages_per_block=1``), a small predictor, single-epoch fine-tuning
+    (decode-step batches are tiny)."""
+    from repro.configs.predictor_paper import SMOKE
+    from repro.core.incremental import TrainConfig
+    from repro.uvm.manager import ManagerConfig, OversubscriptionManager
+
+    cfg = ManagerConfig(
+        predictor=SMOKE,
+        train=TrainConfig(group_size=64, epochs=1, batch_size=32),
+        n_pages=n_pages, n_blocks=n_pages, capacity=capacity,
+        pages_per_block=1,
+    )
+    return OversubscriptionManager(cfg)
+
+
+class LearnedOffloadManager(KVOffloadManager):
+    """KV-page residency decided by the streaming
+    :class:`~repro.uvm.manager.OversubscriptionManager` — the same
+    classifier/predictor/policy-engine instance that drives the trace
+    simulator (pass ``manager=`` to share one; the default builds a fresh
+    page-granular manager).
+
+    Adaptation: touched KV pages accumulate into fault batches of
+    ``group`` accesses; each full batch becomes one
+    ``observe`` -> apply-actions -> ``feedback`` round.  KV page ``p`` is
+    observed as page id ``p * pages_per_block``, so the manager's BLOCK id
+    is exactly the KV page id whatever granularity its config came with —
+    ``Actions.prefetch_blocks`` and the frequency counters are read back
+    as KV pages directly.  Prefetches are budgeted like the attention-EMA
+    manager, evictions read the manager's counters through the page-set
+    chain (oldest partition, lowest frequency), and ``feedback`` carries
+    each touch's E∪T membership + the miss count as the fault clock, so
+    the predictor fine-tunes causally on the live serving stream.  The
+    decision-stream surface (``stats``) is identical to the other
+    managers — ``serving.engine`` reports it unchanged.
+    """
+
+    def __init__(self, n_pages: int, hbm_capacity: int, *, manager=None, group: int = 64,
+                 prefetch_per_step: int = 4):
+        super().__init__(n_pages, hbm_capacity, prefetch_per_step=prefetch_per_step)
+        self.manager = manager if manager is not None else _default_serving_manager(n_pages, hbm_capacity)
+        if self.manager.cfg.n_blocks < n_pages:
+            raise ValueError(
+                f"manager.cfg.n_blocks ({self.manager.cfg.n_blocks}) must cover the "
+                f"KV pool ({n_pages} pages): the manager's block unit is the KV page"
+            )
+        self.group = group
+        self._buf: list[int] = []
+        self.last_actions = None
+
+    # -- the manager adapter --------------------------------------------------
+
+    def _observe_batch(self):
+        from repro.uvm.manager import FaultBatch, Outcomes
+
+        batch = np.asarray(self._buf[: self.group], np.int64)
+        self._buf = self._buf[self.group:]
+        # kv page p -> manager page p*ppb, so manager block id == kv page id
+        actions = self.manager.observe(FaultBatch(page=batch * self.manager.cfg.pages_per_block))
+        self.last_actions = actions
+        budget = self.prefetch_budget
+        for p in np.asarray(actions.prefetch_blocks, np.int64):
+            if p < self.n_pages and not self.resident[p] and budget > 0:
+                self._admit(int(p))
+                self.stats.prefetches += 1
+                budget -= 1
+        # causal fine-tune: E∪T membership of each touch, misses as the
+        # fault clock that advances the flush/chain intervals
+        self.manager.feedback(Outcomes(
+            was_evicted=self.evicted_once[batch],
+            fault_count=self.stats.hbm_misses,
+        ))
+
+    def _freq_dense(self) -> np.ndarray:
+        # block id == kv page id (see _observe_batch), so the manager's
+        # counters index the KV pool directly
+        return self.manager.freq_table.dense(self.n_pages)
+
+    def _note_touch(self, p: int):
+        self._buf.append(p)
+
+    def _post_step(self):
+        while len(self._buf) >= self.group:
+            self._observe_batch()

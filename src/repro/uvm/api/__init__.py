@@ -40,9 +40,13 @@ from repro.uvm.registry import (
     register_policy,
     register_prefetcher,
     register_predictor,
+    register_classifier,
+    register_freq_table,
     policy_names,
     prefetcher_names,
     predictor_names,
+    classifier_names,
+    freq_table_names,
 )
 
 __all__ = [
@@ -51,5 +55,7 @@ __all__ = [
     "spec_key", "spec_from_dict",
     "RunStore", "Session", "ALL_BENCH", "FEATURED",
     "register_policy", "register_prefetcher", "register_predictor",
+    "register_classifier", "register_freq_table",
     "policy_names", "prefetcher_names", "predictor_names",
+    "classifier_names", "freq_table_names",
 ]

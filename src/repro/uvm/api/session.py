@@ -262,9 +262,17 @@ class Session:
         results.update(self._run_uvmsmart_group(smart))
         return [results[i] for i in range(len(cells))]
 
-    @staticmethod
-    def _payload_decoder(cell: CellSpec):
-        return _payload_to_learned if cell.strategy == "ours" else (lambda p: p)
+    def _payload_decoder(self, cell: CellSpec):
+        if cell.strategy != "ours":
+            return lambda p: p
+
+        def decode(payload: dict) -> LearnedRunResult:
+            res = _payload_to_learned(payload)
+            if not res.n_accesses:  # record stored before the field existed
+                res.n_accesses = len(self.trace(cell.workload))
+            return res
+
+        return decode
 
     def _run_sim_group(self, group) -> dict[int, dict]:
         """All sim cells of one workload in ONE vmapped run_batch sweep."""
@@ -415,8 +423,31 @@ class Session:
     def ours(self, w, oversub: float = 1.25, seed: int = 0, **kw) -> LearnedRunResult:
         """The paper's full learned runtime on one workload (Section IV).
         ``seed`` seeds the simulator state (like sim cells); model/training
-        seeds live in the ModelSpec's TrainSpec."""
+        seeds live in the ModelSpec's TrainSpec.  Internally every ``ours``
+        cell drives a streaming
+        :class:`~repro.uvm.manager.OversubscriptionManager` through the
+        simulator (``runtime.run_ours`` is that driver); :meth:`manager`
+        hands you the same object for any other fault source."""
         return self.run(self.ours_cell(w, oversub, seed, **kw))
+
+    def manager(self, w, oversub: float = 1.25, *, pretrained: bool = False, **kw):
+        """A streaming :class:`~repro.uvm.manager.OversubscriptionManager`
+        configured for workload ``w`` at this session's model/scale — the
+        exact object an ``ours`` cell drives.  ``pretrained=True`` starts
+        it from this session's Section V-A table (a fresh clone).  Feed it
+        any fault source: the simulator, the serving KV-offload adapter
+        (:class:`repro.serving.offload.LearnedOffloadManager`), or the
+        ``cli serve`` JSONL stream."""
+        model = self._ours_model(**kw)
+        table = (
+            self.pretrained(model.pretrain, pcfg=model.predictor, train=model.train, kind=model.kind)
+            if pretrained else None
+        )
+        return R.manager_for(
+            self.trace(w), model.predictor, model.train.to_train_config(),
+            oversubscription=oversub, kind=model.kind, table=table,
+            use_thrash_term=model.use_thrash_term, use_lucir=model.use_lucir,
+        )
 
     def ours_many(self, names: list, oversub: float = 1.25, **kw) -> list[LearnedRunResult]:
         """Warm the learned-run cache for many benchmarks in one grouped

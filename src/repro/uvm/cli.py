@@ -5,6 +5,7 @@
         --prefetchers demand tree --oversubs 1.25 1.5
     PYTHONPATH=src python -m repro.uvm.cli sweep --spec experiment.json
     PYTHONPATH=src python -m repro.uvm.cli report
+    PYTHONPATH=src python -m repro.uvm.cli serve --input faults.jsonl --n-pages 4096
 
 Every executed cell is published to the content-addressed run store
 (``experiments/runs/`` by default; ``--runs-dir`` relocates it), so a
@@ -13,6 +14,19 @@ repeated invocation is served entirely from disk — the final
 (CI asserts ``computed=0`` on the second pass). ``--dump-spec`` writes the
 composed :class:`~repro.uvm.api.specs.ExperimentSpec` as JSON, the
 declarative artifact ``sweep --spec`` replays.
+
+``serve`` is the streaming side: it drives one live
+:class:`~repro.uvm.manager.OversubscriptionManager` over a JSONL fault
+stream (stdin or ``--input``), emitting one JSON action line (prefetch +
+pre-evict block ids, pattern, accuracy) per observed batch — the skeleton
+of a deployable UVM-backend sidecar.  Input lines::
+
+    {"pages": [0, 1, 2, ...], "pc": [...], "tb": [...], "kernel": [...]}
+    {"feedback": {"was_evicted": [false, ...], "fault_count": 128}}
+
+(``pc``/``tb``/``kernel`` optional; a ``feedback`` line closes the
+previous batch — without one the batch auto-closes, fine-tuning without
+the thrashing term and leaving the fault clock unchanged.)
 """
 from __future__ import annotations
 
@@ -32,7 +46,7 @@ from repro.uvm.api import (
     WorkloadSpec,
 )
 from repro.uvm.api.specs import PAPER_TRAIN, TrainSpec, parse_scale
-from repro.uvm.trace import BENCHMARKS
+from repro.uvm.trace import BENCHMARKS, PAGES_PER_BLOCK
 
 
 def _add_common(ap: argparse.ArgumentParser) -> None:
@@ -178,7 +192,73 @@ def cmd_report(args) -> int:
     return 0
 
 
-SUBCOMMANDS = {"run": cmd_run, "sweep": cmd_sweep, "report": cmd_report}
+def cmd_serve(args) -> int:
+    import numpy as np
+
+    from repro.configs.predictor_paper import CONFIG_QUICK
+    from repro.uvm.manager import FaultBatch, ManagerConfig, Outcomes, OversubscriptionManager
+
+    n_blocks = (args.n_pages + args.pages_per_block - 1) // args.pages_per_block
+    capacity = args.capacity if args.capacity is not None else max(int(n_blocks / args.oversub), 1)
+    cfg = ManagerConfig(
+        predictor=CONFIG_QUICK,
+        train=dataclasses.replace(TrainSpec(), group_size=args.group_size).to_train_config(),
+        kind=args.kind, n_pages=args.n_pages, n_blocks=n_blocks, capacity=capacity,
+        pages_per_block=args.pages_per_block,
+        classifier=args.classifier, freq_table=args.freq_table,
+    )
+    mgr = OversubscriptionManager(cfg)
+    fh = sys.stdin if args.input == "-" else open(args.input)
+    pending = False
+    last_fault = 0
+    batches = 0
+    try:
+        for line in fh:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            rec = json.loads(line)
+            if "feedback" in rec:
+                fb = rec["feedback"] or {}
+                last_fault = int(fb.get("fault_count", last_fault))
+                if pending:
+                    we = fb.get("was_evicted")
+                    mgr.feedback(Outcomes(
+                        was_evicted=np.asarray(we, bool) if we is not None else None,
+                        fault_count=last_fault,
+                    ))
+                    pending = False
+                continue
+            if "pages" not in rec:
+                raise SystemExit(f"serve: line needs 'pages' or 'feedback': {line[:80]}")
+            if pending:  # auto-close the previous batch (no outcome report)
+                mgr.feedback(Outcomes(fault_count=last_fault))
+            actions = mgr.observe(FaultBatch(
+                np.asarray(rec["pages"], np.int64),
+                rec.get("pc"), rec.get("tb"), rec.get("kernel"),
+            ))
+            pending = True
+            batches += 1
+            print(json.dumps({
+                "batch": batches,
+                "pattern": actions.pattern,
+                "n_samples": actions.n_samples,
+                "accuracy": actions.accuracy,
+                "warm": actions.warm,
+                "prefetch_blocks": np.asarray(actions.prefetch_blocks).tolist(),
+                "pre_evict_blocks": np.asarray(actions.pre_evict_blocks).tolist(),
+            }), flush=True)
+        if pending:
+            mgr.feedback(Outcomes(fault_count=last_fault))
+    finally:
+        if fh is not sys.stdin:
+            fh.close()
+    print(f"# serve batches={batches} predictions={mgr.n_predictions} "
+          f"patterns={mgr.n_models} classes={mgr.n_classes} top1={mgr.top1:.3f}")
+    return 0
+
+
+SUBCOMMANDS = {"run": cmd_run, "sweep": cmd_sweep, "report": cmd_report, "serve": cmd_serve}
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -211,6 +291,20 @@ def build_parser() -> argparse.ArgumentParser:
     p_rep.add_argument("--runs-dir", default=None)
     p_rep.add_argument("--benchmark", default=None)
     p_rep.add_argument("--csv", default=None, help="also write the table as CSV")
+
+    p_srv = sub.add_parser("serve", help="drive the streaming manager over a JSONL fault stream")
+    p_srv.add_argument("--input", default="-", help="JSONL fault-batch stream ('-' = stdin)")
+    p_srv.add_argument("--n-pages", type=int, default=4096, help="working-set size in pages")
+    p_srv.add_argument("--pages-per-block", type=int, default=PAGES_PER_BLOCK,
+                       help="pages per management block (1 = manage pages directly)")
+    p_srv.add_argument("--oversub", type=float, default=1.25,
+                       help="oversubscription level (sets the prefetch-budget capacity)")
+    p_srv.add_argument("--capacity", type=int, default=None,
+                       help="device capacity in blocks (overrides --oversub)")
+    p_srv.add_argument("--kind", default="transformer", help="registered predictor kind")
+    p_srv.add_argument("--classifier", default="dfa", help="registered pattern classifier")
+    p_srv.add_argument("--freq-table", default="setassoc", help="registered frequency-table engine")
+    p_srv.add_argument("--group-size", type=int, default=512, help="fine-tune schedule group size")
     return ap
 
 

@@ -1,0 +1,39 @@
+"""`repro.uvm.manager` — the streaming oversubscription-management API.
+
+The paper's online pipeline (pattern classifier -> per-pattern predictor ->
+policy engine) as a workload-agnostic stepwise protocol:
+``OversubscriptionManager.observe(FaultBatch) -> Actions`` plus
+``feedback(Outcomes)`` for causal fine-tuning.  One manager implementation
+drives the trace simulator (:func:`repro.uvm.runtime.run_ours`), the
+serving KV-offload path (:class:`repro.serving.offload.LearnedOffloadManager`)
+and the ``python -m repro.uvm.cli serve`` fault-stream sidecar.
+
+See docs/API.md ("The streaming manager") for the cookbook.
+"""
+from repro.uvm.manager.core import (
+    Actions,
+    EvalRequest,
+    FaultBatch,
+    INTERVAL_FAULTS,
+    ManagerConfig,
+    Outcomes,
+    OversubscriptionManager,
+    TrainRequest,
+    prefetch_mask,
+    prefetch_warm,
+)
+from repro.uvm.manager.stream import OnlineFeatureStream
+
+__all__ = [
+    "OversubscriptionManager",
+    "ManagerConfig",
+    "FaultBatch",
+    "Actions",
+    "Outcomes",
+    "EvalRequest",
+    "TrainRequest",
+    "OnlineFeatureStream",
+    "prefetch_warm",
+    "prefetch_mask",
+    "INTERVAL_FAULTS",
+]

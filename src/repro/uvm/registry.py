@@ -30,6 +30,15 @@ Contracts:
 * **predictor builder(cfg)** returns ``(init_fn(rng) -> params,
   forward(params, batch) -> (logits, features))`` — the
   :func:`repro.core.baselines_nn.make_model` contract.
+* **classifier factory()** returns a fresh stateful pattern classifier
+  with ``classify(blocks, kernels) -> pattern_id`` and ``reset()`` — the
+  :class:`repro.core.pattern.PatternClassifier` contract.  Builtin:
+  ``dfa``.  Used by :class:`repro.uvm.manager.OversubscriptionManager`.
+* **freq-table factory()** returns a fresh prediction-frequency engine
+  with ``update(blocks)`` / ``lookup_many(blocks)`` / ``dense(n_blocks)``
+  / ``on_intervals(n)`` — the
+  :class:`repro.core.policy.PredictionFrequencyTable` contract.  Builtin:
+  ``setassoc`` (the paper's 1024x16 set-associative table).
 
 Registration order is identity: entry ids are assigned densely in
 registration order and traced into the compiled scans as runtime values, so
@@ -55,12 +64,18 @@ __all__ = [
     "register_policy",
     "register_prefetcher",
     "register_predictor",
+    "register_classifier",
+    "register_freq_table",
     "policy_names",
     "prefetcher_names",
     "predictor_names",
+    "classifier_names",
+    "freq_table_names",
     "policy_branches",
     "prefetch_branches",
     "predictor_builder",
+    "classifier_factory",
+    "freq_table_factory",
     "registry_version",
     "scoped",
     "POLICY_IDS",
@@ -83,6 +98,8 @@ class _PrefetchEntry(NamedTuple):
 _POLICIES: dict[str, _PolicyEntry] = {}
 _PREFETCHERS: dict[str, _PrefetchEntry] = {}
 _PREDICTORS: dict[str, Callable] = {}
+_CLASSIFIERS: dict[str, Callable] = {}
+_FREQ_TABLES: dict[str, Callable] = {}
 
 # name -> dense id (aliases share the target's id). These dict OBJECTS are
 # stable — the simulator imports and holds them — so registrations made
@@ -159,6 +176,33 @@ def register_predictor(name: str, builder: Callable) -> None:
     _PREDICTORS[name] = builder
 
 
+def register_classifier(name: str, factory: Callable) -> None:
+    """Register an access-pattern classifier by a zero-arg factory.
+
+    ``factory()`` returns a fresh STATEFUL classifier instance exposing
+    ``classify(blocks, kernels) -> pattern_id`` and ``reset()`` (the
+    :class:`repro.core.pattern.PatternClassifier` contract); the name
+    becomes a valid ``classifier`` for
+    :class:`repro.uvm.manager.OversubscriptionManager`.  Classifiers never
+    enter the simulator's branch tables (no version bump).
+    """
+    _claim(_CLASSIFIERS, name, "classifier")
+    _CLASSIFIERS[name] = factory
+
+
+def register_freq_table(name: str, factory: Callable) -> None:
+    """Register a prediction-frequency engine by a zero-arg factory.
+
+    ``factory()`` returns a fresh table exposing ``update(blocks)``,
+    ``lookup_many(blocks)``, ``dense(n_blocks)`` and ``on_intervals(n)``
+    (the :class:`repro.core.policy.PredictionFrequencyTable` contract);
+    the name becomes a valid ``freq_table`` for the manager.  Frequency
+    tables never enter the simulator's branch tables (no version bump).
+    """
+    _claim(_FREQ_TABLES, name, "freq-table")
+    _FREQ_TABLES[name] = factory
+
+
 def policy_names() -> tuple[str, ...]:
     return tuple(_POLICIES)
 
@@ -169,6 +213,14 @@ def prefetcher_names() -> tuple[str, ...]:
 
 def predictor_names() -> tuple[str, ...]:
     return tuple(_PREDICTORS)
+
+
+def classifier_names() -> tuple[str, ...]:
+    return tuple(_CLASSIFIERS)
+
+
+def freq_table_names() -> tuple[str, ...]:
+    return tuple(_FREQ_TABLES)
 
 
 def policy_branches() -> tuple[Callable, ...]:
@@ -191,6 +243,20 @@ def predictor_builder(name: str) -> Callable:
         raise KeyError(f"unknown predictor kind {name!r}; registered: {sorted(_PREDICTORS)}") from None
 
 
+def classifier_factory(name: str) -> Callable:
+    try:
+        return _CLASSIFIERS[name]
+    except KeyError:
+        raise KeyError(f"unknown classifier {name!r}; registered: {sorted(_CLASSIFIERS)}") from None
+
+
+def freq_table_factory(name: str) -> Callable:
+    try:
+        return _FREQ_TABLES[name]
+    except KeyError:
+        raise KeyError(f"unknown freq-table {name!r}; registered: {sorted(_FREQ_TABLES)}") from None
+
+
 @contextlib.contextmanager
 def scoped():
     """Restore all registry TABLES on exit — for tests and notebooks that
@@ -203,6 +269,7 @@ def scoped():
     saved = (
         dict(_POLICIES), dict(_PREFETCHERS), dict(_PREDICTORS),
         dict(POLICY_IDS), dict(PREFETCH_IDS), _VERSION[0],
+        dict(_CLASSIFIERS), dict(_FREQ_TABLES),
     )
     try:
         yield
@@ -212,5 +279,7 @@ def scoped():
         _PREDICTORS.clear(); _PREDICTORS.update(saved[2])
         POLICY_IDS.clear(); POLICY_IDS.update(saved[3])
         PREFETCH_IDS.clear(); PREFETCH_IDS.update(saved[4])
+        _CLASSIFIERS.clear(); _CLASSIFIERS.update(saved[6])
+        _FREQ_TABLES.clear(); _FREQ_TABLES.update(saved[7])
         if _VERSION[0] != saved[5]:
             _VERSION[0] += 1  # restored tables are a NEW state for the jits

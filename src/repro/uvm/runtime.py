@@ -3,22 +3,29 @@ Figs. 11-14): pattern classifier -> per-pattern predictor (CE + LUCIR +
 thrashing loss) -> policy engine (prediction frequency table + page-set
 chain) -> simulator GMMU ops.
 
-Per group of accesses:
-  1. classify the group's access pattern; fetch that pattern's model
-  2. predict each access's next page delta (STRICTLY before training on it)
-  3. update the prediction frequency table; stage ALL predicted pages as
-     prefetches (Section IV-D); export dense counters to the simulator's
-     `learned` eviction policy
-  4. run the simulator segment (demand migration + learned eviction)
-  5. fine-tune the model on the group, with the E∪T membership of each
-     sample's target page feeding the thrashing term
+The pipeline itself lives in :mod:`repro.uvm.manager` as the streaming
+:class:`~repro.uvm.manager.OversubscriptionManager`; this module is the
+TRACE-SIMULATOR driver over it.  Per group of accesses:
+
+  1. ``manager.observe(FaultBatch)`` — classify the group's access pattern,
+     fetch that pattern's model, predict each access's next page delta
+     (STRICTLY before training on it), update the prediction frequency
+     table and return the staged prefetches + dense counters (Section IV-D)
+  2. export the counters to the simulator's `learned` eviction policy and
+     stage the prefetch blocks (:func:`repro.uvm.simulator.apply_prefetch`)
+  3. run the simulator segment (demand migration + learned eviction)
+  4. ``manager.feedback(Outcomes)`` — fine-tune the model on the group,
+     with the E∪T membership of each sample's target page feeding the
+     thrashing term, and advance the flush cadence from the fault count
 
 :func:`run_ours` runs one trace serially; :func:`run_ours_many` runs many
-traces in lockstep with the same per-lane semantics, batching predict /
-simulate / fine-tune across benchmarks through the vmapped ``Trainer``
-methods and ``simulator.run_segments_many`` (lanes bucketed by shape share
-one dispatch).  Lanes never share state, so per-benchmark results match
-stand-alone runs.
+traces in lockstep with the same per-lane semantics, batching the
+managers' staged predict / fine-tune dispatches through the vmapped
+``Trainer`` methods and ``simulator.run_segments_many`` (lanes bucketed by
+shape share one dispatch).  Lanes never share state, so per-benchmark
+results match stand-alone runs.  Counters and top-1 are bit-identical to
+the pre-manager monolith (pinned by tests/golden/ours_golden.json on all
+11 benchmarks).
 """
 from __future__ import annotations
 
@@ -36,11 +43,22 @@ from repro.configs.predictor_paper import PredictorConfig
 from repro.core.features import DeltaVocab, FeatureStream
 from repro.core.incremental import TrainConfig, Trainer
 from repro.core.model_table import ModelTable
-from repro.core.pattern import LINEAR, RANDOM, RANDOM_REUSE, PatternClassifier
-from repro.core.policy import PredictionFrequencyTable, predicted_blocks
+from repro.core.pattern import PatternClassifier
 from repro.uvm import simulator as S
 from repro.uvm import timing
+from repro.uvm.manager import (
+    FaultBatch,
+    ManagerConfig,
+    Outcomes,
+    OversubscriptionManager,
+    prefetch_mask,
+    prefetch_warm,
+)
 from repro.uvm.trace import PAGES_PER_BLOCK, Trace
+
+# back-compat aliases (pre-manager private helpers)
+_prefetch_warm = prefetch_warm
+_prefetch_mask = prefetch_mask
 
 
 @dataclasses.dataclass
@@ -52,14 +70,22 @@ class LearnedRunResult:
     n_models: int
     per_group_acc: list
     warm_top1: float = 0.0  # excludes each pattern-model's first (cold) group
+    n_accesses: int = 0  # trace length (0 only on results stored before it existed)
 
-    def ipc(self, pred_overhead_us: float = 1.0, n_accesses: int = 0) -> float:
+    def ipc(self, pred_overhead_us: float = 1.0, n_accesses: int | None = None) -> float:
         # The predictor sits at the UVM backend and runs ASYNCHRONOUSLY with
         # kernel execution (Section V-A/C); only predictions consumed on the
         # fault-handling path serialise with execution, so the overhead is
         # charged per far-fault, not per prediction. This reproduces Fig. 13's
         # shape: negligible at 1us, catastrophic by 50-100us (comparable to
         # the 45us far-fault service itself).
+        if n_accesses is None:
+            n_accesses = self.n_accesses
+        if not n_accesses:
+            raise ValueError(
+                "this result predates the n_accesses field (or was built with 0); "
+                "pass ipc(..., n_accesses=len(trace)) explicitly"
+            )
         charged = min(self.n_predictions, self.stats["faults"])
         return timing.ipc(self.stats, n_accesses, pred_overhead_us=pred_overhead_us, n_predictions=charged)
 
@@ -169,31 +195,64 @@ def pretrain_table(
     return table
 
 
-def _prefetch_warm(entry, pat) -> bool:
-    """Pattern-aware aggressiveness gate (see the comment in run_ours):
-    cold models and random-classified phases must not drive prefetch, and
-    the PREVIOUS group's measured accuracy must clear a pattern-dependent
-    floor before speculative migration is worth PCIe bandwidth."""
-    acc_floor = 0.4 if pat == LINEAR else 0.6
-    return entry.n_updates > 0 and pat not in (RANDOM, RANDOM_REUSE) and entry.last_acc >= acc_floor
+def manager_for(
+    trace: Trace,
+    pcfg: PredictorConfig | None = None,
+    tcfg: TrainConfig | None = None,
+    *,
+    oversubscription: float = 1.25,
+    kind: str = "transformer",
+    table: ModelTable | None = None,
+    use_thrash_term: bool = True,
+    use_lucir: bool = True,
+) -> OversubscriptionManager:
+    """An :class:`OversubscriptionManager` configured for one trace's
+    geometry (padded block bucket + oversubscribed capacity) — the manager
+    :func:`run_ours` drives, reusable by any other consumer of the same
+    workload."""
+    pcfg = pcfg or PredictorConfig()
+    tcfg = tcfg or TrainConfig()
+    cfg = ManagerConfig(
+        predictor=pcfg, train=tcfg, kind=kind,
+        n_pages=trace.n_pages,
+        n_blocks=S.bucket_blocks(trace.n_blocks),
+        capacity=S.capacity_for(trace.n_blocks, oversubscription),
+        use_thrash_term=use_thrash_term, use_lucir=use_lucir,
+    )
+    return OversubscriptionManager(cfg, table=table)
 
 
-def _prefetch_mask(dense: np.ndarray, pred_pages: np.ndarray, last_acc: float, nb: int, cap: int) -> np.ndarray:
-    """Section IV-D prefetch candidate selection: gate by repeated
-    prediction and cap the in-flight budget, scaled by model confidence."""
-    pblocks = predicted_blocks(pred_pages, PAGES_PER_BLOCK)
-    pblocks = pblocks[pblocks < nb]
-    # confidence-scaled aggressiveness: a highly-accurate model may
-    # prefetch every predicted block; a mediocre one only repeated ones
-    min_freq = 1 if last_acc >= 0.7 else 2
-    pblocks = pblocks[dense[pblocks] >= min_freq]
-    budget = cap if last_acc >= 0.7 else cap // 2
-    if len(pblocks) > budget:
-        order = np.argsort(-dense[pblocks], kind="stable")
-        pblocks = pblocks[order[:budget]]
+def _group_batch(trace: Trace, g0: int, g1: int) -> FaultBatch:
+    return FaultBatch(trace.page[g0:g1], trace.pc[g0:g1], trace.tb[g0:g1], trace.kernel[g0:g1])
+
+
+def _apply_actions(state, actions, nb: int, cap: int):
+    """Stage one batch's actions into the simulator state: export the dense
+    counters to the `learned` eviction keys, then apply the prefetches
+    (``counters is None`` = the gate was closed; nothing to stage)."""
+    if actions.counters is None:
+        return state
+    state = state._replace(freq=jnp.asarray(actions.counters))
     mask = np.zeros(nb, bool)
-    mask[pblocks] = True
-    return mask
+    mask[actions.prefetch_blocks] = True
+    return S.apply_prefetch(state, jnp.asarray(mask), capacity=cap, policy="learned")
+
+
+def _state_stats(state) -> dict:
+    return {
+        "pages_thrashed": int(state.thrash_events) * PAGES_PER_BLOCK,
+        "faults": int(state.faults),
+        "migrated_blocks": int(state.migrations),
+        "zero_copy": int(state.zero_copy),
+        "occupancy": int(state.occupancy),
+    }
+
+
+def _result(mgr: OversubscriptionManager, state, n_accesses: int) -> LearnedRunResult:
+    return LearnedRunResult(
+        _state_stats(state), mgr.top1, mgr.n_predictions, mgr.n_classes,
+        mgr.n_models, mgr.per_group, mgr.warm_top1, n_accesses,
+    )
 
 
 def run_ours(
@@ -207,134 +266,57 @@ def run_ours(
     use_thrash_term: bool = True,
     use_lucir: bool = True,
     seed: int = 0,
+    manager: OversubscriptionManager | None = None,
 ) -> LearnedRunResult:
+    """Drive one trace through the streaming manager + simulator.
+
+    Pass ``manager`` to drive an externally-built (possibly already warm)
+    :class:`OversubscriptionManager` instead of a fresh one — its config
+    must match the trace's geometry.
+    """
     pcfg = pcfg or PredictorConfig()
     tcfg = tcfg or TrainConfig()
-    trainer = Trainer(pcfg, tcfg, kind)
-    if table is None:
-        table = ModelTable(lambda s: trainer.new_params(s), n_slots=tcfg.table_slots)
-    vocab = DeltaVocab(pcfg.delta_vocab)
-    stream = FeatureStream(trace, vocab, pcfg.history, page_vocab=pcfg.page_vocab, pc_vocab=pcfg.pc_vocab, tb_vocab=pcfg.tb_vocab)
-    classifier = PatternClassifier()
-    freq_table = PredictionFrequencyTable()
-
-    nb = S.bucket_blocks(trace.n_blocks)
-    cap = S.capacity_for(trace.n_blocks, oversubscription)
+    mgr = manager if manager is not None else manager_for(
+        trace, pcfg, tcfg, oversubscription=oversubscription, kind=kind,
+        table=table, use_thrash_term=use_thrash_term, use_lucir=use_lucir,
+    )
+    nb, cap = mgr.cfg.n_blocks, mgr.cfg.capacity
     state = S.init_state(nb, seed)
     blocks = trace.block.astype(np.int32)
     nxt = S.next_use_for(trace)  # cached per trace across groups/cells
-    dtable_cache: dict[int, int] = {}
 
     n = len(trace)
-    per_group = []
-    n_pred = 0
-    all_corr = []
-    warm_corr = []
-    last_interval = 0
-    for g0 in range(0, n, tcfg.group_size):
-        g1 = min(g0 + tcfg.group_size, n)
-        fs = stream.windows(g0, g1)
-        pat = classifier.classify(blocks[g0:g1], trace.kernel[g0:g1])
-        entry = table.get(pat)
-        n_active = max(vocab.n_classes, 2)
-
-        in_et = None
-        # pattern-aware aggressiveness: cold models must not drive prefetch;
-        # random-classified phases get eviction-only management (their delta
-        # predictions are noise by construction — the same reasoning UVMSmart
-        # uses to switch random phases to pinning); and the PREVIOUS group's
-        # measured accuracy (known at decision time — no future info) must
-        # clear a floor before speculative migration is worth PCIe bandwidth.
-        # Pure streaming (no re-reference) is cheap to speculate on — wrong
-        # blocks are evicted harmlessly; reuse patterns risk evicting hot
-        # pages, so they need a higher confidence bar.
-        warm = _prefetch_warm(entry, pat)
-        if len(fs):
-            # 2. strictly-causal prediction for the group
-            corr, pred_cls = trainer.evaluate(entry.params, fs, n_active)
-            per_group.append(float(corr.mean()))
-            all_corr.append(corr)
-            if entry.n_updates > 0:
-                warm_corr.append(corr)
-            n_pred += len(fs)
-            entry.last_acc = float(corr.mean())  # informs the NEXT group's gate
-
-            # 3. predicted pages -> frequency table + staged prefetches
-            dtable_cache.update(vocab.decode_table())
-            pred_delta = np.array([dtable_cache.get(int(c), 0) for c in pred_cls], np.int64)
-            prev_page = trace.page[fs.t_index - 1].astype(np.int64)
-            pred_pages = np.clip(prev_page + pred_delta, 0, trace.n_pages - 1)
-        if len(fs) and warm:
-            freq_table.update(np.asarray(pred_pages, np.int64) // PAGES_PER_BLOCK)
-            # one dense export per group: it feeds both the simulator's
-            # `learned` eviction keys and the prefetch gate below
-            dense = freq_table.dense(nb)
-            state = state._replace(freq=jnp.asarray(dense))
-            # Section IV-D: "prefetching candidates will be selected from the
-            # pages with the highest prediction frequency ... to control the
-            # amount of prefetching while the oversubscription level is high":
-            # gate by repeated prediction + cap the in-flight budget, so a
-            # weakly-trained predictor cannot flood the device with garbage.
-            mask = _prefetch_mask(dense, pred_pages, entry.last_acc, nb, cap)
-            state = S.apply_prefetch(state, jnp.asarray(mask), capacity=cap, policy="learned")
-
-        # 4. simulator segment under the learned policy
-        state, outs = S._run_segment(
-            state, jnp.asarray(blocks[g0:g1]), jnp.asarray(nxt[g0:g1]),
-            n_blocks=nb, capacity=cap, policy="learned", prefetch="demand", n_valid=trace.n_blocks,
+    # the manager's OWN training schedule decides the batch cadence — an
+    # externally-passed manager must observe the group size it was built
+    # with, not this call's tcfg default
+    G = mgr.cfg.train.group_size
+    for g0 in range(0, n, G):
+        g1 = min(g0 + G, n)
+        actions = mgr.observe(_group_batch(trace, g0, g1))
+        state = _apply_actions(state, actions, nb, cap)
+        state, outs = S.run_segment(
+            state, blocks[g0:g1], nxt[g0:g1],
+            capacity=cap, policy="learned", prefetch="demand", n_valid=trace.n_blocks,
         )
-        was_evicted = np.asarray(outs["was_evicted"])
-
-        # frequency table flush cadence (every 3 fault-intervals)
-        interval_now = int(state.fault_count) // S.INTERVAL
-        if interval_now > last_interval:
-            freq_table.on_intervals(interval_now - last_interval)
-            last_interval = interval_now
-
-        # 5. fine-tune on the group with E∪T flags
-        if len(fs):
-            if use_lucir:
-                table.snapshot_prev(pat)
-                entry = table.get(pat)
-            in_et = was_evicted[fs.t_index - g0] if use_thrash_term else None
-            entry = trainer.train_group(entry, fs, n_active, in_et=in_et, use_lucir=use_lucir)
-            table.put(pat, entry)
-
-    stats = {
-        "pages_thrashed": int(state.thrash_events) * PAGES_PER_BLOCK,
-        "faults": int(state.faults),
-        "migrated_blocks": int(state.migrations),
-        "zero_copy": int(state.zero_copy),
-        "occupancy": int(state.occupancy),
-    }
-    top1 = float(np.concatenate(all_corr).mean()) if all_corr else 0.0
-    warm = float(np.concatenate(warm_corr).mean()) if warm_corr else top1
-    return LearnedRunResult(stats, top1, n_pred, vocab.n_classes, table.n_models, per_group, warm)
+        mgr.feedback(Outcomes(
+            was_evicted=np.asarray(outs["was_evicted"]),
+            fault_count=int(state.fault_count),
+        ))
+    return _result(mgr, state, n)
 
 
 @dataclasses.dataclass
 class _Lane:
     """Per-trace runtime state for :func:`run_ours_many` (each lane owns its
-    model table, vocabulary, classifier, frequency table and simulator
-    state — lanes are fully independent, exactly as serial runs are)."""
+    manager — model table, vocabulary, classifier, frequency table — and
+    its simulator state; lanes are fully independent, exactly as serial
+    runs are)."""
 
     trace: Trace
-    table: ModelTable
-    vocab: DeltaVocab
-    stream: FeatureStream
-    classifier: PatternClassifier
-    freq_table: PredictionFrequencyTable
-    nb: int
-    cap: int
+    mgr: OversubscriptionManager
     state: object
     blocks: np.ndarray
     nxt: np.ndarray
-    dtable: dict = dataclasses.field(default_factory=dict)
-    per_group: list = dataclasses.field(default_factory=list)
-    all_corr: list = dataclasses.field(default_factory=list)
-    warm_corr: list = dataclasses.field(default_factory=list)
-    n_pred: int = 0
-    last_interval: int = 0
 
 
 def run_ours_many(
@@ -351,120 +333,81 @@ def run_ours_many(
 ) -> list[LearnedRunResult]:
     """Run the full learned system over MANY traces in lockstep.
 
-    The per-group serial pipeline of :func:`run_ours` (classify -> predict
-    -> prefetch -> simulate -> fine-tune) is kept, but each stage is batched
-    across benchmarks: predictions and fine-tuning go through the vmapped
-    ``Trainer.evaluate_many`` / ``train_group_many`` (lanes bucketed by
-    shape share one dispatch), and simulator segments run through
+    The per-group streaming protocol of :func:`run_ours` (observe ->
+    prefetch -> simulate -> feedback) is kept, but the managers' staged
+    halves are driven so each stage batches across benchmarks: predictions
+    and fine-tuning go through the vmapped ``Trainer.evaluate_many`` /
+    ``train_group_many`` (lanes bucketed by shape share one dispatch), and
+    simulator segments run through
     :func:`repro.uvm.simulator.run_segments_many` (per-lane event streams,
     one vmapped scan per shape bucket).  Lanes never interact — each trace
-    keeps its own model table, vocabulary, frequency table and simulator
-    state.  The simulator stages are exactly per-lane-equivalent; the
-    vmapped predictor reproduced serial floats bit-for-bit on CPU
-    (tests/test_system.py pins counters AND top1 against serial runs), but
-    a backend whose batched kernels round differently could shift a
-    prediction across a prefetch-gate threshold and with it the learned
-    run's counters — if paper-table stability across device counts matters
-    more than throughput, force the serial engine with
-    ``REPRO_OURS_BATCHED=0``.
+    keeps its own manager and simulator state.  The simulator stages are
+    exactly per-lane-equivalent; the vmapped predictor reproduced serial
+    floats bit-for-bit on CPU (tests/test_system.py pins counters AND top1
+    against serial runs), but a backend whose batched kernels round
+    differently could shift a prediction across a prefetch-gate threshold
+    and with it the learned run's counters — if paper-table stability
+    across device counts matters more than throughput, force the serial
+    engine with ``REPRO_OURS_BATCHED=0``.
     """
     pcfg = pcfg or PredictorConfig()
     tcfg = tcfg or TrainConfig()
-    trainer = Trainer(pcfg, tcfg, kind)
+    trainer = Trainer(pcfg, tcfg, kind)  # the shared batched dispatches
     lanes: list[_Lane] = []
     for li, trace in enumerate(traces):
-        table = tables[li] if tables is not None else ModelTable(lambda s: trainer.new_params(s), n_slots=tcfg.table_slots)
-        vocab = DeltaVocab(pcfg.delta_vocab)
-        nb = S.bucket_blocks(trace.n_blocks)
+        mgr = manager_for(
+            trace, pcfg, tcfg, oversubscription=oversubscription, kind=kind,
+            table=tables[li] if tables is not None else None,
+            use_thrash_term=use_thrash_term, use_lucir=use_lucir,
+        )
         lanes.append(_Lane(
-            trace=trace, table=table, vocab=vocab,
-            stream=FeatureStream(trace, vocab, pcfg.history, page_vocab=pcfg.page_vocab, pc_vocab=pcfg.pc_vocab, tb_vocab=pcfg.tb_vocab),
-            classifier=PatternClassifier(), freq_table=PredictionFrequencyTable(),
-            nb=nb, cap=S.capacity_for(trace.n_blocks, oversubscription),
-            state=S.init_state(nb, seed), blocks=trace.block.astype(np.int32),
-            nxt=S.next_use_for(trace),
+            trace=trace, mgr=mgr, state=S.init_state(mgr.cfg.n_blocks, seed),
+            blocks=trace.block.astype(np.int32), nxt=S.next_use_for(trace),
         ))
     G = tcfg.group_size
     max_n = max((len(l.trace) for l in lanes), default=0)
     for g0 in range(0, max_n, G):
         act = [l for l in lanes if g0 < len(l.trace)]
-        work = []  # (lane, g1, fs, pat, entry, n_active)
-        for l in act:
-            g1 = min(g0 + G, len(l.trace))
-            fs = l.stream.windows(g0, g1)
-            pat = l.classifier.classify(l.blocks[g0:g1], l.trace.kernel[g0:g1])
-            entry = l.table.get(pat)
-            work.append((l, g1, fs, pat, entry, max(l.vocab.n_classes, 2)))
+        # 1. observe every lane's group; the predictor dispatches batch
+        #    through one vmapped evaluate per shape bucket
+        reqs = [
+            (l, l.mgr.observe_begin(_group_batch(l.trace, g0, min(g0 + G, len(l.trace)))))
+            for l in act
+        ]
+        evals = [(l, r) for l, r in reqs if r is not None]
+        results = iter(trainer.evaluate_many(
+            [r.params for _, r in evals], [r.fs for _, r in evals], [r.n_active for _, r in evals],
+        ))
+        for l, r in reqs:
+            corr, pred_cls = next(results) if r is not None else (None, None)
+            actions = l.mgr.observe_finish(corr, pred_cls)
+            # 2. stage counters + prefetches into the lane's simulator state
+            l.state = _apply_actions(l.state, actions, l.mgr.cfg.n_blocks, l.mgr.cfg.capacity)
 
-        # 2. strictly-causal predictions for every lane's group, one
-        #    vmapped dispatch per shape bucket
-        evals = [w for w in work if len(w[2])]
-        results = trainer.evaluate_many(
-            [w[4].params for w in evals], [w[2] for w in evals], [w[5] for w in evals],
-        )
-        for (l, g1, fs, pat, entry, n_active), (corr, pred_cls) in zip(evals, results):
-            warm = _prefetch_warm(entry, pat)  # uses the PREVIOUS group's acc
-            l.per_group.append(float(corr.mean()))
-            l.all_corr.append(corr)
-            if entry.n_updates > 0:
-                l.warm_corr.append(corr)
-            l.n_pred += len(fs)
-            entry.last_acc = float(corr.mean())  # informs the NEXT group's gate
-            # 3. predicted pages -> frequency table + staged prefetches
-            l.dtable.update(l.vocab.decode_table())
-            pred_delta = np.array([l.dtable.get(int(c), 0) for c in pred_cls], np.int64)
-            prev_page = l.trace.page[fs.t_index - 1].astype(np.int64)
-            pred_pages = np.clip(prev_page + pred_delta, 0, l.trace.n_pages - 1)
-            if warm:
-                l.freq_table.update(np.asarray(pred_pages, np.int64) // PAGES_PER_BLOCK)
-                dense = l.freq_table.dense(l.nb)
-                l.state = l.state._replace(freq=jnp.asarray(dense))
-                mask = _prefetch_mask(dense, pred_pages, entry.last_acc, l.nb, l.cap)
-                l.state = S.apply_prefetch(l.state, jnp.asarray(mask), capacity=l.cap, policy="learned")
-
-        # 4. simulator segments under the learned policy, vmapped across
+        # 3. simulator segments under the learned policy, vmapped across
         #    lanes (each lane has its own compressed event stream)
-        cell = lambda l: (S.POLICY_IDS["learned"], S.PREFETCH_IDS["demand"], l.cap)
         seg = S.run_segments_many(
-            [l.state for l, *_ in work],
-            [(l.blocks[g0:g1], l.nxt[g0:g1]) for l, g1, *_ in work],
-            [cell(l) for l, *_ in work],
-            [l.trace.n_blocks for l, *_ in work],
+            [l.state for l in act],
+            [(l.blocks[g0:min(g0 + G, len(l.trace))], l.nxt[g0:min(g0 + G, len(l.trace))]) for l in act],
+            [(S.POLICY_IDS["learned"], S.PREFETCH_IDS["demand"], l.mgr.cfg.capacity) for l in act],
+            [l.trace.n_blocks for l in act],
         )
-        train_entries, train_fs, train_na, train_et = [], [], [], []
-        train_work = []
-        for (l, g1, fs, pat, entry, n_active), (state, outs) in zip(work, seg):
+        # 4. feedback; the fine-tune dispatches batch through one vmapped
+        #    train per bucket, then every manager publishes its entry
+        treqs = []
+        for l, (state, outs) in zip(act, seg):
             l.state = state
-            interval_now = int(state.fault_count) // S.INTERVAL
-            if interval_now > l.last_interval:
-                l.freq_table.on_intervals(interval_now - l.last_interval)
-                l.last_interval = interval_now
-            if len(fs):
-                if use_lucir:
-                    l.table.snapshot_prev(pat)
-                    entry = l.table.get(pat)
-                was_evicted = np.asarray(outs["was_evicted"])
-                train_entries.append(entry)
-                train_fs.append(fs)
-                train_na.append(n_active)
-                train_et.append(was_evicted[fs.t_index - g0] if use_thrash_term else None)
-                train_work.append((l, pat, entry))
+            r = l.mgr.feedback_begin(Outcomes(
+                was_evicted=np.asarray(outs["was_evicted"]),
+                fault_count=int(state.fault_count),
+            ))
+            if r is not None:
+                treqs.append((l, r))
+        trainer.train_group_many(
+            [r.entry for _, r in treqs], [r.fs for _, r in treqs], [r.n_active for _, r in treqs],
+            in_et_list=[r.in_et for _, r in treqs], use_lucir=use_lucir,
+        )
+        for l, r in treqs:
+            l.mgr.feedback_finish(r.entry)
 
-        # 5. fine-tune every lane's model, one vmapped dispatch per bucket
-        trainer.train_group_many(train_entries, train_fs, train_na, in_et_list=train_et, use_lucir=use_lucir)
-        for l, pat, entry in train_work:
-            l.table.put(pat, entry)
-
-    out = []
-    for l in lanes:
-        stats = {
-            "pages_thrashed": int(l.state.thrash_events) * PAGES_PER_BLOCK,
-            "faults": int(l.state.faults),
-            "migrated_blocks": int(l.state.migrations),
-            "zero_copy": int(l.state.zero_copy),
-            "occupancy": int(l.state.occupancy),
-        }
-        top1 = float(np.concatenate(l.all_corr).mean()) if l.all_corr else 0.0
-        warm = float(np.concatenate(l.warm_corr).mean()) if l.warm_corr else top1
-        out.append(LearnedRunResult(stats, top1, l.n_pred, l.vocab.n_classes, l.table.n_models, l.per_group, warm))
-    return out
+    return [_result(l.mgr, l.state, len(l.trace)) for l in lanes]

@@ -1,0 +1,52 @@
+"""Regenerate tests/golden/ours_golden.json — the learned-runtime pins.
+
+One cell per benchmark: `runtime.run_ours` at scale 0.3 / cap 3000 with the
+SMOKE predictor and the test-suite TrainConfig, recording the simulator
+counters AND the accuracy outputs (top1 / warm_top1 / n_predictions /
+n_classes / n_models, floats at full repr precision).  The committed file
+is the contract the streaming `OversubscriptionManager` refactor is pinned
+against: rebuilding `run_ours` on the manager must NOT move a single
+counter or accuracy bit on any benchmark.
+
+    PYTHONPATH=src python tests/golden/generate_ours_golden.py
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs.predictor_paper import SMOKE
+from repro.core.incremental import TrainConfig
+from repro.uvm import runtime as R
+from repro.uvm import trace as T
+
+OUT = Path(__file__).with_name("ours_golden.json")
+
+SCALE, CAP = 0.3, 3000
+TCFG = TrainConfig(group_size=1024, epochs=2, batch_size=128)
+
+
+def cell(name: str) -> dict:
+    tr = T.get_trace(name, scale=SCALE)
+    tr = tr.slice(0, min(len(tr), CAP))
+    res = R.run_ours(tr, SMOKE, TCFG)
+    return {
+        "stats": res.stats,
+        "top1": res.top1,
+        "warm_top1": res.warm_top1,
+        "n_predictions": res.n_predictions,
+        "n_classes": res.n_classes,
+        "n_models": res.n_models,
+        "per_group_acc": res.per_group_acc,
+    }
+
+
+def main() -> int:
+    golden = {name: cell(name) for name in T.BENCHMARKS}
+    OUT.write_text(json.dumps(golden, indent=1, sort_keys=True) + "\n")
+    print(f"wrote {OUT} ({len(golden)} cells)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

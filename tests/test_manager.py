@@ -1,0 +1,422 @@
+"""The streaming OversubscriptionManager API (ISSUE 4 tentpole).
+
+The heavier guarantees pinned here:
+
+* the manager-rebuilt ``runtime.run_ours`` reproduces the pre-refactor
+  monolith bit for bit — counters AND accuracy — on ALL 11 benchmarks
+  (tests/golden/ours_golden.json, regenerate via
+  tests/golden/generate_ours_golden.py);
+* the vectorized ``PredictionFrequencyTable`` is exactly the per-block
+  loop (way-conflict evictions, insertion order, saturation, flushes);
+* ONE manager instance drives both the trace simulator and the serving
+  KV-offload path;
+* classifiers / frequency-table engines are registry plugins like PR 3's
+  policies.
+"""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.configs.predictor_paper import SMOKE
+from repro.core.incremental import TrainConfig
+from repro.core.policy import LoopPredictionFrequencyTable, PredictionFrequencyTable
+from repro.uvm import registry as REG
+from repro.uvm import runtime as R
+from repro.uvm import simulator as S
+from repro.uvm import trace as T
+from repro.uvm.manager import (
+    FaultBatch,
+    ManagerConfig,
+    OnlineFeatureStream,
+    Outcomes,
+    OversubscriptionManager,
+)
+
+GOLDEN = json.loads((Path(__file__).parent / "golden" / "ours_golden.json").read_text())
+SCALE, CAP = 0.3, 3000  # must match tests/golden/generate_ours_golden.py
+TCFG = TrainConfig(group_size=1024, epochs=2, batch_size=128)
+
+
+def _bench_trace(name: str) -> T.Trace:
+    tr = T.get_trace(name, scale=SCALE)
+    return tr.slice(0, min(len(tr), CAP))
+
+
+def _toy_manager(**kw) -> OversubscriptionManager:
+    cfg = ManagerConfig(
+        predictor=SMOKE, train=TrainConfig(group_size=64, epochs=1, batch_size=32),
+        n_pages=1024, n_blocks=64, capacity=16, **kw,
+    )
+    return OversubscriptionManager(cfg)
+
+
+# --- vectorized frequency table vs the frozen loop ---------------------------
+
+
+def test_freq_table_vectorized_equals_loop_conflict_heavy():
+    """Tiny geometry (4 sets x 2 ways) forces way-conflict evictions and
+    same-set insertion ordering on every batch; interleaved flushes."""
+    rng = np.random.default_rng(7)
+    vec, loop = PredictionFrequencyTable(4, 2), LoopPredictionFrequencyTable(4, 2)
+    for step in range(40):
+        blocks = rng.integers(0, 24, size=rng.integers(0, 60))
+        vec.update(blocks)
+        loop.update(blocks)
+        if step % 5 == 4:
+            vec.on_intervals(2)
+            loop.on_intervals(2)
+        assert np.array_equal(vec.tags, loop.tags), step
+        assert np.array_equal(vec.counters, loop.counters), step
+    probe = rng.integers(0, 30, 64)
+    assert np.array_equal(vec.lookup_many(probe), np.array([loop.lookup(int(b)) for b in probe]))
+    assert np.array_equal(vec.dense(64), loop.dense(64))
+    assert vec.flushes == loop.flushes > 0
+
+
+def test_freq_table_saturation_and_paper_geometry():
+    """6-bit saturation at the paper's 1024x16 geometry: one hot block
+    pushed past COUNTER_MAX, batched vs loop."""
+    from repro.core.policy import COUNTER_MAX
+
+    vec, loop = PredictionFrequencyTable(), LoopPredictionFrequencyTable()
+    hot = np.full(200, 5, np.int64)  # 200 touches of one block in one batch
+    vec.update(hot)
+    loop.update(hot)
+    assert vec.lookup(5) == loop.lookup(5) == COUNTER_MAX
+    assert np.array_equal(vec.tags, loop.tags) and np.array_equal(vec.counters, loop.counters)
+
+
+# --- manager vs the committed run_ours goldens -------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(T.BENCHMARKS))
+def test_run_ours_bit_identical_to_golden(name):
+    """The manager-rebuilt driver must not move a single counter or
+    accuracy bit vs the pre-refactor monolith, on any benchmark."""
+    res = R.run_ours(_bench_trace(name), SMOKE, TCFG)
+    g = GOLDEN[name]
+    assert res.stats == g["stats"]
+    assert res.top1 == g["top1"]
+    assert res.warm_top1 == g["warm_top1"]
+    assert res.per_group_acc == g["per_group_acc"]
+    assert res.n_predictions == g["n_predictions"]
+    assert res.n_classes == g["n_classes"]
+    assert res.n_models == g["n_models"]
+
+
+def test_online_stream_matches_feature_stream():
+    """Appending a trace batch-by-batch yields byte-identical window
+    samples to the whole-trace FeatureStream."""
+    import dataclasses
+
+    from repro.core.features import DeltaVocab, FeatureStream
+
+    tr = _bench_trace("ATAX")
+    ref_vocab, on_vocab = DeltaVocab(SMOKE.delta_vocab), DeltaVocab(SMOKE.delta_vocab)
+    ref = FeatureStream(tr, ref_vocab, SMOKE.history, page_vocab=SMOKE.page_vocab,
+                        pc_vocab=SMOKE.pc_vocab, tb_vocab=SMOKE.tb_vocab)
+    on = OnlineFeatureStream(on_vocab, SMOKE.history, page_vocab=SMOKE.page_vocab,
+                             pc_vocab=SMOKE.pc_vocab, tb_vocab=SMOKE.tb_vocab)
+    for g0 in range(0, len(tr), 700):  # batch size coprime to the group size
+        g1 = min(g0 + 700, len(tr))
+        span = on.append(tr.page[g0:g1], tr.pc[g0:g1], tr.tb[g0:g1])
+        assert span == (g0, g1)
+        a, b = ref.windows(g0, g1), on.windows(g0, g1)
+        for f in dataclasses.fields(a):
+            va, vb = getattr(a, f.name), getattr(b, f.name)
+            assert va.dtype == vb.dtype and np.array_equal(va, vb), f.name
+        assert np.array_equal(on.page_at(b.t_index - 1), tr.page[b.t_index - 1])
+        # retention is bounded: only history + current batch stay resident
+        assert len(on._page) <= SMOKE.history + (g1 - g0)
+    assert ref_vocab.table == on_vocab.table
+    assert len(on) == len(tr)
+    with pytest.raises(IndexError):
+        on.windows(0, 700)  # the first batch's span slid out of retention
+
+
+def test_interval_constant_matches_simulator():
+    """INTERVAL_FAULTS is a deliberate literal (the manager stays importable
+    without the simulator) — this pin is what keeps the two cadences from
+    silently drifting apart."""
+    from repro.uvm.manager import INTERVAL_FAULTS
+
+    assert INTERVAL_FAULTS == S.INTERVAL
+
+
+def test_fault_clock_rebases_on_consumer_switch():
+    """A warm manager handed to a consumer whose fault clock restarts at 0
+    must keep its flush/chain intervals advancing (not stall forever)."""
+    mgr = _toy_manager()
+    mgr.observe(FaultBatch(np.arange(32)))
+    mgr.feedback(Outcomes(fault_count=10 * 64))  # consumer 1: 10 intervals
+    assert mgr._flush_interval == 10
+    mgr.observe(FaultBatch(np.arange(32)))
+    mgr.feedback(Outcomes(fault_count=3 * 64))  # consumer 2 restarted at 0
+    assert mgr._flush_interval == 13  # 10 (re-based) + 3, not stalled at 10
+
+
+def test_manager_misuse_raises():
+    mgr = _toy_manager()
+    with pytest.raises(RuntimeError):
+        mgr.feedback(Outcomes())
+    mgr.observe(FaultBatch(np.arange(32)))
+    with pytest.raises(RuntimeError):
+        mgr.observe(FaultBatch(np.arange(32)))
+    with pytest.raises(ValueError):
+        mgr.feedback(Outcomes(was_evicted=np.zeros(3, bool), fault_count=0))  # misaligned
+    mgr.feedback(Outcomes(was_evicted=np.zeros(32, bool), fault_count=0))
+    assert mgr.n_predictions > 0
+
+
+def test_actions_surface_and_flush_cadence():
+    """A predictable stream warms the gate (prefetches flow), the advisory
+    pre-evict ranking stays within the observed blocks, and reported fault
+    counts drive the 3-interval flush."""
+    mgr = _toy_manager()
+    ppb = mgr.cfg.pages_per_block
+    warmed = False
+    for step in range(8):
+        pages = (np.arange(64) + step * 16) % 1024
+        a = mgr.observe(FaultBatch(pages))
+        assert a.n_samples > 0
+        if a.counters is not None:
+            warmed = True
+            assert a.counters.shape == (mgr.cfg.n_blocks,)
+            assert all(b < mgr.cfg.n_blocks for b in a.prefetch_blocks)
+        assert set(np.asarray(a.pre_evict_blocks).tolist()) <= set(range(mgr.cfg.n_blocks))
+        mgr.feedback(Outcomes(was_evicted=np.zeros(64, bool), fault_count=64 * (step + 1)))
+    assert warmed
+    assert mgr.freq_table.flushes >= 1  # 8 intervals reported -> >=2 flushes at cadence 3
+    assert mgr.top1 > 0
+
+
+# --- one manager instance, two consumers -------------------------------------
+
+
+def test_same_manager_instance_drives_simulator_and_serving():
+    """The acceptance pin: ONE OversubscriptionManager drives a trace
+    through the simulator, then — same instance, learned state intact —
+    decides KV-page residency for the serving offload path."""
+    from repro.serving.offload import LearnedOffloadManager
+
+    tr = _bench_trace("Hotspot")
+    mgr = R.manager_for(tr, SMOKE, TCFG)
+
+    # phase 1: the trace simulator driver
+    res = R.run_ours(tr, SMOKE, TCFG, manager=mgr)
+    assert res.stats == GOLDEN["Hotspot"]["stats"]  # externally-built == internal
+    n_updates_after_sim = sum(e.n_updates for e in mgr.table.slots.values())
+    assert n_updates_after_sim > 0
+
+    # phase 2: the serving KV-offload adapter, SAME manager instance
+    kv_pages = mgr.cfg.n_pages // mgr.cfg.pages_per_block
+    off = LearnedOffloadManager(kv_pages, max(kv_pages // 4, 1), manager=mgr, group=32)
+    rng = np.random.default_rng(0)
+    for step in range(120):
+        mass = np.zeros(kv_pages)
+        touched = np.unique(rng.integers(0, kv_pages, 8))
+        mass[touched] = 1.0
+        off.on_attention(mass, touched)
+    st = off.stats
+    assert st.hbm_hits + st.hbm_misses > 0
+    assert off.last_actions is not None  # the manager actually produced actions
+    # the predictor kept fine-tuning on the serving stream
+    assert sum(e.n_updates for e in mgr.table.slots.values()) > n_updates_after_sim
+
+
+def test_offload_adapter_block_unit_is_kv_page():
+    """With a block-granular shared manager (pages_per_block=16), the
+    adapter's scaled observations must keep the manager's block unit ==
+    the KV page id: emitted prefetches and frequency counters come back in
+    KV-page units (the regression was reading dense[p // 16])."""
+    from repro.serving.offload import LearnedOffloadManager
+
+    kv_pages = 64
+    cfg = ManagerConfig(
+        predictor=SMOKE, train=TrainConfig(group_size=32, epochs=1, batch_size=16),
+        n_pages=kv_pages * 16, n_blocks=kv_pages, capacity=16, pages_per_block=16,
+    )
+    mgr = OversubscriptionManager(cfg)
+    off = LearnedOffloadManager(kv_pages, 16, manager=mgr, group=32)
+    prefetched = []
+    for step in range(200):
+        touched = (np.arange(4) + step * 2) % kv_pages  # predictable stream
+        mass = np.zeros(kv_pages)
+        mass[touched] = 1.0
+        off.on_attention(mass, touched)
+        if off.last_actions is not None:
+            prefetched += np.asarray(off.last_actions.prefetch_blocks).tolist()
+    assert prefetched and max(prefetched) < kv_pages  # actions are kv pages
+    tags = mgr.freq_table.tags[mgr.freq_table.tags >= 0]
+    assert tags.size == 0 or tags.max() < kv_pages  # counters keyed by kv page
+    assert np.array_equal(off._freq_dense(), mgr.freq_table.dense(kv_pages))
+    with pytest.raises(ValueError):  # a manager too small for the pool is rejected
+        LearnedOffloadManager(kv_pages * 2, 16, manager=OversubscriptionManager(cfg))
+
+
+def test_learned_offload_manager_decision_stream():
+    """Decision-stream smoke: the manager-backed offload manager surfaces
+    the same stats dict the LRU/attention managers do, with sane values."""
+    import dataclasses
+
+    from repro.serving.offload import LearnedOffloadManager
+
+    rng = np.random.default_rng(1)
+    n_pages, cap = 48, 12
+    mgr = LearnedOffloadManager(n_pages, cap, group=32)
+    hot = np.arange(6)
+    for _ in range(200):
+        mass = np.zeros(n_pages)
+        mass[hot] = 1.0
+        cold = rng.integers(6, n_pages, 3)
+        mass[cold] = 0.2
+        mgr.on_attention(mass, np.concatenate([hot, cold]))
+    st = dataclasses.asdict(mgr.stats)
+    assert set(st) == {"hbm_hits", "hbm_misses", "prefetches", "evictions", "thrash"}
+    assert st["hbm_hits"] + st["hbm_misses"] == 200 * 9
+    assert mgr.stats.hit_rate > 0.4
+    assert mgr.manager.n_predictions > 0 and mgr.manager.n_models >= 1
+
+
+def test_session_manager_is_the_ours_stack(tmp_path):
+    """Session.manager() hands out the same configured object an `ours`
+    cell drives: replaying the workload through it reproduces the golden."""
+    from repro.uvm.api import ModelSpec, RunStore, Session, TrainSpec
+
+    s = Session(scale=SCALE, cap=CAP, model=ModelSpec(predictor=SMOKE, train=TrainSpec(
+        group_size=TCFG.group_size, epochs=TCFG.epochs, batch_size=TCFG.batch_size,
+    )), store=RunStore(tmp_path / "runs"))
+    mgr = s.manager("ATAX")
+    assert isinstance(mgr, OversubscriptionManager)
+    # tcfg deliberately omitted: the driver must batch by the MANAGER's
+    # configured group size, not this call's TrainConfig() default
+    res = R.run_ours(s.trace("ATAX"), manager=mgr)
+    assert res.stats == GOLDEN["ATAX"]["stats"]
+    assert res.top1 == GOLDEN["ATAX"]["top1"]
+
+
+# --- component registries ----------------------------------------------------
+
+
+def test_classifier_and_freq_table_are_plugins():
+    """An alternative classifier/engine is a ~20-line registration, like
+    PR 3's policies; builtin names stay claimed."""
+    assert "dfa" in REG.classifier_names() and "setassoc" in REG.freq_table_names()
+    with pytest.raises(ValueError):
+        REG.register_classifier("dfa", lambda: None)
+    with pytest.raises(ValueError):
+        REG.register_freq_table("setassoc", lambda: None)
+
+    class _ConstantClassifier:
+        def classify(self, blocks, kernels):
+            return 0
+
+        def reset(self):
+            pass
+
+    class _DictFreqTable:
+        """Unbounded exact counting — no set-associative conflicts."""
+
+        def __init__(self):
+            self.counts = {}
+            self.flushes = 0
+
+        def update(self, blocks):
+            for b in np.asarray(blocks, np.int64):
+                self.counts[int(b)] = self.counts.get(int(b), 0) + 1
+
+        def lookup_many(self, blocks):
+            return np.array([self.counts.get(int(b), -1) for b in blocks], np.int64)
+
+        def dense(self, n_blocks):
+            out = np.full(n_blocks, -1, np.int32)
+            for b, c in self.counts.items():
+                if b < n_blocks:
+                    out[b] = c
+            return out
+
+        def on_intervals(self, n):
+            self.counts.clear()
+            self.flushes += 1
+
+    with REG.scoped():
+        REG.register_classifier("constant", _ConstantClassifier)
+        REG.register_freq_table("dict", _DictFreqTable)
+        mgr = _toy_manager(classifier="constant", freq_table="dict")
+        assert isinstance(mgr.freq_table, _DictFreqTable)
+        for step in range(6):
+            a = mgr.observe(FaultBatch((np.arange(64) + step * 8) % 1024))
+            assert a.pattern == 0  # the constant classifier decided
+            mgr.feedback(Outcomes(fault_count=0))
+        assert mgr.n_predictions > 0
+    assert "constant" not in REG.classifier_names()  # scoped() restored
+    assert "dict" not in REG.freq_table_names()
+
+
+def test_unknown_component_raises():
+    with pytest.raises(KeyError):
+        _toy_manager(classifier="nope")
+    with pytest.raises(KeyError):
+        _toy_manager(freq_table="nope")
+
+
+# --- the serve sidecar -------------------------------------------------------
+
+
+def test_cli_serve_jsonl_roundtrip(tmp_path, capsys):
+    from repro.uvm import cli
+
+    stream = tmp_path / "faults.jsonl"
+    lines = []
+    for b in range(4):
+        pages = [(i + b * 5) % 300 for i in range(40)]
+        lines.append(json.dumps({"pages": pages}))
+        if b % 2 == 0:  # odd batches auto-close (no feedback line)
+            lines.append(json.dumps({"feedback": {"was_evicted": [False] * 40, "fault_count": 64 * (b + 1)}}))
+    stream.write_text("\n".join(lines) + "\n")
+    assert cli.main(["serve", "--input", str(stream), "--n-pages", "300",
+                     "--pages-per-block", "4", "--capacity", "16", "--group-size", "32"]) == 0
+    out = capsys.readouterr().out.strip().splitlines()
+    actions = [json.loads(l) for l in out if l.startswith("{")]
+    assert len(actions) == 4
+    for a in actions:
+        assert {"batch", "pattern", "n_samples", "accuracy", "warm",
+                "prefetch_blocks", "pre_evict_blocks"} <= set(a)
+        assert all(isinstance(b, int) and 0 <= b < 75 for b in a["prefetch_blocks"])
+    assert out[-1].startswith("# serve batches=4")
+
+
+# --- hypothesis net ----------------------------------------------------------
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        batches=st.lists(
+            st.lists(st.integers(0, 47), min_size=0, max_size=80), min_size=1, max_size=6
+        ),
+        n_sets=st.sampled_from([2, 4, 8]),
+        ways=st.sampled_from([1, 2, 3]),
+        flush_every=st.integers(1, 3),
+    )
+    def test_freq_table_equality_hypothesis(batches, n_sets, ways, flush_every):
+        """Vectorized vs loop on arbitrary block streams: small geometries
+        maximise way conflicts; interval flushes interleave with updates."""
+        vec, loop = PredictionFrequencyTable(n_sets, ways), LoopPredictionFrequencyTable(n_sets, ways)
+        for i, blocks in enumerate(batches):
+            vec.update(np.asarray(blocks, np.int64))
+            loop.update(np.asarray(blocks, np.int64))
+            if (i + 1) % flush_every == 0:
+                vec.on_intervals(1)
+                loop.on_intervals(1)
+            assert np.array_equal(vec.tags, loop.tags)
+            assert np.array_equal(vec.counters, loop.counters)
+        assert np.array_equal(vec.dense(48), loop.dense(48))
+
+except ImportError:  # pragma: no cover - tier-1 must collect without hypothesis
+    pass

@@ -45,11 +45,19 @@ def test_engine_greedy_matches_forward():
     np.testing.assert_array_equal(res.tokens, np.stack(ref, 1))
 
 
-def test_engine_offload_stats_surface():
+import pytest
+
+
+@pytest.mark.parametrize("offload", ["learned", "manager"])
+def test_engine_offload_stats_surface(offload):
+    """Every offload kind — attention-EMA ('learned') and the streaming
+    OversubscriptionManager ('manager') — reports the same decision-stream
+    surface through the engine."""
     cfg = get_smoke_config("qwen3-0.6b")
     params = lm.init(jax.random.key(2), cfg, max_seq=96)
     prompt = jax.random.randint(jax.random.key(3), (1, 70), 0, cfg.vocab_size, jnp.int32)
-    eng = Engine(cfg, params, offload="learned", hbm_fraction=0.5)
+    eng = Engine(cfg, params, offload=offload, hbm_fraction=0.5)
     res = eng.generate({"tokens": prompt}, n_new=8, pad_to=96)
     s = res.offload_stats
     assert s is not None and s["hbm_hits"] + s["hbm_misses"] > 0
+    assert set(s) == {"hbm_hits", "hbm_misses", "prefetches", "evictions", "thrash"}
