@@ -1,6 +1,7 @@
 """Paper tables: I (strategies w/o prefetch vs upper bound), II (HPE x
 prefetcher interplay), IV (predictor footprint), VI (full strategy matrix),
-VII (concurrent multi-workload accuracy)."""
+VII (concurrent multi-workload accuracy), VIII (Section V-F concurrent
+top-1 through the full runtime: TenantMux vs merged-single-manager)."""
 from __future__ import annotations
 
 import time
@@ -143,4 +144,44 @@ def table7(ctx: Session):
             "ours_top1": round(ours.top1, 3), "derived": f"delta={ours.top1 - online.top1:+.3f}",
         })
     emit("table7_multiworkload", rows, t0)
+    return rows
+
+
+def table8(ctx: Session):
+    """Section V-F concurrent top-1 through the FULL runtime (simulator in
+    the loop): the multi-tenant `TenantMux` (one classifier->predictor
+    pipeline per tenant, isolated frequency tables) against the
+    merged-single-manager baseline that treats the interleaved stream as
+    one workload.  The paper reports per-workload specialization is worth
+    +10.2% top-1 on average (up to +30.2%); both columns run the Section
+    V-A pretrain-then-finetune protocol over the same tenant-tagged
+    merge."""
+    t0 = time.time()
+    pairs = [("StreamTriad", "2DCONV"), ("Hotspot", "Srad-v2"), ("NW", "2DCONV"), ("ATAX", "Srad-v2")]
+    rows, deltas = [], []
+    for a, b in pairs:
+        # group-aligned scheduler slices, like table7: each observed batch
+        # is ONE tenant's coherent stream, which is what the DFA classifies
+        w = ctx.concurrent((a, b), slice_len=ctx.tcfg.group_size)
+        mux = ctx.ours(w)  # ModelSpec.tenancy defaults to 'mux'
+        merged = ctx.ours(w, tenancy="merged")
+        per = {k: round(v, 3) for k, v in sorted((mux.per_tenant_top1 or {}).items())}
+        rows.append({
+            "workloads": f"{a}+{b}",
+            "merged_top1": round(merged.top1, 3),
+            "mux_top1": round(mux.top1, 3),
+            "tenant0_top1": per.get("0", ""),
+            "tenant1_top1": per.get("1", ""),
+            "derived": f"delta={mux.top1 - merged.top1:+.3f}",
+        })
+        deltas.append(mux.top1 - merged.top1)
+    avg = float(np.mean(deltas)) if deltas else 0.0
+    rows.insert(0, {
+        "workloads": "AVG_MUX_GAIN", "merged_top1": "", "mux_top1": "",
+        "tenant0_top1": "", "tenant1_top1": "", "derived": f"delta={avg:+.3f}",
+    })
+    emit("table8_concurrent_mux", rows, t0)
+    # the acceptance pin: per-tenant specialization must not lose to the
+    # merged baseline on the Section V-F suite
+    assert avg >= 0, rows
     return rows

@@ -28,6 +28,11 @@ DOCS = [ROOT / "docs" / "REPRODUCING.md", ROOT / "docs" / "API.md", ROOT / "READ
 #: modules whose first positional doc token is a subcommand with its own help
 SUBCOMMAND_MODULES = {"repro.uvm.cli"}
 
+#: JSONL/protocol fields that must stay documented on BOTH sides: in the
+#: subcommand's own --help AND in at least one scanned doc (a field the
+#: code grows without docs — or docs promise without code — is drift)
+REQUIRED_FIELD_MENTIONS = {("repro.uvm.cli", "serve"): ("tenant",)}
+
 # python -m <module> [args ...] — up to a backtick, pipe or line end
 CMD_RE = re.compile(r"python (?:-m (?P<mod>[\w\.]+)|(?P<script>[\w\./]+\.py))(?P<args>[^`|\n]*)")
 PATH_RE = re.compile(r"\b(?:src|tests|docs|examples|experiments|benchmarks|scripts)/[\w\./-]+")
@@ -100,6 +105,25 @@ def main() -> int:
             for target in (only.group(1).split() if only else []):
                 if target not in SUITES:
                     failures.append(f"{doc_name}: `--only {target}` is not a benchmarks.run suite")
+
+    # protocol-field direction: the serve sidecar's JSONL "tenant" field
+    # (and any future required field) must appear in the subcommand's own
+    # --help AND in the scanned docs
+    all_docs_text = "".join(d.read_text() for d in DOCS)
+    for (mod, sub), fields in REQUIRED_FIELD_MENTIONS.items():
+        key = (mod, sub)
+        if key not in helps:
+            try:
+                helps[key] = run_help(mod, sub)
+            except AssertionError as e:
+                failures.append(str(e))
+                helps[key] = ""
+        for field in fields:
+            if field not in helps[key]:
+                failures.append(f"`{field}` field undocumented in `python -m {mod} {sub} --help`")
+            if f'"{field}"' not in all_docs_text:
+                failures.append(f'the `"{field}"` {sub} line field is documented in none of '
+                                f"{[d.name for d in DOCS]}")
 
     # coverage direction: a subcommand added to the CLI without a documented
     # invocation is drift too (serve/run/sweep/report must all appear)

@@ -149,10 +149,13 @@ class LRUOffloadManager(KVOffloadManager):
         self.stats.evictions += 1
 
 
-def _default_serving_manager(n_pages: int, capacity: int):
+def _default_serving_manager(n_pages: int, capacity: int, *,
+                             reclass_interval: int = 0, reclass_hysteresis: int = 2):
     """A manager sized for KV pages: page == management unit
     (``pages_per_block=1``), a small predictor, single-epoch fine-tuning
-    (decode-step batches are tiny)."""
+    (decode-step batches are tiny).  ``reclass_interval`` opts the ENDLESS
+    decode stream into periodic re-classification (hysteresis-guarded)
+    instead of classifying every tiny batch; 0 keeps the legacy cadence."""
     from repro.configs.predictor_paper import SMOKE
     from repro.core.incremental import TrainConfig
     from repro.uvm.manager import ManagerConfig, OversubscriptionManager
@@ -162,6 +165,7 @@ def _default_serving_manager(n_pages: int, capacity: int):
         train=TrainConfig(group_size=64, epochs=1, batch_size=32),
         n_pages=n_pages, n_blocks=n_pages, capacity=capacity,
         pages_per_block=1,
+        reclass_interval=reclass_interval, reclass_hysteresis=reclass_hysteresis,
     )
     return OversubscriptionManager(cfg)
 
@@ -189,9 +193,11 @@ class LearnedOffloadManager(KVOffloadManager):
     """
 
     def __init__(self, n_pages: int, hbm_capacity: int, *, manager=None, group: int = 64,
-                 prefetch_per_step: int = 4):
+                 prefetch_per_step: int = 4, reclass_interval: int = 0, reclass_hysteresis: int = 2):
         super().__init__(n_pages, hbm_capacity, prefetch_per_step=prefetch_per_step)
-        self.manager = manager if manager is not None else _default_serving_manager(n_pages, hbm_capacity)
+        self.manager = manager if manager is not None else _default_serving_manager(
+            n_pages, hbm_capacity,
+            reclass_interval=reclass_interval, reclass_hysteresis=reclass_hysteresis)
         if self.manager.cfg.n_blocks < n_pages:
             raise ValueError(
                 f"manager.cfg.n_blocks ({self.manager.cfg.n_blocks}) must cover the "

@@ -321,6 +321,13 @@ class Session:
             use_thrash_term=model.use_thrash_term,
             use_lucir=model.use_lucir,
             seed=first.seed,  # cells group by (model, oversub, seed)
+            # tenancy only matters on tenant-tagged (concurrent) workloads:
+            # 'merged' forces the single-manager baseline, otherwise the
+            # drivers auto-route tagged traces through the TenantMux
+            multi_tenant=False if model.tenancy == "merged" else None,
+            shared_freq_table=model.tenancy == "mux-shared",
+            reclass_interval=model.reclass_interval,
+            reclass_hysteresis=model.reclass_hysteresis,
         )
         tcfg = model.train.to_train_config()
 
@@ -409,7 +416,8 @@ class Session:
         return row[todo.index((policy, prefetch, oversub))]
 
     def _ours_model(self, **kw) -> ModelSpec:
-        unknown = set(kw) - {"kind", "use_thrash_term", "use_lucir"}
+        unknown = set(kw) - {"kind", "use_thrash_term", "use_lucir",
+                             "tenancy", "reclass_interval", "reclass_hysteresis"}
         if unknown:
             raise TypeError(f"unknown learned-run options: {sorted(unknown)}")
         return dataclasses.replace(self.model, pretrain=self.default_pretrain, **kw)
@@ -437,17 +445,33 @@ class Session:
         it from this session's Section V-A table (a fresh clone).  Feed it
         any fault source: the simulator, the serving KV-offload adapter
         (:class:`repro.serving.offload.LearnedOffloadManager`), or the
-        ``cli serve`` JSONL stream."""
+        ``cli serve`` JSONL stream.
+
+        A tenant list (``manager(["ATAX", "BICG"])``) or a concurrent
+        :class:`WorkloadSpec` returns the multi-tenant
+        :class:`~repro.uvm.manager.TenantMux` instead (one pipeline per
+        tenant; ``tenancy='mux-shared'`` shares the frequency table,
+        ``tenancy='merged'`` falls back to one merged-stream manager)."""
+        if isinstance(w, (list, tuple)):
+            w = self.concurrent(tuple(w))
         model = self._ours_model(**kw)
         table = (
             self.pretrained(model.pretrain, pcfg=model.predictor, train=model.train, kind=model.kind)
             if pretrained else None
         )
-        return R.manager_for(
-            self.trace(w), model.predictor, model.train.to_train_config(),
+        common = dict(
             oversubscription=oversub, kind=model.kind, table=table,
             use_thrash_term=model.use_thrash_term, use_lucir=model.use_lucir,
+            reclass_interval=model.reclass_interval,
+            reclass_hysteresis=model.reclass_hysteresis,
         )
+        tr = self.trace(w)
+        if tr.tenant is not None and model.tenancy != "merged":
+            return R.mux_for(
+                tr, model.predictor, model.train.to_train_config(),
+                shared_freq_table=model.tenancy == "mux-shared", **common,
+            )
+        return R.manager_for(tr, model.predictor, model.train.to_train_config(), **common)
 
     def ours_many(self, names: list, oversub: float = 1.25, **kw) -> list[LearnedRunResult]:
         """Warm the learned-run cache for many benchmarks in one grouped

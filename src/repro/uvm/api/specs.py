@@ -20,7 +20,11 @@ from typing import Iterator
 from repro.configs.predictor_paper import CONFIG_QUICK, PredictorConfig
 from repro.core.incremental import TrainConfig
 
-SCHEMA = 1  # bump to invalidate every stored run
+SCHEMA = 2  # bump to invalidate every stored run
+# SCHEMA 2 (PR 5): concurrent `ours` cells route through the TenantMux
+# (per-tenant pipelines) instead of one merged-stream manager, and
+# ModelSpec grew tenancy/re-classification fields — results stored under
+# SCHEMA 1 no longer mean the same thing.
 
 #: corpus the paper's Section V-A pretraining draws from (5 benchmarks,
 #: different inputs) — shared default of Session.pretrained / fig11 / table7
@@ -166,12 +170,24 @@ class PretrainSpec(_SpecBase):
         )
 
 
+#: how a concurrent (tenant-tagged) workload is managed by an `ours` cell
+TENANCIES = ("mux", "mux-shared", "merged")
+
+
 @dataclasses.dataclass(frozen=True)
 class ModelSpec(_SpecBase):
     """Everything that determines a learned run besides the workload:
     predictor architecture (a registered ``kind``), its config, the
     training schedule, the Eq. 3 ablation switches, and the optional
-    Section V-A pretraining recipe."""
+    Section V-A pretraining recipe.
+
+    ``tenancy`` picks the multi-tenant treatment of concurrent workloads
+    (ignored for single-tenant ones): ``mux`` (default) demultiplexes into
+    per-tenant pipelines with isolated frequency tables, ``mux-shared``
+    shares ONE frequency table across tenants (the paper's single 18KB
+    SRAM budget), ``merged`` is the pre-mux single-manager baseline.
+    ``reclass_interval``/``reclass_hysteresis`` are the streaming periodic
+    re-classification knobs (0 = classify every observed batch)."""
 
     kind: str = "transformer"
     predictor: PredictorConfig = CONFIG_QUICK
@@ -179,6 +195,13 @@ class ModelSpec(_SpecBase):
     use_thrash_term: bool = True
     use_lucir: bool = True
     pretrain: PretrainSpec | None = None
+    tenancy: str = "mux"
+    reclass_interval: int = 0
+    reclass_hysteresis: int = 2
+
+    def __post_init__(self):
+        if self.tenancy not in TENANCIES:
+            raise ValueError(f"unknown tenancy {self.tenancy!r}; one of {TENANCIES}")
 
     @classmethod
     def from_dict(cls, d: dict) -> "ModelSpec":
@@ -189,6 +212,9 @@ class ModelSpec(_SpecBase):
             use_thrash_term=d["use_thrash_term"],
             use_lucir=d["use_lucir"],
             pretrain=PretrainSpec.from_dict(d["pretrain"]) if d.get("pretrain") else None,
+            tenancy=d.get("tenancy", "mux"),
+            reclass_interval=d.get("reclass_interval", 0),
+            reclass_hysteresis=d.get("reclass_hysteresis", 2),
         )
 
 

@@ -15,18 +15,26 @@ repeated invocation is served entirely from disk — the final
 composed :class:`~repro.uvm.api.specs.ExperimentSpec` as JSON, the
 declarative artifact ``sweep --spec`` replays.
 
-``serve`` is the streaming side: it drives one live
-:class:`~repro.uvm.manager.OversubscriptionManager` over a JSONL fault
-stream (stdin or ``--input``), emitting one JSON action line (prefetch +
-pre-evict block ids, pattern, accuracy) per observed batch — the skeleton
-of a deployable UVM-backend sidecar.  Input lines::
+``serve`` is the streaming side: it drives a live multi-tenant
+:class:`~repro.uvm.manager.TenantMux` over a JSONL fault stream (stdin or
+``--input``), emitting one JSON action line (prefetch + pre-evict block
+ids, pattern, accuracy) per observed batch — the skeleton of a deployable
+UVM-backend sidecar.  Input lines::
 
     {"pages": [0, 1, 2, ...], "pc": [...], "tb": [...], "kernel": [...]}
-    {"feedback": {"was_evicted": [false, ...], "fault_count": 128}}
+    {"pages": [...], "tenant": "job-a"}
+    {"feedback": {"was_evicted": [false, ...], "fault_count": 128}, "tenant": "job-a"}
 
-(``pc``/``tb``/``kernel`` optional; a ``feedback`` line closes the
-previous batch — without one the batch auto-closes, fine-tuning without
-the thrashing term and leaving the fault clock unchanged.)
+``pc``/``tb``/``kernel`` are optional.  The optional ``tenant`` field
+(string or int) routes the line to that tenant's own classifier ->
+predictor pipeline — tenants are admitted on first contact and the action
+line echoes the tag; untagged lines share the ``--default-tenant``
+pipeline.  A ``feedback`` line closes its tenant's pending batch (untagged:
+the most recently observed one) — without one the batch auto-closes on the
+tenant's next observation, fine-tuning without the thrashing term and
+leaving the fault clock unchanged.  Malformed lines never produce a
+traceback: each yields a structured ``{"error": ..., "line": N}`` record
+(and a non-zero exit under ``--strict``).
 """
 from __future__ import annotations
 
@@ -192,11 +200,59 @@ def cmd_report(args) -> int:
     return 0
 
 
+class _ServeLineError(ValueError):
+    """A malformed JSONL line — reported as a structured error line, never
+    a traceback (a long-lived sidecar must survive garbage input)."""
+
+
+def _decode_serve_line(line: str, default_tenant: str):
+    """Validate one JSONL line into ``(kind, tenant, payload)`` where kind
+    is ``'observe'`` or ``'feedback'``.  Raises :class:`_ServeLineError`
+    with a one-line reason on anything malformed."""
+    import numpy as np
+
+    try:
+        rec = json.loads(line)
+    except json.JSONDecodeError as e:
+        raise _ServeLineError(f"bad json: {e.msg}") from None
+    if not isinstance(rec, dict):
+        raise _ServeLineError(f"line must be a JSON object, got {type(rec).__name__}")
+    tenant = rec.get("tenant", None)
+    if tenant is not None and not isinstance(tenant, (str, int)):
+        raise _ServeLineError(f"'tenant' must be a string or int, got {type(tenant).__name__}")
+    tagged = tenant is not None
+    tenant = default_tenant if tenant is None else tenant
+    if ("pages" in rec) == ("feedback" in rec):
+        raise _ServeLineError("line needs exactly one of 'pages' or 'feedback'")
+    if "feedback" in rec:
+        fb = rec["feedback"] or {}
+        if not isinstance(fb, dict):
+            raise _ServeLineError("'feedback' must be a JSON object")
+        we = fb.get("was_evicted")
+        if we is not None and (not isinstance(we, list) or any(not isinstance(x, bool) for x in we)):
+            raise _ServeLineError("'was_evicted' must be a list of booleans")
+        fc = fb.get("fault_count")
+        if fc is not None and (isinstance(fc, bool) or not isinstance(fc, int) or fc < 0):
+            raise _ServeLineError("'fault_count' must be a non-negative integer")
+        return "feedback", (tenant, tagged), {"was_evicted": we, "fault_count": fc}
+    pages = rec["pages"]
+    if not isinstance(pages, list) or any(isinstance(p, bool) or not isinstance(p, int) or p < 0 for p in pages):
+        raise _ServeLineError("'pages' must be a list of non-negative integers")
+    sides = {}
+    for ch in ("pc", "tb", "kernel"):
+        v = rec.get(ch)
+        if v is not None and (not isinstance(v, list) or len(v) != len(pages)
+                              or any(isinstance(x, bool) or not isinstance(x, int) for x in v)):
+            raise _ServeLineError(f"'{ch}' must be a list of ints aligned with 'pages'")
+        sides[ch] = v
+    return "observe", (tenant, tagged), {"pages": np.asarray(pages, np.int64), **sides}
+
+
 def cmd_serve(args) -> int:
     import numpy as np
 
     from repro.configs.predictor_paper import CONFIG_QUICK
-    from repro.uvm.manager import FaultBatch, ManagerConfig, Outcomes, OversubscriptionManager
+    from repro.uvm.manager import FaultBatch, ManagerConfig, Outcomes, TenantMux
 
     n_blocks = (args.n_pages + args.pages_per_block - 1) // args.pages_per_block
     capacity = args.capacity if args.capacity is not None else max(int(n_blocks / args.oversub), 1)
@@ -206,56 +262,89 @@ def cmd_serve(args) -> int:
         kind=args.kind, n_pages=args.n_pages, n_blocks=n_blocks, capacity=capacity,
         pages_per_block=args.pages_per_block,
         classifier=args.classifier, freq_table=args.freq_table,
+        reclass_interval=args.reclass_interval, reclass_hysteresis=args.reclass_hysteresis,
     )
-    mgr = OversubscriptionManager(cfg)
+    # tenants are admitted on first contact (auto_create): every "tenant"-
+    # tagged line gets its own classifier->predictor pipeline; untagged
+    # lines share the --default-tenant one (the single-workload case)
+    mux = TenantMux(cfg, shared_freq_table=args.shared_freq_table)
     fh = sys.stdin if args.input == "-" else open(args.input)
-    pending = False
+    pending: dict = {}  # tenant -> pending batch length (None: closed)
     last_fault = 0
+    last_tenant = args.default_tenant
     batches = 0
+    errors = 0
+    lineno = 0
+
+    def close(tenant, outcomes):
+        mux.feedback(outcomes, tenant=tenant)
+        pending[tenant] = None
+
     try:
         for line in fh:
+            lineno += 1
             line = line.strip()
             if not line or line.startswith("#"):
                 continue
-            rec = json.loads(line)
-            if "feedback" in rec:
-                fb = rec["feedback"] or {}
-                last_fault = int(fb.get("fault_count", last_fault))
-                if pending:
-                    we = fb.get("was_evicted")
-                    mgr.feedback(Outcomes(
-                        was_evicted=np.asarray(we, bool) if we is not None else None,
-                        fault_count=last_fault,
-                    ))
-                    pending = False
-                continue
-            if "pages" not in rec:
-                raise SystemExit(f"serve: line needs 'pages' or 'feedback': {line[:80]}")
-            if pending:  # auto-close the previous batch (no outcome report)
-                mgr.feedback(Outcomes(fault_count=last_fault))
-            actions = mgr.observe(FaultBatch(
-                np.asarray(rec["pages"], np.int64),
-                rec.get("pc"), rec.get("tb"), rec.get("kernel"),
-            ))
-            pending = True
-            batches += 1
-            print(json.dumps({
-                "batch": batches,
-                "pattern": actions.pattern,
-                "n_samples": actions.n_samples,
-                "accuracy": actions.accuracy,
-                "warm": actions.warm,
-                "prefetch_blocks": np.asarray(actions.prefetch_blocks).tolist(),
-                "pre_evict_blocks": np.asarray(actions.pre_evict_blocks).tolist(),
-            }), flush=True)
-        if pending:
-            mgr.feedback(Outcomes(fault_count=last_fault))
+            try:
+                kind, (tenant, tagged), payload = _decode_serve_line(line, args.default_tenant)
+                if kind == "feedback":
+                    if not tagged:
+                        tenant = last_tenant  # untagged: closes the previous batch
+                    we = payload["was_evicted"]
+                    if pending.get(tenant) is None and we is not None:
+                        # an outcome report with nothing to apply it to is
+                        # lost data -> error; a bare fault_count line merely
+                        # seeds the clock (legacy input, accepted silently)
+                        raise _ServeLineError(f"feedback for tenant {tenant!r} without a pending batch")
+                    if we is not None and len(we) != pending[tenant]:
+                        raise _ServeLineError(
+                            f"'was_evicted' must have one entry per access of tenant "
+                            f"{tenant!r}'s pending batch (expected {pending[tenant]}, got {len(we)})"
+                        )
+                    if payload["fault_count"] is not None:
+                        last_fault = payload["fault_count"]
+                    if pending.get(tenant) is not None:
+                        close(tenant, Outcomes(
+                            was_evicted=np.asarray(we, bool) if we is not None else None,
+                            fault_count=last_fault,
+                        ))
+                    continue
+                if pending.get(tenant) is not None:  # auto-close (no outcome report)
+                    close(tenant, Outcomes(fault_count=last_fault))
+                out = mux.observe(FaultBatch(
+                    payload["pages"], payload["pc"], payload["tb"], payload["kernel"],
+                    tenant=tenant,
+                ))
+                actions = out.per_tenant[tenant]
+                pending[tenant] = len(payload["pages"])
+                last_tenant = tenant
+                batches += 1
+                rec = {
+                    "batch": batches,
+                    "pattern": actions.pattern,
+                    "n_samples": actions.n_samples,
+                    "accuracy": actions.accuracy,
+                    "warm": actions.warm,
+                    "prefetch_blocks": np.asarray(actions.prefetch_blocks).tolist(),
+                    "pre_evict_blocks": np.asarray(actions.pre_evict_blocks).tolist(),
+                }
+                if tagged:
+                    rec["tenant"] = tenant
+                print(json.dumps(rec), flush=True)
+            except _ServeLineError as e:
+                errors += 1
+                print(json.dumps({"error": str(e), "line": lineno}), flush=True)
+        for tenant, p in pending.items():
+            if p is not None:
+                close(tenant, Outcomes(fault_count=last_fault))
     finally:
         if fh is not sys.stdin:
             fh.close()
-    print(f"# serve batches={batches} predictions={mgr.n_predictions} "
-          f"patterns={mgr.n_models} classes={mgr.n_classes} top1={mgr.top1:.3f}")
-    return 0
+    print(f"# serve batches={batches} predictions={mux.n_predictions} "
+          f"patterns={mux.n_models} classes={mux.n_classes} top1={mux.top1:.3f} "
+          f"tenants={len(mux.managers)} errors={errors}")
+    return 2 if errors and args.strict else 0
 
 
 SUBCOMMANDS = {"run": cmd_run, "sweep": cmd_sweep, "report": cmd_report, "serve": cmd_serve}
@@ -305,6 +394,18 @@ def build_parser() -> argparse.ArgumentParser:
     p_srv.add_argument("--classifier", default="dfa", help="registered pattern classifier")
     p_srv.add_argument("--freq-table", default="setassoc", help="registered frequency-table engine")
     p_srv.add_argument("--group-size", type=int, default=512, help="fine-tune schedule group size")
+    p_srv.add_argument("--default-tenant", default="default",
+                       help="tenant id for JSONL lines without a per-line 'tenant' field "
+                            "(tagged lines each get their own classifier->predictor pipeline)")
+    p_srv.add_argument("--shared-freq-table", action="store_true",
+                       help="tenants share ONE prediction-frequency table (default: isolated per tenant)")
+    p_srv.add_argument("--reclass-interval", type=int, default=0,
+                       help="re-run the pattern classifier every N faults (observed accesses "
+                            "when no feedback reports a fault count; 0 = every batch)")
+    p_srv.add_argument("--reclass-hysteresis", type=int, default=2,
+                       help="consecutive agreeing windows before a pattern switch")
+    p_srv.add_argument("--strict", action="store_true",
+                       help="exit non-zero if any malformed line was reported")
     return ap
 
 

@@ -22,6 +22,7 @@ from repro.uvm.manager.core import (
     prefetch_mask,
     prefetch_warm,
 )
+from repro.uvm.manager.multi import MuxActions, TenantMux
 from repro.uvm.manager.stream import OnlineFeatureStream
 
 __all__ = [
@@ -32,6 +33,8 @@ __all__ = [
     "Outcomes",
     "EvalRequest",
     "TrainRequest",
+    "TenantMux",
+    "MuxActions",
     "OnlineFeatureStream",
     "prefetch_warm",
     "prefetch_mask",

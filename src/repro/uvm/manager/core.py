@@ -60,18 +60,29 @@ INTERVAL_FAULTS = 64
 class FaultBatch:
     """One batch of the demand stream: raw page ids plus the optional
     side-channel features the predictor consumes (absent channels are
-    zeros, which hash to one bucket — harmless, just less signal)."""
+    zeros, which hash to one bucket — harmless, just less signal).
+
+    ``tenant`` tags each access with its workload (any hashable id, or a
+    scalar for a whole-batch tag).  A plain :class:`OversubscriptionManager`
+    ignores it; :class:`repro.uvm.manager.TenantMux` demultiplexes on it."""
 
     page: np.ndarray
     pc: np.ndarray | None = None
     tb: np.ndarray | None = None
     kernel: np.ndarray | None = None
+    tenant: np.ndarray | None = None
 
     def __post_init__(self):
         self.page = np.asarray(self.page)
         n = len(self.page)
         z = lambda a: np.zeros(n, np.int32) if a is None else np.asarray(a)
         self.pc, self.tb, self.kernel = z(self.pc), z(self.tb), z(self.kernel)
+        if self.tenant is not None and np.ndim(self.tenant) > 0:
+            self.tenant = np.asarray(self.tenant)
+            if len(self.tenant) != n:
+                raise ValueError(
+                    f"tenant tags must align with pages (expected {n}, got {len(self.tenant)})"
+                )
 
     def __len__(self) -> int:
         return len(self.page)
@@ -148,6 +159,18 @@ class ManagerConfig:
     classifier: str = "dfa"
     freq_table: str = "setassoc"
     pre_evict_budget: int = 32  # advisory victims per Actions
+    #: streaming periodic re-classification (0 = legacy: classify every
+    #: observed batch).  With a positive interval the classifier re-runs
+    #: only every ``reclass_interval`` FAULTS (the consumer-reported
+    #: clock; observed accesses are the fallback trigger so feedback-less
+    #: consumers still re-classify); between windows the ACTIVE pattern's
+    #: model keeps serving.
+    reclass_interval: int = 0
+    #: hysteresis: a proposed pattern must win ``reclass_hysteresis``
+    #: CONSECUTIVE re-classification windows before it replaces the active
+    #: one (>= 2 means a single disagreeing window can never flip; the
+    #: displaced pattern's model entry stays warm in the table).
+    reclass_hysteresis: int = 2
 
 
 # --- Section IV-D gates (shared with the monolithic runtime) ----------------
@@ -248,6 +271,17 @@ class OversubscriptionManager:
         self._fault_raw = 0
         self._chain_li = np.full(cfg.n_blocks, -1, np.int64)
         self._pending: _Pending | None = None
+        # streaming periodic re-classification (cfg.reclass_interval > 0):
+        # the active pattern, the challenger and its consecutive-window
+        # streak, and the fault clock of the last classifier run
+        self._active_pat: int | None = None
+        self._cand_pat: int | None = None
+        self._cand_streak = 0
+        self._last_reclass = 0
+        self._obs_accesses = 0  # fallback window clock (faults need feedback)
+        self._last_reclass_obs = 0
+        self.n_reclassifications = 0
+        self.n_pattern_switches = 0
 
     # -- result views --------------------------------------------------------
 
@@ -298,7 +332,10 @@ class OversubscriptionManager:
         g0, g1 = self.stream.append(batch.page, batch.pc, batch.tb)
         fs = self.stream.windows(g0, g1)
         blocks = (np.asarray(batch.page, np.int64) // self.cfg.pages_per_block)
-        pat = self.classifier.classify(blocks, batch.kernel)
+        if self.cfg.reclass_interval > 0:
+            pat = self._reclassify(blocks, batch.kernel)
+        else:
+            pat = self.classifier.classify(blocks, batch.kernel)
         entry = self.table.get(pat)
         self._pending = _Pending(
             g0=g0, n=g1 - g0, fs=fs, pat=pat, entry=entry,
@@ -397,6 +434,45 @@ class OversubscriptionManager:
         self._pending = None
 
     # -- internals -----------------------------------------------------------
+
+    def _reclassify(self, blocks: np.ndarray, kernels: np.ndarray) -> int:
+        """Periodic re-classification with hysteresis (cfg.reclass_interval
+        faults per window; a challenger needs cfg.reclass_hysteresis
+        consecutive agreeing windows to dethrone the active pattern).
+
+        The window clock is the consumer-reported fault count, with the
+        OBSERVED-ACCESS count as a fallback trigger: a feedback-less
+        consumer (the serve sidecar's auto-close mode reports no faults)
+        must still re-classify, and since every fault is an access the
+        fallback can only make windows more frequent, never rarer."""
+        clock = self._fault_base + self._fault_raw
+        self._obs_accesses += len(blocks)
+        due = (clock - self._last_reclass >= self.cfg.reclass_interval
+               or self._obs_accesses - self._last_reclass_obs >= self.cfg.reclass_interval)
+        if self._active_pat is None:  # first observation seeds the pattern
+            self._active_pat = self.classifier.classify(blocks, kernels)
+            self._last_reclass = clock
+            self._last_reclass_obs = self._obs_accesses
+            self.n_reclassifications += 1
+        elif due:
+            proposal = self.classifier.classify(blocks, kernels)
+            self._last_reclass = clock
+            self._last_reclass_obs = self._obs_accesses
+            self.n_reclassifications += 1
+            if proposal == self._active_pat:
+                self._cand_pat, self._cand_streak = None, 0
+            else:
+                if proposal == self._cand_pat:
+                    self._cand_streak += 1
+                else:
+                    self._cand_pat, self._cand_streak = proposal, 1
+                if self._cand_streak >= max(self.cfg.reclass_hysteresis, 1):
+                    # the displaced pattern's model entry stays warm in the
+                    # table — flipping back later resumes where it left off
+                    self._active_pat = proposal
+                    self._cand_pat, self._cand_streak = None, 0
+                    self.n_pattern_switches += 1
+        return self._active_pat
 
     def _decode_deltas(self, pred_cls: np.ndarray) -> np.ndarray:
         """Vectorized class-id -> raw-delta decode (the grown-so-far slice

@@ -1,0 +1,381 @@
+"""`TenantMux` — multi-tenant streaming oversubscription management.
+
+The paper's headline accuracy result covers *multiple concurrent GPGPU
+workloads* (Section V-F: +10.2% top-1 on average, up to +30.2%): when
+tenants share a GPU, one classifier->predictor pipeline over the MERGED
+fault stream blends pattern classes inside every observation window and
+the per-workload delta structure drowns.  The fix is per-workload
+specialization: demultiplex the tenant-tagged fault stream into one
+:class:`~repro.uvm.manager.OversubscriptionManager` per tenant, each with
+its own classifier state, delta vocabulary, window history and per-pattern
+model table, while the device-wide artifacts (the dense prediction
+frequency export the `learned` eviction policy reads, the staged prefetch
+set) are combined across tenants.
+
+Protocol — the manager's stepwise rounds, lifted to a tagged stream::
+
+    mux = TenantMux(cfg, tenants=("A", "B"))
+    out = mux.observe(FaultBatch(page=pages, tenant=tags))   # demux -> per-tenant pipelines
+    ... stage out.prefetch_blocks / out.counters ...
+    mux.feedback(Outcomes(was_evicted=..., fault_count=...)) # split back per tenant
+
+* ``observe`` splits the batch by tag (within-tenant order preserved),
+  runs each present tenant's ``observe_begin``, batches every predictor
+  dispatch through ONE ``Trainer.evaluate_many`` call, and combines the
+  per-tenant actions into a :class:`MuxActions`.
+* ``feedback`` splits ``was_evicted`` back along the same partition and
+  forwards the GLOBAL fault clock to every tenant observed this round
+  (each manager's 3-interval flush cadence advances on the device-wide
+  far-fault count; absent tenants catch up on their next observation).
+  ``feedback(..., tenant=k)`` instead closes tenant ``k``'s pending batch
+  explicitly — the ``cli serve`` sidecar's per-line pairing.
+* the staged halves (``observe_begin/observe_finish``,
+  ``feedback_begin/feedback_finish``) return per-tenant request lists so
+  lockstep drivers (``runtime.run_ours_many``) can batch model dispatches
+  across lanes AND tenants in one vmapped call.
+
+Frequency-table topology is configurable: ``shared_freq_table=False``
+(default) gives every tenant an ISOLATED table — with it, demuxing a
+:func:`repro.uvm.trace.concurrent` merge is exactly equivalent to running
+each tenant's stream through its own standalone manager (property-pinned
+in tests/test_multi.py); ``shared_freq_table=True`` makes all tenants
+update ONE table (the paper's single 18KB SRAM budget, Section IV-D).
+Tenants always share one :class:`~repro.core.incremental.Trainer` (jit
+caches), never model state.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.incremental import Trainer
+from repro.core.model_table import ModelTable
+from repro.uvm import registry as _registry
+from repro.uvm.manager.core import (
+    INTERVAL_FAULTS,
+    Actions,
+    EvalRequest,
+    FaultBatch,
+    ManagerConfig,
+    Outcomes,
+    OversubscriptionManager,
+    TrainRequest,
+)
+
+_UNSET = object()
+
+
+@dataclasses.dataclass
+class MuxActions:
+    """One round's combined output: the device-wide artifacts a simulator
+    (or any residency engine) stages, plus every tenant's own
+    :class:`~repro.uvm.manager.Actions` for per-workload consumers.
+
+    ``counters`` is the combined dense prediction-frequency export
+    (elementwise max across tenant tables — tenants occupy disjoint page
+    ranges, so the max is the union; one table serves directly when
+    shared); ``None`` when no tenant's prefetch gate opened this round,
+    matching the single-manager cadence (a stale export stays staged).
+    ``pre_evict_blocks`` round-robins the tenants' advisory rankings so no
+    tenant's victims dominate the head."""
+
+    per_tenant: dict
+    prefetch_blocks: np.ndarray
+    counters: np.ndarray | None
+    pre_evict_blocks: np.ndarray
+
+    @property
+    def patterns(self) -> dict:
+        return {k: a.pattern for k, a in self.per_tenant.items()}
+
+
+def _stable_unique(parts: list[np.ndarray]) -> np.ndarray:
+    """Concatenate + dedup preserving first-appearance order."""
+    if not parts:
+        return np.zeros(0, np.int64)
+    cat = np.concatenate([np.asarray(p, np.int64) for p in parts])
+    _, first = np.unique(cat, return_index=True)
+    return cat[np.sort(first)]
+
+
+def _round_robin(parts: list[np.ndarray]) -> np.ndarray:
+    """Interleave the tenants' rankings fairly (worst-first per tenant)."""
+    parts = [np.asarray(p, np.int64) for p in parts if len(p)]
+    if not parts:
+        return np.zeros(0, np.int64)
+    width = max(len(p) for p in parts)
+    out = [p[i] for i in range(width) for p in parts if i < len(p)]
+    return _stable_unique([np.asarray(out, np.int64)])
+
+
+class _SharedFreqTableView:
+    """The shared frequency table as ONE tenant manager sees it: reads and
+    updates pass through, but ``on_intervals`` is a no-op — the flush
+    cadence is owned by the mux.  (Every manager computes the same
+    device-interval delta from the global fault clock; letting each apply
+    it would flush the one table N_tenants times per interval.)"""
+
+    def __init__(self, table):
+        self._table = table
+
+    def update(self, blocks):
+        self._table.update(blocks)
+
+    def lookup(self, block):
+        return self._table.lookup(block)
+
+    def lookup_many(self, blocks):
+        return self._table.lookup_many(blocks)
+
+    def dense(self, n_blocks):
+        return self._table.dense(n_blocks)
+
+    def on_intervals(self, n):  # mux-owned (see TenantMux._advance_shared_clock)
+        pass
+
+    @property
+    def tags(self):
+        return self._table.tags
+
+    @property
+    def counters(self):
+        return self._table.counters
+
+    @property
+    def flushes(self):
+        return self._table.flushes
+
+
+class TenantMux:
+    """Demultiplex a tenant-tagged fault stream into per-tenant
+    classifier->predictor pipelines (module docs have the protocol).
+
+    ``tenants`` pre-declares the tenant keys (any hashables that survive a
+    numpy equality test against the tag array — ints for trace merges,
+    strings for the serve sidecar).  ``auto_create=True`` (the default)
+    admits unseen tags by building their manager on first contact — the
+    endless-stream sidecar mode; pass ``False`` to make an unknown tag a
+    hard ``KeyError`` (the trace drivers, where the tenant set is known).
+
+    ``tables`` seeds each tenant's per-pattern model table: a dict keyed
+    by tenant, or ONE Section V-A pretrained master that every tenant
+    clones (fine-tuning mutates entries — tenants must not share them).
+    """
+
+    def __init__(
+        self,
+        cfg: ManagerConfig,
+        tenants=(),
+        *,
+        shared_freq_table: bool = False,
+        auto_create: bool = True,
+        tables: dict | ModelTable | None = None,
+        trainer: Trainer | None = None,
+    ):
+        self.cfg = cfg
+        self.shared_freq_table = shared_freq_table
+        self.auto_create = auto_create
+        self._tables = tables
+        self.trainer = trainer if trainer is not None else Trainer(cfg.predictor, cfg.train, cfg.kind)
+        self._shared_freq = _registry.freq_table_factory(cfg.freq_table)() if shared_freq_table else None
+        self.managers: dict = {}
+        self.per_group: list[float] = []  # batch accuracies in dispatch order
+        self._round: list[tuple] | None = None  # [(tenant, positions, n)], last observe's split
+        self._last_feedback: list[tuple] = []  # feedback_begin's pairs, for feedback_finish
+        # mux-owned flush cadence for the SHARED table (managers hold
+        # no-flush views); same rebase rule as the per-manager clock
+        self._fault_base = 0
+        self._fault_raw = 0
+        self._flush_interval = 0
+        for t in tenants:
+            self._create(t)
+
+    # -- tenant admission ----------------------------------------------------
+
+    def _create(self, key) -> OversubscriptionManager:
+        table = self._tables
+        if isinstance(table, dict):
+            table = table.get(key)
+        elif isinstance(table, ModelTable):
+            table = table.clone()  # one warm master, private per-tenant copies
+        mgr = OversubscriptionManager(
+            self.cfg, table=table, trainer=self.trainer,
+            freq_table=_SharedFreqTableView(self._shared_freq) if self._shared_freq is not None else None,
+        )
+        self.managers[key] = mgr
+        return mgr
+
+    def tenant(self, key) -> OversubscriptionManager:
+        """The tenant's manager (admitting the key if ``auto_create``)."""
+        if key not in self.managers:
+            if not self.auto_create:
+                raise KeyError(f"unknown tenant {key!r}; declared: {list(self.managers)}")
+            self._create(key)
+        return self.managers[key]
+
+    def _split(self, batch: FaultBatch) -> list[tuple]:
+        """Partition one batch by tenant tag, first-appearance order,
+        within-tenant access order preserved. Untagged batches route to
+        the ``'default'`` tenant (the single-workload degenerate case)."""
+        tags = batch.tenant
+        if tags is None or np.ndim(tags) == 0:
+            key = "default" if tags is None else (tags.item() if hasattr(tags, "item") else tags)
+            return [(key, np.arange(len(batch)), batch)]
+        keys, first = np.unique(tags, return_index=True)
+        out = []
+        for k in keys[np.argsort(first)]:
+            idx = np.flatnonzero(tags == k)
+            out.append((
+                k.item() if hasattr(k, "item") else k,
+                idx,
+                FaultBatch(batch.page[idx], batch.pc[idx], batch.tb[idx], batch.kernel[idx]),
+            ))
+        return out
+
+    # -- streaming protocol --------------------------------------------------
+
+    def observe(self, batch: FaultBatch) -> MuxActions:
+        """One full round: demux, per-tenant classify, ONE batched predictor
+        dispatch, combined actions."""
+        pairs = self.observe_begin(batch)
+        evals = [(k, r) for k, r in pairs if r is not None]
+        results = iter(self.trainer.evaluate_many(
+            [r.params for _, r in evals], [r.fs for _, r in evals], [r.n_active for _, r in evals],
+        )) if evals else iter(())
+        return self.observe_finish([next(results) if r is not None else None for _, r in pairs])
+
+    def feedback(self, outcomes: Outcomes, *, tenant=_UNSET) -> None:
+        """Close the last round (or one tenant's pending batch): split the
+        outcome report, advance every observed tenant's fault clock, batch
+        the fine-tune dispatches through ONE ``train_group_many``."""
+        pairs = self.feedback_begin(outcomes, tenant=tenant)
+        treqs = [(k, r) for k, r in pairs if r is not None]
+        self.trainer.train_group_many(
+            [r.entry for _, r in treqs], [r.fs for _, r in treqs], [r.n_active for _, r in treqs],
+            in_et_list=[r.in_et for _, r in treqs], use_lucir=self.cfg.use_lucir,
+        )
+        self.feedback_finish([r.entry if r is not None else None for _, r in pairs])
+
+    # -- staged halves (lockstep drivers batch across lanes AND tenants) -----
+
+    def observe_begin(self, batch: FaultBatch) -> list[tuple[object, EvalRequest | None]]:
+        """Demux + per-tenant ingest/classify; returns ``(tenant, request)``
+        pairs in first-appearance order (request ``None`` when that
+        tenant's slice yields no window samples)."""
+        batch = batch if isinstance(batch, FaultBatch) else FaultBatch(np.asarray(batch))
+        split = self._split(batch)
+        self._round = [(k, idx, len(idx)) for k, idx, _ in split]
+        return [(k, self.tenant(k).observe_begin(sub)) for k, idx, sub in split]
+
+    def observe_finish(self, results: list) -> MuxActions:
+        """Fold each tenant's predictor output; combine the device-wide
+        artifacts. ``results`` aligns with ``observe_begin``'s pairs —
+        ``(corr, pred_cls)`` per dispatched tenant, ``None`` otherwise."""
+        if self._round is None:
+            raise RuntimeError("observe_finish() without observe_begin()")
+        per_tenant: dict = {}
+        for (k, _idx, _n), res in zip(self._round, results):
+            corr, pred = res if res is not None else (None, None)
+            actions = self.managers[k].observe_finish(corr, pred)
+            per_tenant[k] = actions
+            if actions.accuracy is not None:
+                self.per_group.append(actions.accuracy)
+        warm_any = any(a.counters is not None for a in per_tenant.values())
+        counters = self._combined_dense() if warm_any else None
+        return MuxActions(
+            per_tenant=per_tenant,
+            prefetch_blocks=_stable_unique([a.prefetch_blocks for a in per_tenant.values()]),
+            counters=counters,
+            pre_evict_blocks=_round_robin([a.pre_evict_blocks for a in per_tenant.values()]),
+        )
+
+    def feedback_begin(self, outcomes: Outcomes, *, tenant=_UNSET) -> list[tuple[object, TrainRequest | None]]:
+        """Split the outcome report along the last round's partition (or
+        hand it whole to one tenant) and stage each fine-tune dispatch."""
+        self._advance_shared_clock(outcomes)
+        if tenant is not _UNSET:
+            out = [(tenant, self.tenant(tenant).feedback_begin(outcomes))]
+            # the tenant's slot in a pending round (if any) is now closed —
+            # a later round-level feedback must not replay it
+            if self._round is not None:
+                self._round = [r for r in self._round if r[0] != tenant] or None
+            self._last_feedback = out
+            return out
+        if self._round is None:
+            raise RuntimeError("feedback() without a pending observe() round")
+        we = None if outcomes.was_evicted is None else np.asarray(outcomes.was_evicted)
+        out = []
+        for k, idx, n in self._round:
+            sub = Outcomes(
+                was_evicted=None if we is None else we[idx],
+                fault_count=outcomes.fault_count,  # the GLOBAL device clock
+            )
+            out.append((k, self.managers[k].feedback_begin(sub)))
+        self._round = None
+        self._last_feedback = out
+        return out
+
+    def feedback_finish(self, entries: list) -> None:
+        """Publish each tenant's fine-tuned entry (aligned with
+        ``feedback_begin``'s pairs; ``None`` = nothing was staged)."""
+        for (k, _r), entry in zip(self._last_feedback, entries):
+            if entry is not None:
+                self.managers[k].feedback_finish(entry)
+
+    # -- combined artifacts --------------------------------------------------
+
+    def _advance_shared_clock(self, outcomes: Outcomes) -> None:
+        """Advance the mux-owned flush cadence of the SHARED table from the
+        global fault clock (one flush check per device interval, however
+        many tenants reported it); no-op with isolated tables, where each
+        manager owns its table's cadence."""
+        if self._shared_freq is None:
+            return
+        raw = int(outcomes.fault_count)
+        if raw < self._fault_raw:  # consumer switch: its clock restarted at 0
+            self._fault_base += self._fault_raw
+        self._fault_raw = raw
+        interval_now = (self._fault_base + raw) // INTERVAL_FAULTS
+        if interval_now > self._flush_interval:
+            self._shared_freq.on_intervals(interval_now - self._flush_interval)
+            self._flush_interval = interval_now
+
+    def _combined_dense(self) -> np.ndarray:
+        """Device-wide dense frequency export: the shared table directly,
+        or the elementwise max across the isolated per-tenant tables
+        (disjoint tenant page ranges make the max a union; -1 = never)."""
+        nb = self.cfg.n_blocks
+        if self._shared_freq is not None:
+            return self._shared_freq.dense(nb)
+        return np.maximum.reduce([m.freq_table.dense(nb) for m in self.managers.values()])
+
+    # -- result views (the shapes LearnedRunResult aggregates) ---------------
+
+    @property
+    def top1(self) -> float:
+        t = sum(m._corr_true for m in self.managers.values())
+        n = sum(m._corr_n for m in self.managers.values())
+        return t / n if n else 0.0
+
+    @property
+    def warm_top1(self) -> float:
+        t = sum(m._warm_true for m in self.managers.values())
+        n = sum(m._warm_n for m in self.managers.values())
+        return t / n if n else self.top1
+
+    @property
+    def n_predictions(self) -> int:
+        return sum(m.n_predictions for m in self.managers.values())
+
+    @property
+    def n_classes(self) -> int:
+        return sum(m.n_classes for m in self.managers.values())
+
+    @property
+    def n_models(self) -> int:
+        return sum(m.n_models for m in self.managers.values())
+
+    @property
+    def per_tenant_top1(self) -> dict:
+        return {str(k): m.top1 for k, m in self.managers.items()}

@@ -51,6 +51,7 @@ from repro.uvm.manager import (
     ManagerConfig,
     Outcomes,
     OversubscriptionManager,
+    TenantMux,
     prefetch_mask,
     prefetch_warm,
 )
@@ -71,6 +72,9 @@ class LearnedRunResult:
     per_group_acc: list
     warm_top1: float = 0.0  # excludes each pattern-model's first (cold) group
     n_accesses: int = 0  # trace length (0 only on results stored before it existed)
+    #: per-tenant strictly-causal top-1 (multi-tenant mux runs only; keys
+    #: are str(tenant) so the payload stays JSON-round-trippable)
+    per_tenant_top1: dict | None = None
 
     def ipc(self, pred_overhead_us: float = 1.0, n_accesses: int | None = None) -> float:
         # The predictor sits at the UVM backend and runs ASYNCHRONOUSLY with
@@ -195,6 +199,28 @@ def pretrain_table(
     return table
 
 
+def _manager_config(
+    trace: Trace,
+    pcfg: PredictorConfig,
+    tcfg: TrainConfig,
+    *,
+    oversubscription: float,
+    kind: str,
+    use_thrash_term: bool,
+    use_lucir: bool,
+    reclass_interval: int = 0,
+    reclass_hysteresis: int = 2,
+) -> ManagerConfig:
+    return ManagerConfig(
+        predictor=pcfg, train=tcfg, kind=kind,
+        n_pages=trace.n_pages,
+        n_blocks=S.bucket_blocks(trace.n_blocks),
+        capacity=S.capacity_for(trace.n_blocks, oversubscription),
+        use_thrash_term=use_thrash_term, use_lucir=use_lucir,
+        reclass_interval=reclass_interval, reclass_hysteresis=reclass_hysteresis,
+    )
+
+
 def manager_for(
     trace: Trace,
     pcfg: PredictorConfig | None = None,
@@ -205,25 +231,63 @@ def manager_for(
     table: ModelTable | None = None,
     use_thrash_term: bool = True,
     use_lucir: bool = True,
+    reclass_interval: int = 0,
+    reclass_hysteresis: int = 2,
 ) -> OversubscriptionManager:
     """An :class:`OversubscriptionManager` configured for one trace's
     geometry (padded block bucket + oversubscribed capacity) — the manager
     :func:`run_ours` drives, reusable by any other consumer of the same
     workload."""
-    pcfg = pcfg or PredictorConfig()
-    tcfg = tcfg or TrainConfig()
-    cfg = ManagerConfig(
-        predictor=pcfg, train=tcfg, kind=kind,
-        n_pages=trace.n_pages,
-        n_blocks=S.bucket_blocks(trace.n_blocks),
-        capacity=S.capacity_for(trace.n_blocks, oversubscription),
+    cfg = _manager_config(
+        trace, pcfg or PredictorConfig(), tcfg or TrainConfig(),
+        oversubscription=oversubscription, kind=kind,
         use_thrash_term=use_thrash_term, use_lucir=use_lucir,
+        reclass_interval=reclass_interval, reclass_hysteresis=reclass_hysteresis,
     )
     return OversubscriptionManager(cfg, table=table)
 
 
+def mux_for(
+    trace: Trace,
+    pcfg: PredictorConfig | None = None,
+    tcfg: TrainConfig | None = None,
+    *,
+    oversubscription: float = 1.25,
+    kind: str = "transformer",
+    table: ModelTable | None = None,
+    use_thrash_term: bool = True,
+    use_lucir: bool = True,
+    shared_freq_table: bool = False,
+    reclass_interval: int = 0,
+    reclass_hysteresis: int = 2,
+    trainer=None,
+) -> TenantMux:
+    """A :class:`TenantMux` for a tenant-tagged concurrent trace
+    (Section V-F): one manager per tenant over the MERGED geometry (tenants
+    occupy disjoint page ranges of the shared device, so every pipeline
+    sees global page ids and the combined artifacts line up with the
+    simulator's block space).  ``table`` is a Section V-A master each
+    tenant clones."""
+    if trace.tenant is None:
+        raise ValueError(f"trace {trace.name!r} has no tenant tags; use manager_for() instead")
+    cfg = _manager_config(
+        trace, pcfg or PredictorConfig(), tcfg or TrainConfig(),
+        oversubscription=oversubscription, kind=kind,
+        use_thrash_term=use_thrash_term, use_lucir=use_lucir,
+        reclass_interval=reclass_interval, reclass_hysteresis=reclass_hysteresis,
+    )
+    tenants = [int(t) for t in np.unique(trace.tenant)]
+    return TenantMux(
+        cfg, tenants, shared_freq_table=shared_freq_table, auto_create=False,
+        tables=table, trainer=trainer,
+    )
+
+
 def _group_batch(trace: Trace, g0: int, g1: int) -> FaultBatch:
-    return FaultBatch(trace.page[g0:g1], trace.pc[g0:g1], trace.tb[g0:g1], trace.kernel[g0:g1])
+    return FaultBatch(
+        trace.page[g0:g1], trace.pc[g0:g1], trace.tb[g0:g1], trace.kernel[g0:g1],
+        tenant=None if trace.tenant is None else trace.tenant[g0:g1],
+    )
 
 
 def _apply_actions(state, actions, nb: int, cap: int):
@@ -248,10 +312,11 @@ def _state_stats(state) -> dict:
     }
 
 
-def _result(mgr: OversubscriptionManager, state, n_accesses: int) -> LearnedRunResult:
+def _result(mgr, state, n_accesses: int) -> LearnedRunResult:
     return LearnedRunResult(
         _state_stats(state), mgr.top1, mgr.n_predictions, mgr.n_classes,
         mgr.n_models, mgr.per_group, mgr.warm_top1, n_accesses,
+        per_tenant_top1=mgr.per_tenant_top1 if isinstance(mgr, TenantMux) else None,
     )
 
 
@@ -266,20 +331,44 @@ def run_ours(
     use_thrash_term: bool = True,
     use_lucir: bool = True,
     seed: int = 0,
-    manager: OversubscriptionManager | None = None,
+    manager: OversubscriptionManager | TenantMux | None = None,
+    multi_tenant: bool | None = None,
+    shared_freq_table: bool = False,
+    reclass_interval: int = 0,
+    reclass_hysteresis: int = 2,
 ) -> LearnedRunResult:
     """Drive one trace through the streaming manager + simulator.
 
+    Tenant-tagged concurrent traces (``trace.tenant`` set — every
+    :func:`repro.uvm.trace.concurrent` merge) route through a
+    :class:`TenantMux` by default: one classifier->predictor pipeline per
+    tenant, combined prefetch/counter staging, ONE shared simulator over
+    the merged device.  ``multi_tenant=False`` forces the pre-mux
+    merged-single-manager treatment (the Section V-F baseline).
+
     Pass ``manager`` to drive an externally-built (possibly already warm)
-    :class:`OversubscriptionManager` instead of a fresh one — its config
-    must match the trace's geometry.
+    :class:`OversubscriptionManager` or :class:`TenantMux` instead of a
+    fresh one — its config must match the trace's geometry.
     """
     pcfg = pcfg or PredictorConfig()
     tcfg = tcfg or TrainConfig()
-    mgr = manager if manager is not None else manager_for(
-        trace, pcfg, tcfg, oversubscription=oversubscription, kind=kind,
-        table=table, use_thrash_term=use_thrash_term, use_lucir=use_lucir,
-    )
+    if multi_tenant is None:
+        multi_tenant = trace.tenant is not None
+    if manager is not None:
+        mgr = manager
+    elif multi_tenant:
+        mgr = mux_for(
+            trace, pcfg, tcfg, oversubscription=oversubscription, kind=kind,
+            table=table, use_thrash_term=use_thrash_term, use_lucir=use_lucir,
+            shared_freq_table=shared_freq_table,
+            reclass_interval=reclass_interval, reclass_hysteresis=reclass_hysteresis,
+        )
+    else:
+        mgr = manager_for(
+            trace, pcfg, tcfg, oversubscription=oversubscription, kind=kind,
+            table=table, use_thrash_term=use_thrash_term, use_lucir=use_lucir,
+            reclass_interval=reclass_interval, reclass_hysteresis=reclass_hysteresis,
+        )
     nb, cap = mgr.cfg.n_blocks, mgr.cfg.capacity
     state = S.init_state(nb, seed)
     blocks = trace.block.astype(np.int32)
@@ -310,13 +399,37 @@ class _Lane:
     """Per-trace runtime state for :func:`run_ours_many` (each lane owns its
     manager — model table, vocabulary, classifier, frequency table — and
     its simulator state; lanes are fully independent, exactly as serial
-    runs are)."""
+    runs are).  A tenant-tagged lane's ``mgr`` is a :class:`TenantMux`;
+    its staged halves fan out per tenant, so one lockstep dispatch batches
+    across lanes AND tenants."""
 
     trace: Trace
-    mgr: OversubscriptionManager
+    mgr: OversubscriptionManager | TenantMux
     state: object
     blocks: np.ndarray
     nxt: np.ndarray
+
+    def observe_begin_all(self, batch) -> list:
+        if isinstance(self.mgr, TenantMux):
+            return [r for _, r in self.mgr.observe_begin(batch)]
+        return [self.mgr.observe_begin(batch)]
+
+    def observe_finish_all(self, results: list):
+        if isinstance(self.mgr, TenantMux):
+            return self.mgr.observe_finish(results)
+        corr, pred = results[0] if results[0] is not None else (None, None)
+        return self.mgr.observe_finish(corr, pred)
+
+    def feedback_begin_all(self, outcomes) -> list:
+        if isinstance(self.mgr, TenantMux):
+            return [r for _, r in self.mgr.feedback_begin(outcomes)]
+        return [self.mgr.feedback_begin(outcomes)]
+
+    def feedback_finish_all(self, reqs: list) -> None:
+        if isinstance(self.mgr, TenantMux):
+            self.mgr.feedback_finish([r.entry if r is not None else None for r in reqs])
+        elif reqs[0] is not None:
+            self.mgr.feedback_finish(reqs[0].entry)
 
 
 def run_ours_many(
@@ -330,6 +443,10 @@ def run_ours_many(
     use_thrash_term: bool = True,
     use_lucir: bool = True,
     seed: int = 0,
+    multi_tenant: bool | None = None,
+    shared_freq_table: bool = False,
+    reclass_interval: int = 0,
+    reclass_hysteresis: int = 2,
 ) -> list[LearnedRunResult]:
     """Run the full learned system over MANY traces in lockstep.
 
@@ -355,11 +472,19 @@ def run_ours_many(
     trainer = Trainer(pcfg, tcfg, kind)  # the shared batched dispatches
     lanes: list[_Lane] = []
     for li, trace in enumerate(traces):
-        mgr = manager_for(
-            trace, pcfg, tcfg, oversubscription=oversubscription, kind=kind,
+        mt = trace.tenant is not None if multi_tenant is None else multi_tenant
+        # mux_for rejects untagged traces, so an explicit multi_tenant=True
+        # on one fails loudly here exactly as it does in run_ours
+        build = mux_for if mt else manager_for
+        kw = dict(
+            oversubscription=oversubscription, kind=kind,
             table=tables[li] if tables is not None else None,
             use_thrash_term=use_thrash_term, use_lucir=use_lucir,
+            reclass_interval=reclass_interval, reclass_hysteresis=reclass_hysteresis,
         )
+        if build is mux_for:
+            kw.update(shared_freq_table=shared_freq_table, trainer=trainer)
+        mgr = build(trace, pcfg, tcfg, **kw)
         lanes.append(_Lane(
             trace=trace, mgr=mgr, state=S.init_state(mgr.cfg.n_blocks, seed),
             blocks=trace.block.astype(np.int32), nxt=S.next_use_for(trace),
@@ -369,18 +494,18 @@ def run_ours_many(
     for g0 in range(0, max_n, G):
         act = [l for l in lanes if g0 < len(l.trace)]
         # 1. observe every lane's group; the predictor dispatches batch
-        #    through one vmapped evaluate per shape bucket
+        #    through one vmapped evaluate per shape bucket (mux lanes fan
+        #    out one request per tenant into the same dispatch)
         reqs = [
-            (l, l.mgr.observe_begin(_group_batch(l.trace, g0, min(g0 + G, len(l.trace)))))
+            (l, l.observe_begin_all(_group_batch(l.trace, g0, min(g0 + G, len(l.trace)))))
             for l in act
         ]
-        evals = [(l, r) for l, r in reqs if r is not None]
+        flat = [r for _, rs in reqs for r in rs if r is not None]
         results = iter(trainer.evaluate_many(
-            [r.params for _, r in evals], [r.fs for _, r in evals], [r.n_active for _, r in evals],
+            [r.params for r in flat], [r.fs for r in flat], [r.n_active for r in flat],
         ))
-        for l, r in reqs:
-            corr, pred_cls = next(results) if r is not None else (None, None)
-            actions = l.mgr.observe_finish(corr, pred_cls)
+        for l, rs in reqs:
+            actions = l.observe_finish_all([next(results) if r is not None else None for r in rs])
             # 2. stage counters + prefetches into the lane's simulator state
             l.state = _apply_actions(l.state, actions, l.mgr.cfg.n_blocks, l.mgr.cfg.capacity)
 
@@ -397,17 +522,16 @@ def run_ours_many(
         treqs = []
         for l, (state, outs) in zip(act, seg):
             l.state = state
-            r = l.mgr.feedback_begin(Outcomes(
+            treqs.append((l, l.feedback_begin_all(Outcomes(
                 was_evicted=np.asarray(outs["was_evicted"]),
                 fault_count=int(state.fault_count),
-            ))
-            if r is not None:
-                treqs.append((l, r))
+            ))))
+        tflat = [r for _, rs in treqs for r in rs if r is not None]
         trainer.train_group_many(
-            [r.entry for _, r in treqs], [r.fs for _, r in treqs], [r.n_active for _, r in treqs],
-            in_et_list=[r.in_et for _, r in treqs], use_lucir=use_lucir,
+            [r.entry for r in tflat], [r.fs for r in tflat], [r.n_active for r in tflat],
+            in_et_list=[r.in_et for r in tflat], use_lucir=use_lucir,
         )
-        for l, r in treqs:
-            l.mgr.feedback_finish(r.entry)
+        for l, rs in treqs:
+            l.feedback_finish_all(rs)
 
     return [_result(l.mgr, l.state, len(l.trace)) for l in lanes]

@@ -45,6 +45,10 @@ class Trace:
     tb: np.ndarray  # int32 (T,)
     kernel: np.ndarray  # int32 (T,) kernel-launch index
     n_pages: int  # working-set size in pages
+    #: per-access tenant index for Section V-F concurrent merges (None for
+    #: single-workload traces); index i names ``tenant_names[i]``
+    tenant: np.ndarray | None = None
+    tenant_names: tuple[str, ...] = ()
 
     def __len__(self) -> int:
         return len(self.page)
@@ -62,7 +66,10 @@ class Trace:
         return d
 
     def slice(self, lo: int, hi: int) -> "Trace":
-        return Trace(self.name, self.page[lo:hi], self.pc[lo:hi], self.tb[lo:hi], self.kernel[lo:hi], self.n_pages)
+        return Trace(
+            self.name, self.page[lo:hi], self.pc[lo:hi], self.tb[lo:hi], self.kernel[lo:hi], self.n_pages,
+            tenant=None if self.tenant is None else self.tenant[lo:hi], tenant_names=self.tenant_names,
+        )
 
 
 class _Builder:
@@ -335,6 +342,12 @@ def concurrent(traces: list[Trace], seed: int = 0, slice_len: int = 256) -> Trac
     hardware each tenant's warps burst their own fault stream, so the
     migration stream keeps per-workload temporal locality (the property
     Fig. 5 visualises) while the global stream mixes pattern classes.
+
+    The merge is TENANT-TAGGED: ``.tenant`` carries each access's workload
+    index (``tenant_names`` maps it back to the constituent trace name), so
+    multi-tenant consumers (:class:`repro.uvm.manager.TenantMux`) can demux
+    the stream without re-deriving the schedule.  Page/pc/tb/kernel arrays
+    are unchanged — single-manager consumers see the exact pre-PR-5 trace.
     """
     rng = np.random.default_rng(seed)
     offset = 0
@@ -353,13 +366,14 @@ def concurrent(traces: list[Trace], seed: int = 0, slice_len: int = 256) -> Trac
         hi = min(lo + slice_len, len(parts[w][0]))
         slices.append((w, lo, hi))
         cursors[w] = hi
-    page, pc, tb, kern = [], [], [], []
+    page, pc, tb, kern, tnt = [], [], [], [], []
     for w, lo, hi in slices:
         p = parts[w]
         page.append(p[0][lo:hi])
         pc.append(p[1][lo:hi] + 16 * w)
         tb.append(p[2][lo:hi])
         kern.append(p[3][lo:hi] + 64 * w)
+        tnt.append(np.full(hi - lo, w, np.int32))
     return Trace(
         "+".join(t.name for t in traces),
         np.concatenate(page).astype(np.int32),
@@ -367,4 +381,6 @@ def concurrent(traces: list[Trace], seed: int = 0, slice_len: int = 256) -> Trac
         np.concatenate(tb).astype(np.int32),
         np.concatenate(kern).astype(np.int32),
         offset,
+        tenant=np.concatenate(tnt),
+        tenant_names=tuple(t.name for t in traces),
     )

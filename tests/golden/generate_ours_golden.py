@@ -1,4 +1,5 @@
-"""Regenerate tests/golden/ours_golden.json — the learned-runtime pins.
+"""Regenerate (or drift-check) tests/golden/ours_golden.json — the
+learned-runtime pins.
 
 One cell per benchmark: `runtime.run_ours` at scale 0.3 / cap 3000 with the
 SMOKE predictor and the test-suite TrainConfig, recording the simulator
@@ -8,10 +9,22 @@ is the contract the streaming `OversubscriptionManager` refactor is pinned
 against: rebuilding `run_ours` on the manager must NOT move a single
 counter or accuracy bit on any benchmark.
 
-    PYTHONPATH=src python tests/golden/generate_ours_golden.py
+PR 5 adds the Section V-F concurrent cells: each tenant pair is pinned
+under BOTH treatments — ``|merged`` (one manager over the interleaved
+stream, the pre-mux baseline) and ``|mux`` (the `TenantMux` per-tenant
+pipelines, including the per-tenant top-1 split).
+
+    PYTHONPATH=src python tests/golden/generate_ours_golden.py            # rewrite
+    PYTHONPATH=src python tests/golden/generate_ours_golden.py --check    # CI drift gate
+    PYTHONPATH=src python tests/golden/generate_ours_golden.py --check --cells AddVectors
+
+``--check`` regenerates in memory and fails (exit 1) on ANY difference vs
+the committed JSON — silent golden rot (a generator/trace change without a
+regeneration, or a hand-edited file) cannot survive CI.
 """
 from __future__ import annotations
 
+import argparse
 import json
 from pathlib import Path
 
@@ -24,13 +37,18 @@ OUT = Path(__file__).with_name("ours_golden.json")
 
 SCALE, CAP = 0.3, 3000
 TCFG = TrainConfig(group_size=1024, epochs=2, batch_size=128)
+#: Section V-F tenant pairs pinned under both treatments (slice_len equals
+#: the training group size so each observed batch is one tenant's stream)
+CONCURRENT_PAIRS = (("StreamTriad", "Hotspot"), ("ATAX", "Srad-v2"))
 
 
-def cell(name: str) -> dict:
+def _bench_trace(name: str) -> T.Trace:
     tr = T.get_trace(name, scale=SCALE)
-    tr = tr.slice(0, min(len(tr), CAP))
-    res = R.run_ours(tr, SMOKE, TCFG)
-    return {
+    return tr.slice(0, min(len(tr), CAP))
+
+
+def _payload(res) -> dict:
+    out = {
         "stats": res.stats,
         "top1": res.top1,
         "warm_top1": res.warm_top1,
@@ -39,10 +57,68 @@ def cell(name: str) -> dict:
         "n_models": res.n_models,
         "per_group_acc": res.per_group_acc,
     }
+    if res.per_tenant_top1 is not None:
+        out["per_tenant_top1"] = res.per_tenant_top1
+    return out
 
 
-def main() -> int:
-    golden = {name: cell(name) for name in T.BENCHMARKS}
+def cell(name: str) -> dict:
+    return _payload(R.run_ours(_bench_trace(name), SMOKE, TCFG))
+
+
+def concurrent_cell(pair: tuple[str, str], multi_tenant: bool) -> dict:
+    tr = T.concurrent([_bench_trace(n) for n in pair], seed=0, slice_len=TCFG.group_size)
+    return _payload(R.run_ours(tr, SMOKE, TCFG, multi_tenant=multi_tenant))
+
+
+def generate(cells: list[str] | None = None) -> dict:
+    golden = {}
+    for name in T.BENCHMARKS:
+        if cells is None or name in cells:
+            golden[name] = cell(name)
+    for pair in CONCURRENT_PAIRS:
+        for label, mt in (("merged", False), ("mux", True)):
+            key = f"concurrent:{'+'.join(pair)}|{label}"
+            if cells is None or key in cells:
+                golden[key] = concurrent_cell(pair, mt)
+    return golden
+
+
+def check(cells: list[str] | None = None, path: Path = OUT) -> int:
+    committed = json.loads(path.read_text())
+    fresh = generate(cells)
+    bad = []
+    for key, want in fresh.items():
+        if key not in committed:
+            bad.append(f"missing from committed file: {key}")
+        elif committed[key] != want:
+            fields = [f for f in want if committed[key].get(f) != want[f]]
+            bad.append(f"drifted: {key} (fields: {fields})")
+    if cells is None:
+        bad += [f"stale committed cell (generator no longer emits it): {k}"
+                for k in committed if k not in fresh]
+    if bad:
+        print(f"golden drift in {path}:")
+        for b in bad:
+            print("  -", b)
+        print("regenerate with: PYTHONPATH=src python tests/golden/generate_ours_golden.py")
+        return 1
+    print(f"golden ok: {len(fresh)} cells bit-identical to {path}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="regenerate in memory and fail on any diff vs the committed JSON")
+    ap.add_argument("--cells", nargs="*", default=None,
+                    help="restrict to these cell keys (default: all)")
+    args = ap.parse_args(argv)
+    if args.check:
+        return check(args.cells)
+    golden = generate(args.cells)
+    if args.cells is not None:  # partial regen: merge into the committed file
+        golden = {**json.loads(OUT.read_text()), **golden}
     OUT.write_text(json.dumps(golden, indent=1, sort_keys=True) + "\n")
     print(f"wrote {OUT} ({len(golden)} cells)")
     return 0

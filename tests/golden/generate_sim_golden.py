@@ -1,8 +1,10 @@
-"""Regenerate the simulator equivalence goldens (tests/golden/sim_golden.json).
+"""Regenerate (or drift-check) the simulator equivalence goldens
+(tests/golden/sim_golden.json).
 
 Run from the repo root:
 
-    PYTHONPATH=src python tests/golden/generate_sim_golden.py
+    PYTHONPATH=src python tests/golden/generate_sim_golden.py            # rewrite
+    PYTHONPATH=src python tests/golden/generate_sim_golden.py --check    # CI drift gate
 
 The goldens come from the FROZEN pre-refactor reference scan
 (repro.uvm.reference) — never from the fast path the goldens exist to
@@ -12,14 +14,21 @@ at scale=0.25 / cap=2000 (integer-only simulator state => platform-stable),
 plus one Section V-F concurrent multi-workload trace over the same matrix.
 `random` is excluded: its draws depend on array padding, which the fast path
 is free to change.
+
+``--check`` regenerates every cell in memory from the reference scan and
+fails (exit 1) on ANY difference vs the committed JSON, so silent golden
+rot (a trace-generator change without a regeneration, a hand-edited file)
+cannot survive CI.  ``--traces NAME ...`` restricts the (re)generation to
+those trace keys.
 """
+import argparse
 import json
 from pathlib import Path
 
-import numpy as np
-
 from repro.uvm import reference as S
 from repro.uvm import trace as T
+
+OUT = Path(__file__).parent / "sim_golden.json"
 
 SCALE, CAP = 0.25, 2000
 POLICIES = ("lru", "belady", "hpe", "learned")
@@ -38,15 +47,17 @@ def golden_concurrent_trace() -> T.Trace:
     return T.concurrent(parts, seed=0, slice_len=256)
 
 
-def main():
-    out = {}
-    traces = {name: None for name in T.BENCHMARKS}
+def generate(traces_filter=None, verbose: bool = True) -> dict:
+    traces = {}
     for name in T.BENCHMARKS:
         tr = T.get_trace(name, scale=SCALE)
         traces[name] = tr.slice(0, min(len(tr), CAP))
     conc = golden_concurrent_trace()
     traces[f"concurrent:{conc.name}"] = conc
+    out = {}
     for name, tr in traces.items():
+        if traces_filter is not None and name not in traces_filter:
+            continue
         for pol in POLICIES:
             for pf in PREFETCHERS:
                 for os_ in OVERSUBS:
@@ -54,11 +65,48 @@ def main():
                     out[f"{name}|{pol}|{pf}|{os_}"] = {
                         k: st[k] for k in ("pages_thrashed", "faults", "migrated_blocks", "zero_copy")
                     }
-                    print(name, pol, pf, os_, out[f"{name}|{pol}|{pf}|{os_}"], flush=True)
-    path = Path(__file__).parent / "sim_golden.json"
-    path.write_text(json.dumps(out, indent=0, sort_keys=True) + "\n")
-    print("wrote", path, len(out), "cells")
+                    if verbose:
+                        print(name, pol, pf, os_, out[f"{name}|{pol}|{pf}|{os_}"], flush=True)
+    return out
+
+
+def check(traces_filter=None, path: Path = OUT) -> int:
+    committed = json.loads(path.read_text())
+    fresh = generate(traces_filter, verbose=False)
+    bad = []
+    for key, want in fresh.items():
+        if key not in committed:
+            bad.append(f"missing from committed file: {key}")
+        elif committed[key] != want:
+            bad.append(f"drifted: {key} ({committed[key]} != {want})")
+    if traces_filter is None:
+        bad += [f"stale committed cell: {k}" for k in committed if k not in fresh]
+    if bad:
+        print(f"golden drift in {path}:")
+        for b in bad:
+            print("  -", b)
+        print("regenerate with: PYTHONPATH=src python tests/golden/generate_sim_golden.py")
+        return 1
+    print(f"golden ok: {len(fresh)} cells bit-identical to {path}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="regenerate in memory (reference scan) and fail on any diff")
+    ap.add_argument("--traces", nargs="*", default=None,
+                    help="restrict to these trace keys (default: all)")
+    args = ap.parse_args(argv)
+    if args.check:
+        return check(args.traces)
+    out = generate(args.traces)
+    if args.traces is not None:
+        out = {**json.loads(OUT.read_text()), **out}
+    OUT.write_text(json.dumps(out, indent=0, sort_keys=True) + "\n")
+    print("wrote", OUT, len(out), "cells")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

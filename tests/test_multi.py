@@ -1,0 +1,633 @@
+"""Multi-tenant streaming management (ISSUE 5 tentpole).
+
+The guarantees pinned here:
+
+* the Section V-F concurrent golden cells — `runtime.run_ours` over a
+  tenant-tagged `trace.concurrent()` merge is bit-pinned under BOTH
+  treatments (merged-single-manager baseline AND the `TenantMux`),
+  exactly like the 11 single-tenant benchmarks;
+* demuxing a merge through `TenantMux` with ISOLATED tables is counter-
+  and top-1-identical to running each tenant's stream through its own
+  standalone `OversubscriptionManager` (deterministic pin + a hypothesis
+  net over arbitrary interleavings and fault clocks);
+* streaming periodic re-classification: the classifier re-runs every
+  `reclass_interval` faults and hysteresis never flips the active pattern
+  on a single disagreeing window;
+* the `cli serve` sidecar's tenant field and structured error lines
+  (malformed input can never produce a traceback).
+
+The hypothesis properties drive the manager with a stub trainer (pure
+numpy, deterministic): the properties at stake live in the demux/clock/
+flush/hysteresis plumbing, not the predictor, and a real NN would retrace
+jits on every example's batch shape.
+"""
+import dataclasses
+import importlib.util
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.configs.predictor_paper import SMOKE
+from repro.core.incremental import TrainConfig
+from repro.uvm import runtime as R
+from repro.uvm import trace as T
+from repro.uvm.manager import (
+    FaultBatch,
+    ManagerConfig,
+    Outcomes,
+    OversubscriptionManager,
+    TenantMux,
+)
+
+GOLDEN = json.loads((Path(__file__).parent / "golden" / "ours_golden.json").read_text())
+SCALE, CAP = 0.3, 3000  # must match tests/golden/generate_ours_golden.py
+TCFG = TrainConfig(group_size=1024, epochs=2, batch_size=128)
+CONCURRENT_PAIRS = (("StreamTriad", "Hotspot"), ("ATAX", "Srad-v2"))
+
+
+def _bench_trace(name: str) -> T.Trace:
+    tr = T.get_trace(name, scale=SCALE)
+    return tr.slice(0, min(len(tr), CAP))
+
+
+def _concurrent_trace(pair) -> T.Trace:
+    return T.concurrent([_bench_trace(n) for n in pair], seed=0, slice_len=TCFG.group_size)
+
+
+# --- the stub predictor stack (fast, deterministic, no jit retraces) ---------
+
+
+class _StubTrainer:
+    """Deterministic pure-numpy stand-in for `Trainer`: predicts the
+    window's last delta class, counts updates. Exercises every manager
+    code path (eval -> actions -> fine-tune) at hypothesis speed."""
+
+    def new_params(self, seed: int = 0):
+        return np.zeros(1)
+
+    def evaluate(self, params, fs, n_active: int):
+        pred = fs.delta[:, -1] % max(n_active, 1)
+        return pred == fs.label, pred
+
+    def evaluate_many(self, params_list, fs_list, n_active_list):
+        return [self.evaluate(p, f, n) for p, f, n in zip(params_list, fs_list, n_active_list)]
+
+    def train_group(self, entry, fs, n_active, *, in_et=None, use_lucir=False, rng=None):
+        entry.n_updates += 1
+        return entry
+
+    def train_group_many(self, entries, fs_list, n_active_list, *, in_et_list=None, use_lucir=False):
+        for e in entries:
+            e.n_updates += 1
+        return entries
+
+
+def _stub_cfg(**kw) -> ManagerConfig:
+    kw.setdefault("predictor", SMOKE)
+    kw.setdefault("train", TrainConfig(group_size=64, epochs=1, batch_size=32))
+    kw.setdefault("n_pages", 1024)
+    kw.setdefault("n_blocks", 64)
+    kw.setdefault("capacity", 16)
+    kw.setdefault("use_lucir", False)  # the stub has no params to snapshot
+    kw.setdefault("use_thrash_term", False)
+    return ManagerConfig(**kw)
+
+
+def _stub_mux(tenants, **kw) -> TenantMux:
+    shared = kw.pop("shared_freq_table", False)
+    cfg = _stub_cfg(**kw)
+    return TenantMux(cfg, tenants, shared_freq_table=shared,
+                     auto_create=False, trainer=_StubTrainer())
+
+
+def _stub_manager(**kw) -> OversubscriptionManager:
+    return OversubscriptionManager(_stub_cfg(**kw), trainer=_StubTrainer())
+
+
+def _drive_equivalence(tenant_batches, fault_counts, tenants=(0, 1)):
+    """Drive a mux with tagged merged batches and standalone managers with
+    the demuxed sub-batches; assert identical per-tenant state."""
+    mux = _stub_mux(tenants)
+    solo = {t: _stub_manager() for t in tenants}
+    for (pages, tags), fc in zip(tenant_batches, fault_counts):
+        mux.observe(FaultBatch(pages, tenant=tags))
+        mux.feedback(Outcomes(was_evicted=np.zeros(len(pages), bool), fault_count=fc))
+        seen = []
+        for t in tags:  # first-appearance order, like the mux split
+            if t not in seen:
+                seen.append(t)
+        for t in seen:
+            idx = np.flatnonzero(tags == t)
+            solo[t].observe(FaultBatch(pages[idx]))
+            solo[t].feedback(Outcomes(was_evicted=np.zeros(len(idx), bool), fault_count=fc))
+    for t in tenants:
+        m, s = mux.managers[t], solo[t]
+        assert m.top1 == s.top1
+        assert m.per_group == s.per_group
+        assert m.n_predictions == s.n_predictions
+        assert m.vocab.table == s.vocab.table
+        assert np.array_equal(m.freq_table.dense(64), s.freq_table.dense(64))
+        assert np.array_equal(m.freq_table.tags, s.freq_table.tags)
+        assert m.freq_table.flushes == s.freq_table.flushes
+        assert m._flush_interval == s._flush_interval
+        assert m._interval == s._interval
+        assert np.array_equal(m._chain_li, s._chain_li)
+
+
+# --- concurrent golden cells (merged baseline AND mux, bit-pinned) -----------
+
+
+@pytest.mark.parametrize("pair", CONCURRENT_PAIRS, ids=lambda p: "+".join(p))
+@pytest.mark.parametrize("treatment", ["merged", "mux"])
+def test_concurrent_golden_bit_identical(pair, treatment):
+    """The Section V-F cells must not move a counter or accuracy bit under
+    either tenancy treatment (regenerate via generate_ours_golden.py)."""
+    res = R.run_ours(_concurrent_trace(pair), SMOKE, TCFG, multi_tenant=treatment == "mux")
+    g = GOLDEN[f"concurrent:{'+'.join(pair)}|{treatment}"]
+    assert res.stats == g["stats"]
+    assert res.top1 == g["top1"]
+    assert res.warm_top1 == g["warm_top1"]
+    assert res.per_group_acc == g["per_group_acc"]
+    assert res.n_predictions == g["n_predictions"]
+    assert res.n_classes == g["n_classes"]
+    assert res.n_models == g["n_models"]
+    if treatment == "mux":
+        assert res.per_tenant_top1 == g["per_tenant_top1"]
+    else:
+        assert res.per_tenant_top1 is None
+
+
+def test_golden_check_mode(tmp_path):
+    """The drift gate: --check passes on the committed file and fails on a
+    tampered copy (scoped to one cheap cell so the test stays quick)."""
+    spec = importlib.util.spec_from_file_location(
+        "generate_ours_golden", Path(__file__).parent / "golden" / "generate_ours_golden.py"
+    )
+    gen = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(gen)
+    assert gen.check(["AddVectors"]) == 0
+    tampered = dict(GOLDEN)
+    tampered["AddVectors"] = {**tampered["AddVectors"], "top1": 0.123}
+    bad = tmp_path / "ours_golden.json"
+    bad.write_text(json.dumps(tampered))
+    assert gen.check(["AddVectors"], path=bad) == 1
+    missing = tmp_path / "missing.json"
+    missing.write_text(json.dumps({k: v for k, v in GOLDEN.items() if k != "AddVectors"}))
+    assert gen.check(["AddVectors"], path=missing) == 1
+
+
+# --- mux == standalone managers (isolated tables) ----------------------------
+
+
+def test_mux_equivalent_to_standalone_real_predictor():
+    """The headline property on a real concurrent merge with the REAL
+    predictor stack: per-tenant accuracy, vocabulary, frequency-table
+    state and flush clocks all match standalone managers fed the demuxed
+    stream."""
+    tr = _concurrent_trace(("StreamTriad", "Hotspot")).slice(0, 3000)
+    cfg_kw = dict(
+        predictor=SMOKE, train=TrainConfig(group_size=512, epochs=1, batch_size=64),
+        n_pages=tr.n_pages, n_blocks=256, capacity=64,
+    )
+    mux = TenantMux(ManagerConfig(**cfg_kw), (0, 1), auto_create=False)
+    solo = {t: OversubscriptionManager(ManagerConfig(**cfg_kw)) for t in (0, 1)}
+    G, fc = 512, 0
+    for g0 in range(0, len(tr), G):
+        g1 = min(g0 + G, len(tr))
+        tags = tr.tenant[g0:g1]
+        fc += (g1 - g0) // 4
+        mux.observe(FaultBatch(tr.page[g0:g1], tr.pc[g0:g1], tr.tb[g0:g1], tr.kernel[g0:g1], tenant=tags))
+        mux.feedback(Outcomes(was_evicted=np.zeros(g1 - g0, bool), fault_count=fc))
+        for t in (0, 1):
+            idx = np.flatnonzero(tags == t)
+            if len(idx) == 0:
+                continue
+            solo[t].observe(FaultBatch(
+                tr.page[g0:g1][idx], tr.pc[g0:g1][idx], tr.tb[g0:g1][idx], tr.kernel[g0:g1][idx]))
+            solo[t].feedback(Outcomes(was_evicted=np.zeros(len(idx), bool), fault_count=fc))
+    for t in (0, 1):
+        m, s = mux.managers[t], solo[t]
+        assert m.top1 == s.top1 and m.per_group == s.per_group
+        assert np.array_equal(m.freq_table.dense(256), s.freq_table.dense(256))
+        assert m._flush_interval == s._flush_interval
+
+
+def test_mux_shared_vs_isolated_freq_table():
+    """'mux-shared' gives every tenant ONE table object (the paper's single
+    SRAM budget); isolated gives each its own. The combined dense export
+    follows suit."""
+    shared = _stub_mux((0, 1), shared_freq_table=True)
+    # each manager holds a no-flush VIEW of the one shared table
+    assert shared.managers[0].freq_table._table is shared.managers[1].freq_table._table is shared._shared_freq
+    isolated = _stub_mux((0, 1))
+    assert isolated.managers[0].freq_table is not isolated.managers[1].freq_table
+    pages = np.arange(64)
+    tags = np.repeat([0, 1], 32)
+    for mux in (shared, isolated):
+        for step in range(4):
+            mux.observe(FaultBatch((pages + 16 * step) % 1024, tenant=tags))
+            mux.feedback(Outcomes(fault_count=16 * (step + 1)))
+    dense = np.maximum.reduce([m.freq_table.dense(64) for m in isolated.managers.values()])
+    assert np.array_equal(isolated._combined_dense(), dense)
+    assert np.array_equal(shared._combined_dense(), shared.managers[0].freq_table.dense(64))
+
+
+def test_shared_table_flush_cadence_is_per_device_interval():
+    """The shared table must flush on the DEVICE interval clock, not once
+    per tenant per interval: N tenants reporting the same global clock
+    flush exactly as often as one standalone manager would."""
+    mux = _stub_mux((0, 1, 2), shared_freq_table=True)
+    solo = _stub_manager()
+    tags = np.repeat([0, 1, 2], 16)
+    for step in range(7):  # 7 device intervals -> 2 flushes at cadence 3
+        fc = 64 * (step + 1)
+        mux.observe(FaultBatch(np.arange(48) % 1024, tenant=tags))
+        mux.feedback(Outcomes(fault_count=fc))
+        solo.observe(FaultBatch(np.arange(48) % 1024))
+        solo.feedback(Outcomes(fault_count=fc))
+    assert mux._shared_freq.flushes == solo.freq_table.flushes == 2
+    # the managers' views surface the shared table's state
+    assert mux.managers[0].freq_table.flushes == 2
+
+
+def test_tenant_feedback_then_round_feedback():
+    """Closing one tenant's batch explicitly (the serve sidecar's per-line
+    pairing) must drop it from the pending round: a subsequent round-level
+    feedback closes ONLY the remaining tenants, nobody raises, nobody's
+    fine-tune is lost."""
+    mux = _stub_mux((0, 1))
+    pages = np.arange(64)
+    tags = np.repeat([0, 1], 32)
+    mux.observe(FaultBatch(pages, tenant=tags))
+    mux.feedback(Outcomes(fault_count=10), tenant=0)
+    mux.feedback(Outcomes(was_evicted=np.zeros(64, bool), fault_count=12))  # closes tenant 1 only
+    assert mux._round is None
+    # both tenants are cleanly observable again
+    out = mux.observe(FaultBatch(pages, tenant=tags))
+    assert set(out.per_tenant) == {0, 1}
+    mux.feedback(Outcomes(fault_count=20))
+
+
+def test_reclass_windows_advance_without_feedback():
+    """A feedback-less consumer (the serve auto-close mode reports no
+    fault counts) must still re-classify: the observed-access clock is the
+    fallback window trigger."""
+    mgr = _reclass_manager([0] * 10, interval=64, k=2)
+    for _ in range(6):
+        mgr.observe(FaultBatch(np.arange(48)))
+        mgr.feedback(Outcomes(fault_count=0))  # the clock never moves
+    # seed + a window every ceil(64/48)=2nd batch thereafter
+    assert mgr.classifier.calls >= 3
+
+
+def test_mux_fault_clock_rebase_through_consumer_switch():
+    """The global fault clock re-bases per tenant manager exactly like a
+    single manager would (a consumer restart must not stall the flush
+    cadence of any tenant)."""
+    mux = _stub_mux((0,))
+    mux.observe(FaultBatch(np.arange(32), tenant=np.zeros(32, np.int64)))
+    mux.feedback(Outcomes(fault_count=10 * 64))
+    assert mux.managers[0]._flush_interval == 10
+    mux.observe(FaultBatch(np.arange(32), tenant=np.zeros(32, np.int64)))
+    mux.feedback(Outcomes(fault_count=3 * 64))  # restarted consumer clock
+    assert mux.managers[0]._flush_interval == 13
+
+
+def test_mux_misuse_raises():
+    mux = _stub_mux((0, 1))
+    with pytest.raises(RuntimeError):
+        mux.feedback(Outcomes())  # no pending round
+    with pytest.raises(KeyError):  # auto_create=False rejects unknown tags
+        mux.observe(FaultBatch(np.arange(8), tenant=np.full(8, 7)))
+    with pytest.raises(ValueError):  # misaligned tag array
+        FaultBatch(np.arange(8), tenant=np.zeros(3))
+    mux2 = _stub_mux((0,))
+    mux2.observe(FaultBatch(np.arange(8), tenant=np.zeros(8, np.int64)))
+    with pytest.raises(RuntimeError):  # same tenant observed twice
+        mux2.observe(FaultBatch(np.arange(8), tenant=np.zeros(8, np.int64)))
+
+
+def test_mux_auto_create_admits_new_tenants():
+    mux = TenantMux(_stub_cfg(), trainer=_StubTrainer())  # auto_create default
+    out = mux.observe(FaultBatch(np.arange(16), tenant=np.repeat(["A", "B"], 8)))
+    assert set(out.per_tenant) == {"A", "B"} and len(mux.managers) == 2
+    mux.feedback(Outcomes(fault_count=8))
+    assert mux.per_tenant_top1.keys() == {"A", "B"}
+
+
+def test_run_ours_many_mux_lane_matches_serial():
+    """A tenant-tagged lane through the lockstep engine must reproduce the
+    serial mux driver bit for bit (single-tenant lanes already pinned)."""
+    conc = _concurrent_trace(("StreamTriad", "Hotspot")).slice(0, 1200)
+    tcfg = TrainConfig(group_size=256, epochs=1, batch_size=64)
+    serial = R.run_ours(conc, SMOKE, tcfg)
+    [many] = R.run_ours_many([conc], SMOKE, tcfg)
+    assert many.stats == serial.stats
+    assert many.top1 == serial.top1
+    assert many.per_tenant_top1 == serial.per_tenant_top1
+
+
+# --- streaming periodic re-classification ------------------------------------
+
+
+def _check_hysteresis_property(script, k):
+    """Property body (shared by the hypothesis net and any local driver):
+    whenever the active pattern changes, the challenger proposed it in k
+    CONSECUTIVE windows; with k>=2 a lone disagreeing window never flips."""
+    mgr = _reclass_manager(script, interval=64, k=k)
+    seen = []
+    _drive_windows(mgr, seen, len(script))
+    proposals = script[: mgr.classifier.calls]
+    for i in range(1, len(seen)):
+        if seen[i] != seen[i - 1]:  # a switch surfaced at window i
+            run = proposals[i - k + 1 : i + 1]
+            assert run == [seen[i]] * k, (script, k, seen)
+    if k >= 2:
+        for i in range(1, len(proposals) - 1):
+            lone = proposals[i] != proposals[i - 1] and proposals[i] != proposals[i + 1]
+            if lone:
+                assert seen[i] != proposals[i] or proposals[i] == seen[i - 1], (script, seen)
+
+
+def _check_serve_line_contract(line: str):
+    """Property body: the serve decoder returns a decoded tuple or raises
+    the structured _ServeLineError — never anything else; accepted observe
+    payloads are numpy-ready."""
+    from repro.uvm.cli import _ServeLineError, _decode_serve_line
+
+    try:
+        kind, (tenant, tagged), payload = _decode_serve_line(line, "default")
+    except _ServeLineError:
+        return
+    assert kind in ("observe", "feedback")
+    if kind == "observe":
+        assert payload["pages"].dtype == np.int64
+
+
+class _ScriptedClassifier:
+    """Replays a fixed pattern sequence; counts invocations."""
+
+    def __init__(self, script):
+        self.script = list(script)
+        self.calls = 0
+
+    def classify(self, blocks, kernels):
+        pat = self.script[min(self.calls, len(self.script) - 1)]
+        self.calls += 1
+        return pat
+
+    def reset(self):
+        pass
+
+
+def _reclass_manager(script, interval=64, k=2):
+    cfg = _stub_cfg(reclass_interval=interval, reclass_hysteresis=k)
+    return OversubscriptionManager(cfg, trainer=_StubTrainer(),
+                                   classifier=_ScriptedClassifier(script))
+
+
+def _drive_windows(mgr, patterns_seen, n_windows, faults_per_window=64):
+    fc = mgr._fault_base + mgr._fault_raw
+    for _ in range(n_windows):
+        a = mgr.observe(FaultBatch(np.arange(48)))
+        patterns_seen.append(a.pattern)
+        fc += faults_per_window
+        mgr.feedback(Outcomes(fault_count=fc))
+
+
+def test_reclass_single_disagreeing_window_never_flips():
+    """One divergent classification window must NEVER switch the active
+    pattern (hysteresis k=2): LINEAR, one RANDOM blip, LINEAR again."""
+    mgr = _reclass_manager([0, 0, 2, 0, 0, 0], interval=64, k=2)
+    seen = []
+    _drive_windows(mgr, seen, 6)
+    assert seen == [0] * 6  # the blip at window 3 never surfaced
+    assert mgr.n_pattern_switches == 0
+
+
+def test_reclass_k_consecutive_windows_switch():
+    """k consecutive agreeing windows DO switch, exactly once, and the
+    displaced pattern's model entry survives in the table."""
+    mgr = _reclass_manager([0, 0, 2, 2, 2, 2], interval=64, k=2)
+    seen = []
+    _drive_windows(mgr, seen, 6)
+    assert seen == [0, 0, 0, 2, 2, 2]  # switch lands ON the k-th agreeing window
+    assert mgr.n_pattern_switches == 1
+    assert 0 in mgr.table.slots and 2 in mgr.table.slots  # both models warm
+
+
+def test_reclass_interval_gates_classifier_calls():
+    """Between windows the classifier does not run at all (the whole point:
+    bounded classification work on an endless stream)."""
+    mgr = _reclass_manager([0] * 10, interval=128, k=2)
+    seen = []
+    _drive_windows(mgr, seen, 8, faults_per_window=64)  # 2 batches per window
+    # call 1 seeds; thereafter every 128 faults = every second batch
+    assert mgr.classifier.calls == 1 + 3
+    assert seen == [0] * 8
+    legacy = OversubscriptionManager(_stub_cfg(), trainer=_StubTrainer(),
+                                     classifier=_ScriptedClassifier([0] * 10))
+    _drive_windows(legacy, [], 8)
+    assert legacy.classifier.calls == 8  # reclass_interval=0: every batch
+
+
+# --- hypothesis net ----------------------------------------------------------
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @st.composite
+    def _tagged_stream(draw):
+        """Arbitrary tenant interleavings + a fault clock with restarts."""
+        n_tenants = draw(st.integers(1, 3))
+        n_batches = draw(st.integers(1, 6))
+        batches, fault_counts = [], []
+        clock = 0
+        for _ in range(n_batches):
+            n = draw(st.integers(1, 48))
+            pages = np.asarray(draw(st.lists(st.integers(0, 1023), min_size=n, max_size=n)))
+            tags = np.asarray(draw(st.lists(st.integers(0, n_tenants - 1), min_size=n, max_size=n)))
+            batches.append((pages, tags))
+            if draw(st.booleans()):
+                clock = draw(st.integers(0, 64))  # consumer restart (rebase)
+            else:
+                clock += draw(st.integers(0, 256))
+            fault_counts.append(clock)
+        return n_tenants, batches, fault_counts
+
+    @settings(max_examples=40, deadline=None)
+    @given(_tagged_stream())
+    def test_mux_standalone_equivalence_hypothesis(stream):
+        """Demux through TenantMux with isolated tables == standalone
+        managers, under ARBITRARY interleavings, batch shapes and fault
+        clocks (incl. restarts): accuracy, vocab, counters, flush cadence
+        and chain state all match per tenant."""
+        n_tenants, batches, fault_counts = stream
+        _drive_equivalence(batches, fault_counts, tenants=tuple(range(n_tenants)))
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.integers(0, 2), min_size=1, max_size=12), st.integers(1, 3))
+    def test_reclass_hysteresis_property(script, k):
+        """Whenever the active pattern changes, the challenger proposed it
+        in k CONSECUTIVE windows; with k>=2 a single disagreeing window
+        (its neighbours differing) never flips."""
+        _check_hysteresis_property(script, k)
+
+    @settings(max_examples=150, deadline=None)
+    @given(st.text(max_size=120))
+    def test_serve_line_decoder_fuzz_text(line):
+        """Arbitrary text: the serve decoder returns a decoded tuple or
+        raises the structured _ServeLineError — never anything else."""
+        _check_serve_line_contract(line)
+
+    _json_scalars = st.one_of(st.none(), st.booleans(), st.integers(-4, 400),
+                              st.floats(allow_nan=False), st.text(max_size=6))
+
+    @settings(max_examples=150, deadline=None)
+    @given(st.dictionaries(
+        st.sampled_from(["pages", "feedback", "tenant", "pc", "tb", "kernel",
+                         "was_evicted", "fault_count", "junk"]),
+        st.one_of(_json_scalars, st.lists(_json_scalars, max_size=6),
+                  st.dictionaries(st.sampled_from(["was_evicted", "fault_count", "x"]),
+                                  st.one_of(_json_scalars, st.lists(_json_scalars, max_size=6)),
+                                  max_size=3)),
+        max_size=5,
+    ))
+    def test_serve_line_decoder_fuzz_records(rec):
+        """Arbitrary JSON records: same contract, plus any accepted observe
+        payload really is numpy-convertible."""
+        _check_serve_line_contract(json.dumps(rec))
+
+except ImportError:  # pragma: no cover - tier-1 must collect without hypothesis
+    pass
+
+
+# --- the serve sidecar: tenants + error lines --------------------------------
+
+
+def test_cli_serve_tenant_roundtrip(tmp_path, capsys):
+    """Tagged lines route to per-tenant pipelines (tenant echoed on the
+    action line), untagged lines keep the legacy single-manager shape, and
+    malformed lines become structured {"error", "line"} records — never a
+    traceback."""
+    from repro.uvm import cli
+
+    lines = []
+    for b in range(4):
+        t = "A" if b % 2 == 0 else "B"
+        lines.append(json.dumps({"pages": [(i + b * 5) % 300 for i in range(40)], "tenant": t}))
+        lines.append(json.dumps({"feedback": {"was_evicted": [False] * 40,
+                                              "fault_count": 64 * (b + 1)}, "tenant": t}))
+    lines += [
+        "not json at all",
+        json.dumps({"pages": "nope"}),
+        json.dumps({"pages": [1, 2], "feedback": {}}),
+        # an outcome report with nothing to apply it to is lost data
+        json.dumps({"feedback": {"was_evicted": [False], "fault_count": 3}, "tenant": "C"}),
+        json.dumps({"pages": [1, 2, 3], "tenant": 5.5}),  # non-str/int tenant
+        # a bare fault_count with no pending batch seeds the clock (legacy
+        # PR-4 input, accepted silently — no error line)
+        json.dumps({"feedback": {"fault_count": 999}}),
+        json.dumps({"pages": [1, 2, 3]}),  # untagged -> default tenant
+        # misaligned was_evicted must be a structured error, not a traceback
+        json.dumps({"feedback": {"was_evicted": [True, True], "fault_count": 999}}),
+    ]
+    stream = tmp_path / "faults.jsonl"
+    stream.write_text("\n".join(lines) + "\n")
+    assert cli.main(["serve", "--input", str(stream), "--n-pages", "300",
+                     "--pages-per-block", "4", "--capacity", "16", "--group-size", "32"]) == 0
+    out = capsys.readouterr().out.strip().splitlines()
+    recs = [json.loads(l) for l in out if l.startswith("{")]
+    acts = [r for r in recs if "batch" in r]
+    errs = [r for r in recs if "error" in r]
+    assert [a.get("tenant") for a in acts] == ["A", "B", "A", "B", None]
+    assert len(errs) == 6 and all(isinstance(e["line"], int) for e in errs)
+    assert "expected 3, got 2" in errs[-1]["error"]  # misaligned was_evicted
+    assert out[-1].startswith("# serve batches=5")
+    assert "tenants=3 errors=6" in out[-1]
+
+
+def test_cli_serve_strict_exit(tmp_path, capsys):
+    from repro.uvm import cli
+
+    stream = tmp_path / "bad.jsonl"
+    stream.write_text("garbage\n")
+    assert cli.main(["serve", "--input", str(stream), "--n-pages", "64"]) == 0
+    assert cli.main(["serve", "--input", str(stream), "--n-pages", "64", "--strict"]) == 2
+    capsys.readouterr()
+
+
+# --- spec/session surface ----------------------------------------------------
+
+
+def test_tenancy_spec_round_trip_and_validation():
+    from repro.uvm.api import ModelSpec
+
+    m = ModelSpec(tenancy="mux-shared", reclass_interval=256, reclass_hysteresis=3)
+    back = ModelSpec.from_dict(m.to_dict())
+    assert back == m and back.key == m.key
+    assert ModelSpec.from_dict(ModelSpec().to_dict()).tenancy == "mux"
+    with pytest.raises(ValueError):
+        ModelSpec(tenancy="bogus")
+
+
+def test_session_routes_concurrent_ours_through_mux(tmp_path):
+    """An `ours` cell on a concurrent workload runs the mux (per-tenant
+    top-1 recorded, store round-trip included); tenancy='merged' forces
+    the baseline and reproduces the merged golden."""
+    from repro.uvm.api import ModelSpec, RunStore, Session, TrainSpec
+
+    s = Session(scale=SCALE, cap=CAP, model=ModelSpec(predictor=SMOKE, train=TrainSpec(
+        group_size=TCFG.group_size, epochs=TCFG.epochs, batch_size=TCFG.batch_size,
+    )), store=RunStore(tmp_path / "runs"))
+    w = s.concurrent(("StreamTriad", "Hotspot"), slice_len=TCFG.group_size)
+    # strip the session's default pretrain so the cells match the golden
+    cell_mux = dataclasses.replace(s.ours_cell(w), model=s.model)
+    cell_merged = dataclasses.replace(
+        s.ours_cell(w), model=dataclasses.replace(s.model, tenancy="merged"))
+    assert cell_mux.key != cell_merged.key  # tenancy is part of the contract
+    res_mux, res_merged = s.sweep([cell_mux, cell_merged])
+    g_mux = GOLDEN["concurrent:StreamTriad+Hotspot|mux"]
+    g_merged = GOLDEN["concurrent:StreamTriad+Hotspot|merged"]
+    assert res_mux.stats == g_mux["stats"] and res_mux.top1 == g_mux["top1"]
+    assert res_mux.per_tenant_top1 == g_mux["per_tenant_top1"]
+    assert res_merged.stats == g_merged["stats"] and res_merged.top1 == g_merged["top1"]
+    # store round-trip preserves the per-tenant split
+    s2 = Session(scale=SCALE, cap=CAP, model=s.model, store=RunStore(tmp_path / "runs"))
+    again = s2.sweep([cell_mux])[0]
+    assert s2.counters["store_hits"] == 1 and s2.counters["computed"] == 0
+    assert again.per_tenant_top1 == res_mux.per_tenant_top1
+
+
+def test_offload_adapter_reclass_knobs():
+    """The serving adapter threads the re-classification knobs into its
+    default manager (the endless decode stream is where windowed
+    classification pays); behavior with interval 0 is the legacy cadence."""
+    from repro.serving.offload import LearnedOffloadManager
+
+    off = LearnedOffloadManager(32, 8, group=16, reclass_interval=128, reclass_hysteresis=3)
+    assert off.manager.cfg.reclass_interval == 128
+    assert off.manager.cfg.reclass_hysteresis == 3
+    rng = np.random.default_rng(0)
+    for step in range(40):
+        mass = np.zeros(32)
+        touched = np.unique(rng.integers(0, 32, 6))
+        mass[touched] = 1.0
+        off.on_attention(mass, touched)
+    assert off.stats.hbm_hits + off.stats.hbm_misses > 0
+    assert off.manager.n_reclassifications >= 1
+
+
+def test_session_manager_accepts_tenant_lists():
+    from repro.uvm.api import Session
+
+    s = Session(scale=0.25, cap=800)
+    mux = s.manager(["StreamTriad", "Hotspot"])
+    assert isinstance(mux, TenantMux) and len(mux.managers) == 2
+    assert isinstance(s.manager("ATAX"), OversubscriptionManager)
+    merged = s.manager(s.concurrent(("StreamTriad", "Hotspot")), tenancy="merged")
+    assert not isinstance(merged, TenantMux)
