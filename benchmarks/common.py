@@ -1,13 +1,13 @@
 """Shared harness for the per-table/figure benchmarks — now a thin layer
 over :mod:`repro.uvm.api`.
 
-The session/caching logic that used to live here (the ``Ctx`` dataclass and
-its in-process dicts) moved into :class:`repro.uvm.api.Session`, which
-additionally persists every computed cell in the content-addressed run
-store under ``experiments/runs/`` — rerunning a table after a crash (or
-after the CLI already swept the same cells) recomputes nothing.  ``Ctx``
-remains importable here as a deprecated alias accepting the historical
-``Ctx(scale, cap, pcfg, tcfg, benches)`` signature.
+The session/caching logic that used to live here moved into
+:class:`repro.uvm.api.Session`, which additionally persists every computed
+cell in the content-addressed run store under ``experiments/runs/`` —
+rerunning a table after a crash (or after the CLI already swept the same
+cells) recomputes nothing.  (The deprecated ``Ctx`` shim that bridged the
+historical constructor signature completed its removal schedule and is
+gone; construct a :class:`Session` directly.)
 
 `--scale quick` (default) runs reduced traces on CPU in minutes;
 `--scale paper` uses the full generator sizes.
@@ -21,7 +21,6 @@ from pathlib import Path
 # importing the API configures the persistent XLA compile cache
 # (repro.uvm.api.session.enable_compile_cache) before any jit runs
 from repro.uvm.api import ALL_BENCH, FEATURED, Session  # noqa: F401
-from repro.uvm.api.session import Ctx  # noqa: F401  (deprecated shim)
 
 # Deprecated: the quick-scale predictor definition now lives with the other
 # predictor configs so the CLI and benchmarks share one source.

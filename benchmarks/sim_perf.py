@@ -186,6 +186,86 @@ def bench_multi_tenant(scale: float, cap: int) -> dict:
     }
 
 
+def bench_fault_tolerance(scale: float, cap: int) -> dict:
+    """The `--manager` section's fault-tolerance row (PR 6): what resilience
+    costs.  Times `state()` serialization, a SnapshotStore save/restore
+    roundtrip (atomic publish + content-hash verify), and the degraded-mode
+    observe path against the healthy learned path on the same stream — the
+    degraded run wraps the trainer in a 100%-rate chaos fault so every
+    round is served by the rule-based floor through the health machine."""
+    import pickle
+    import tempfile
+
+    from repro.configs.predictor_paper import SMOKE
+    from repro.core.incremental import TrainConfig
+    from repro.uvm import runtime as R
+    from repro.uvm.manager import (
+        ChaosSchedule,
+        FaultBatch,
+        FaultInjector,
+        HealthConfig,
+        Outcomes,
+        SnapshotStore,
+    )
+
+    tr = _suite_trace("ATAX", scale, cap)
+    tr = tr.slice(0, min(len(tr), 8000))  # bound the row's wall clock
+    tcfg = TrainConfig(group_size=512, epochs=1, batch_size=128)
+    health = HealthConfig()
+
+    def drive(chaos: bool):
+        mgr = R.manager_for(tr, SMOKE, tcfg, health=health)
+        if chaos:
+            mgr.trainer = FaultInjector(
+                ChaosSchedule(trainer_exc=1.0, seed=0)).wrap_trainer(mgr.trainer)
+        t0 = time.time()
+        fc = 0
+        for g0 in range(0, len(tr), tcfg.group_size):
+            g1 = min(g0 + tcfg.group_size, len(tr))
+            mgr.observe(FaultBatch(tr.page[g0:g1], tr.pc[g0:g1], tr.tb[g0:g1], tr.kernel[g0:g1]))
+            fc += (g1 - g0) // 4  # a plausible far-fault rate for the clock
+            mgr.feedback(Outcomes(fault_count=fc))
+        return time.time() - t0, mgr
+
+    drive(False)  # warm the jit caches (fresh manager below)
+    healthy_s, mgr = drive(False)
+    degraded_s, chaos_mgr = drive(True)
+    assert chaos_mgr.n_fallbacks > 0, "100%-rate trainer fault produced no fallback rounds"
+
+    reps = 5
+    t0 = time.time()
+    for _ in range(reps):
+        state = mgr.state()
+    state_ms = (time.time() - t0) * 1000 / reps
+    snapshot_bytes = len(pickle.dumps(state))
+
+    with tempfile.TemporaryDirectory() as d:
+        store = SnapshotStore(d)
+        t0 = time.time()
+        store.save(1, state)
+        save_ms = (time.time() - t0) * 1000
+        t0 = time.time()
+        _, restored, _ = store.restore()
+        restore_ms = (time.time() - t0) * 1000
+    m2 = R.manager_for(tr, SMOKE, tcfg, health=health)
+    m2.restore(restored)  # the roundtripped state must still load
+
+    rounds = max(1, -(-len(tr) // tcfg.group_size))
+    return {
+        "benchmark": f"fault_tolerance:{tr.name}",
+        "accesses": len(tr),
+        "healthy_s": round(healthy_s, 3),
+        "degraded_s": round(degraded_s, 3),
+        "degraded_x": round(degraded_s / max(healthy_s, 1e-9), 2),
+        "fallback_rounds": int(chaos_mgr.n_fallbacks),
+        "rounds": rounds,
+        "state_ms": round(state_ms, 2),
+        "snapshot_bytes": snapshot_bytes,
+        "save_ms": round(save_ms, 2),
+        "restore_ms": round(restore_ms, 2),
+    }
+
+
 from repro.uvm.api.specs import SCALE_PRESETS, parse_scale  # noqa: E402
 
 
@@ -212,10 +292,17 @@ def main(argv=None) -> int:
         t0 = time.time()
         mux_row = bench_multi_tenant(args.scale, args.cap)
         emit("sim_perf_manager_mux", [mux_row], t0)
+        t0 = time.time()
+        ft_row = bench_fault_tolerance(args.scale, args.cap)
+        emit("sim_perf_manager_fault_tolerance", [ft_row], t0)
         assert mrows[0]["speedup_x"] >= 2.0, mrows[0]  # vectorization must actually pay
         # the mux's demux + per-tenant dispatch overhead must stay modest
         # (it runs the SAME number of predictor samples, just partitioned)
         assert mux_row["overhead_x"] < 5.0, mux_row
+        # the degraded floor skips the learned dispatch entirely, so an
+        # all-faults run must not cost more than a small multiple of the
+        # healthy run (recovery retries still dispatch-and-fail)
+        assert ft_row["degraded_x"] < 5.0, ft_row
         # the committed record follows the file's convention: rewrite only
         # on an explicit --update-baseline, never from a routine/CI run
         if args.update_baseline and BASELINE_PATH.exists():
@@ -226,6 +313,7 @@ def main(argv=None) -> int:
                     "after_vectorized": {k: mrows[0][k] for k in ("vec_s", "vec_blocks_per_s", "speedup_x")},
                 },
                 "multi_tenant": mux_row,
+                "fault_tolerance": ft_row,
                 "rows": mrows,
             }
             BASELINE_PATH.write_text(json.dumps(base, indent=2) + "\n")

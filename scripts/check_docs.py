@@ -31,7 +31,16 @@ SUBCOMMAND_MODULES = {"repro.uvm.cli"}
 #: JSONL/protocol fields that must stay documented on BOTH sides: in the
 #: subcommand's own --help AND in at least one scanned doc (a field the
 #: code grows without docs — or docs promise without code — is drift)
-REQUIRED_FIELD_MENTIONS = {("repro.uvm.cli", "serve"): ("tenant",)}
+REQUIRED_FIELD_MENTIONS = {("repro.uvm.cli", "serve"): ("tenant", "health", "fallback")}
+
+#: flags that must stay documented on BOTH sides too: the fault-tolerance
+#: serve surface (PR 6) ships with docs or CI fails
+REQUIRED_FLAG_MENTIONS = {
+    ("repro.uvm.cli", "serve"): (
+        "--checkpoint-dir", "--checkpoint-every", "--resume", "--inject",
+        "--latency-budget-ms",
+    ),
+}
 
 # python -m <module> [args ...] — up to a backtick, pipe or line end
 CMD_RE = re.compile(r"python (?:-m (?P<mod>[\w\.]+)|(?P<script>[\w\./]+\.py))(?P<args>[^`|\n]*)")
@@ -124,6 +133,22 @@ def main() -> int:
             if f'"{field}"' not in all_docs_text:
                 failures.append(f'the `"{field}"` {sub} line field is documented in none of '
                                 f"{[d.name for d in DOCS]}")
+
+    # flag direction: each required flag must exist in the subcommand's
+    # --help AND be mentioned in at least one scanned doc
+    for (mod, sub), flags in REQUIRED_FLAG_MENTIONS.items():
+        key = (mod, sub)
+        if key not in helps:
+            try:
+                helps[key] = run_help(mod, sub)
+            except AssertionError as e:
+                failures.append(str(e))
+                helps[key] = ""
+        for flag in flags:
+            if flag not in helps[key]:
+                failures.append(f"`{flag}` missing from `python -m {mod} {sub} --help`")
+            if flag not in all_docs_text:
+                failures.append(f"`{flag}` ({sub}) is documented in none of {[d.name for d in DOCS]}")
 
     # coverage direction: a subcommand added to the CLI without a documented
     # invocation is drift too (serve/run/sweep/report must all appear)

@@ -190,10 +190,18 @@ class LearnedOffloadManager(KVOffloadManager):
     the predictor fine-tunes causally on the live serving stream.  The
     decision-stream surface (``stats``) is identical to the other
     managers — ``serving.engine`` reports it unchanged.
+
+    ``checkpoint_dir``/``checkpoint_every``/``resume`` survive engine
+    restarts: the adapter + manager state snapshots into a
+    :class:`~repro.uvm.manager.SnapshotStore` every N observed batches,
+    and ``resume=True`` restores the latest snapshot at construction —
+    the resumed decision stream is bit-identical to an uninterrupted one
+    (same serve-layer invariant as ``cli serve --resume``).
     """
 
     def __init__(self, n_pages: int, hbm_capacity: int, *, manager=None, group: int = 64,
-                 prefetch_per_step: int = 4, reclass_interval: int = 0, reclass_hysteresis: int = 2):
+                 prefetch_per_step: int = 4, reclass_interval: int = 0, reclass_hysteresis: int = 2,
+                 checkpoint_dir=None, checkpoint_every: int = 0, resume: bool = False):
         super().__init__(n_pages, hbm_capacity, prefetch_per_step=prefetch_per_step)
         self.manager = manager if manager is not None else _default_serving_manager(
             n_pages, hbm_capacity,
@@ -206,6 +214,51 @@ class LearnedOffloadManager(KVOffloadManager):
         self.group = group
         self._buf: list[int] = []
         self.last_actions = None
+        # engine-restart survival: snapshot the adapter + manager every
+        # checkpoint_every observed batches (same store as `cli serve`)
+        self._snapshots = None
+        self._checkpoint_every = checkpoint_every
+        self._observed_batches = 0
+        if checkpoint_dir is not None:
+            from repro.uvm.manager import SnapshotStore
+
+            self._snapshots = SnapshotStore(checkpoint_dir)
+            self._snapshots.clean_tmp()
+            if resume and self._snapshots.latest_step() is not None:
+                _step, state, _extra = self._snapshots.restore()
+                self.restore(state)
+
+    # -- snapshot / restore ---------------------------------------------------
+
+    def state(self) -> dict:
+        """Host-side snapshot: the residency adapter's arrays + stats and
+        the wrapped manager's full learned state (versioned + config-signed
+        by :meth:`OversubscriptionManager.state`)."""
+        return {
+            "adapter": {
+                "resident": self.resident.copy(),
+                "evicted_once": self.evicted_once.copy(),
+                "last_interval": self.last_interval.copy(),
+                "attn_mass": self.attn_mass.copy(),
+                "step": self.step,
+                "buf": list(self._buf),
+                "observed_batches": self._observed_batches,
+                "stats": dataclasses.asdict(self.stats),
+            },
+            "manager": self.manager.state(),
+        }
+
+    def restore(self, state: dict) -> None:
+        a = state["adapter"]
+        self.resident = a["resident"].copy()
+        self.evicted_once = a["evicted_once"].copy()
+        self.last_interval = a["last_interval"].copy()
+        self.attn_mass = a["attn_mass"].copy()
+        self.step = a["step"]
+        self._buf = list(a["buf"])
+        self._observed_batches = a["observed_batches"]
+        self.stats = OffloadStats(**a["stats"])
+        self.manager.restore(state["manager"])
 
     # -- the manager adapter --------------------------------------------------
 
@@ -229,6 +282,10 @@ class LearnedOffloadManager(KVOffloadManager):
             was_evicted=self.evicted_once[batch],
             fault_count=self.stats.hbm_misses,
         ))
+        self._observed_batches += 1
+        if (self._snapshots is not None and self._checkpoint_every
+                and self._observed_batches % self._checkpoint_every == 0):
+            self._snapshots.save(self._observed_batches, self.state())
 
     def _freq_dense(self) -> np.ndarray:
         # block id == kv page id (see _observe_batch), so the manager's

@@ -3,7 +3,7 @@
 One stable, composable seam over the five historical entry points
 (``simulator.run``/``run_batch``, ``runtime.run_ours``/``run_ours_many``,
 ``uvmsmart.run_uvmsmart``, ``incremental.run_protocol`` and the
-benchmark-only ``Ctx`` cache):
+benchmark suite's retired in-process cache):
 
 * **Specs** (:mod:`repro.uvm.api.specs`) — frozen, JSON-serializable
   dataclasses (`WorkloadSpec`, `PolicySpec`, `PrefetchSpec`, `ModelSpec`,

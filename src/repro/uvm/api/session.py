@@ -29,7 +29,6 @@ from __future__ import annotations
 import dataclasses
 import os
 import threading
-import warnings
 from pathlib import Path
 
 from repro.uvm.api.specs import (
@@ -153,7 +152,7 @@ class Session:
         kw.setdefault("model", ModelSpec(predictor=PCFG_PAPER, train=PAPER_TRAIN))
         return cls(**kw)
 
-    # -- config views (what the old Ctx exposed) ----------------------------
+    # -- config views (what the retired benchmark context exposed) ----------
 
     @property
     def pcfg(self):
@@ -328,6 +327,7 @@ class Session:
             shared_freq_table=model.tenancy == "mux-shared",
             reclass_interval=model.reclass_interval,
             reclass_hysteresis=model.reclass_hysteresis,
+            health=model.health_config(),
         )
         tcfg = model.train.to_train_config()
 
@@ -417,7 +417,8 @@ class Session:
 
     def _ours_model(self, **kw) -> ModelSpec:
         unknown = set(kw) - {"kind", "use_thrash_term", "use_lucir",
-                             "tenancy", "reclass_interval", "reclass_hysteresis"}
+                             "tenancy", "reclass_interval", "reclass_hysteresis",
+                             "health", "latency_budget_ms"}
         if unknown:
             raise TypeError(f"unknown learned-run options: {sorted(unknown)}")
         return dataclasses.replace(self.model, pretrain=self.default_pretrain, **kw)
@@ -464,6 +465,7 @@ class Session:
             use_thrash_term=model.use_thrash_term, use_lucir=model.use_lucir,
             reclass_interval=model.reclass_interval,
             reclass_hysteresis=model.reclass_hysteresis,
+            health=model.health_config(),
         )
         tr = self.trace(w)
         if tr.tenant is not None and model.tenancy != "merged":
@@ -553,30 +555,3 @@ class Session:
                 persist=spec.model.kind in _BUILTIN_PREDICTORS,
             ))
         return out
-
-
-class Ctx(Session):
-    """Deprecated: the benchmark suite's pre-API context object.
-
-    Kept as a thin shim over :class:`Session` for the historical
-    ``Ctx(scale, cap, pcfg, tcfg, benches)`` signature; new code should
-    construct a :class:`Session` (optionally with a :class:`ModelSpec`).
-    """
-
-    def __init__(self, scale: float = 0.4, cap: int = 6000, pcfg=None, tcfg=None, benches=None):
-        warnings.warn(
-            "benchmarks.common.Ctx is deprecated; use repro.uvm.api.Session",
-            DeprecationWarning, stacklevel=2,
-        )
-        model = ModelSpec(
-            predictor=pcfg if pcfg is not None else ModelSpec().predictor,
-            train=TrainSpec.from_train_config(tcfg) if tcfg is not None else TrainSpec(),
-        )
-        super().__init__(scale=scale, cap=cap, model=model, benches=benches)
-
-    @classmethod
-    def paper(cls) -> "Ctx":
-        """The historical paper-scale context (Ctx.paper() predates
-        Session.paper() and keeps the old constructor signature)."""
-        scale, cap = SCALE_PRESETS["paper"]
-        return cls(scale=scale, cap=cap, pcfg=PCFG_PAPER, tcfg=PAPER_TRAIN.to_train_config())

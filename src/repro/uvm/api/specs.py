@@ -25,6 +25,9 @@ SCHEMA = 2  # bump to invalidate every stored run
 # (per-tenant pipelines) instead of one merged-stream manager, and
 # ModelSpec grew tenancy/re-classification fields — results stored under
 # SCHEMA 1 no longer mean the same thing.
+# (PR 6 grew ModelSpec health/latency_budget_ms WITHOUT a schema bump:
+# `ours` keys move — defaults are behavior-identical, old cells simply
+# recompute — while rule-based cells keep their keys and stored results.)
 
 #: corpus the paper's Section V-A pretraining draws from (5 benchmarks,
 #: different inputs) — shared default of Session.pretrained / fig11 / table7
@@ -134,7 +137,7 @@ class TrainSpec(_SpecBase):
         return cls(**d)
 
 
-#: the paper-scale training schedule (Ctx.paper() historically)
+#: the paper-scale training schedule (Session.paper()'s default)
 PAPER_TRAIN = TrainSpec(group_size=2048, epochs=3, batch_size=256)
 
 #: the shared (trace scale, cap) presets behind every `--scale quick|paper`
@@ -187,7 +190,13 @@ class ModelSpec(_SpecBase):
     shares ONE frequency table across tenants (the paper's single 18KB
     SRAM budget), ``merged`` is the pre-mux single-manager baseline.
     ``reclass_interval``/``reclass_hysteresis`` are the streaming periodic
-    re-classification knobs (0 = classify every observed batch)."""
+    re-classification knobs (0 = classify every observed batch).
+
+    ``health``/``latency_budget_ms`` opt the run into the degraded-mode
+    health state machine (:class:`repro.uvm.manager.HealthConfig`):
+    dispatch failures and non-finite model outputs fall back to rule-based
+    actions instead of raising.  Off by default — the goldens pin the
+    legacy fail-hard path bit for bit."""
 
     kind: str = "transformer"
     predictor: PredictorConfig = CONFIG_QUICK
@@ -198,6 +207,8 @@ class ModelSpec(_SpecBase):
     tenancy: str = "mux"
     reclass_interval: int = 0
     reclass_hysteresis: int = 2
+    health: bool = False
+    latency_budget_ms: float = 0.0
 
     def __post_init__(self):
         if self.tenancy not in TENANCIES:
@@ -215,7 +226,18 @@ class ModelSpec(_SpecBase):
             tenancy=d.get("tenancy", "mux"),
             reclass_interval=d.get("reclass_interval", 0),
             reclass_hysteresis=d.get("reclass_hysteresis", 2),
+            health=d.get("health", False),
+            latency_budget_ms=d.get("latency_budget_ms", 0.0),
         )
+
+    def health_config(self):
+        """The manager-side :class:`~repro.uvm.manager.HealthConfig` this
+        spec asks for (``None`` when the health machine is off)."""
+        if not self.health:
+            return None
+        from repro.uvm.manager import HealthConfig
+
+        return HealthConfig(latency_budget_ms=self.latency_budget_ms)
 
 
 @dataclasses.dataclass(frozen=True)

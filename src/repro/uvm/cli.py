@@ -35,6 +35,18 @@ tenant's next observation, fine-tuning without the thrashing term and
 leaving the fault clock unchanged.  Malformed lines never produce a
 traceback: each yields a structured ``{"error": ..., "line": N}`` record
 (and a non-zero exit under ``--strict``).
+
+``serve`` is fault-tolerant end to end: the degraded-mode health machine
+is always on (action records carry ``"health"``/``"fallback"``; a trainer
+failure degrades to rule-based actions instead of crashing),
+``--checkpoint-dir``/``--checkpoint-every`` persist versioned snapshots at
+round boundaries, ``--resume`` restores the latest one and replays only
+the unconsumed input tail (bit-identical actions), SIGTERM/SIGINT drain
+gracefully (close pending batches, flush a final snapshot + the stats
+record), and ``--inject`` runs a seeded chaos schedule against the live
+pipeline.  Note: ``--inject`` composed with ``--resume`` replays the
+stream-transport faults deterministically but not the dispatch-fault
+positions (the injector's RNG is not checkpointed).
 """
 from __future__ import annotations
 
@@ -249,10 +261,12 @@ def _decode_serve_line(line: str, default_tenant: str):
 
 
 def cmd_serve(args) -> int:
+    import signal
+
     import numpy as np
 
     from repro.configs.predictor_paper import CONFIG_QUICK
-    from repro.uvm.manager import FaultBatch, ManagerConfig, Outcomes, TenantMux
+    from repro.uvm.manager import FaultBatch, HealthConfig, ManagerConfig, Outcomes, TenantMux
 
     n_blocks = (args.n_pages + args.pages_per_block - 1) // args.pages_per_block
     capacity = args.capacity if args.capacity is not None else max(int(n_blocks / args.oversub), 1)
@@ -263,11 +277,28 @@ def cmd_serve(args) -> int:
         pages_per_block=args.pages_per_block,
         classifier=args.classifier, freq_table=args.freq_table,
         reclass_interval=args.reclass_interval, reclass_hysteresis=args.reclass_hysteresis,
+        # the sidecar always runs the degraded-mode health machine: a live
+        # stream must fail SOFT into rule-based actions, never crash
+        health=HealthConfig(latency_budget_ms=args.latency_budget_ms),
     )
     # tenants are admitted on first contact (auto_create): every "tenant"-
     # tagged line gets its own classifier->predictor pipeline; untagged
     # lines share the --default-tenant one (the single-workload case)
     mux = TenantMux(cfg, shared_freq_table=args.shared_freq_table)
+    injector = None
+    if args.inject:
+        from repro.uvm.manager import ChaosSchedule, FaultInjector
+
+        # wrap BEFORE any tenant is admitted so lazily-created managers
+        # inherit the chaos trainer (and restore() rebuilds through it)
+        injector = FaultInjector(ChaosSchedule.parse(args.inject))
+        mux.trainer = injector.wrap_trainer(mux.trainer)
+    store = None
+    if args.checkpoint_dir:
+        from repro.uvm.manager import SnapshotStore
+
+        store = SnapshotStore(args.checkpoint_dir)
+        store.clean_tmp()  # sweep turds a killed writer left behind
     fh = sys.stdin if args.input == "-" else open(args.input)
     pending: dict = {}  # tenant -> pending batch length (None: closed)
     last_fault = 0
@@ -275,14 +306,58 @@ def cmd_serve(args) -> int:
     batches = 0
     errors = 0
     lineno = 0
+    resume_lineno = 0
+    if args.resume:
+        if store is None:
+            print("# serve --resume requires --checkpoint-dir", file=sys.stderr)
+            return 2
+        if store.latest_step() is not None:
+            step, state, extra = store.restore()
+            mux.restore(state)
+            pending = {k: None for k in mux.managers}
+            batches = extra.get("batches", step)
+            errors = extra.get("errors", 0)
+            last_fault = extra.get("last_fault", 0)
+            last_tenant = extra.get("last_tenant", args.default_tenant)
+            resume_lineno = extra.get("lineno", 0)
+            print(f"# resumed batch={batches} lineno={resume_lineno} "
+                  f"tenants={len(mux.managers)} from {store.dir}", flush=True)
 
     def close(tenant, outcomes):
         mux.feedback(outcomes, tenant=tenant)
         pending[tenant] = None
 
+    def extra_record():
+        return {"lineno": lineno, "batches": batches, "errors": errors,
+                "last_fault": last_fault, "last_tenant": last_tenant}
+
+    # SIGTERM/SIGINT: finish the current line, close pending batches, flush
+    # a final snapshot + the stats record, exit 0 (a drain, not a crash)
+    stop: dict = {}
+    installed = {}
+    for signame in ("SIGTERM", "SIGINT"):
+        signum = getattr(signal, signame)
+        try:
+            installed[signum] = signal.signal(
+                signum, lambda s, _frame: stop.__setitem__("signal", s)
+            )
+        except ValueError:  # not the main thread (embedded callers)
+            pass
+    checkpoint_due = False
+    line_iter = injector.transform_lines(fh) if injector is not None else fh
     try:
-        for line in fh:
+        for line in line_iter:
+            if stop:
+                break
+            # snapshots happen only at fully-closed round boundaries (every
+            # tenant's pending batch fed back); a due checkpoint waits here
+            # until the boundary comes around
+            if checkpoint_due and all(v is None for v in pending.values()):
+                store.save(batches, mux.state(), extra=extra_record())
+                checkpoint_due = False
             lineno += 1
+            if lineno <= resume_lineno:
+                continue  # consumed before the snapshot we restored from
             line = line.strip()
             if not line or line.startswith("#"):
                 continue
@@ -326,12 +401,16 @@ def cmd_serve(args) -> int:
                     "n_samples": actions.n_samples,
                     "accuracy": actions.accuracy,
                     "warm": actions.warm,
+                    "health": actions.health,
+                    "fallback": actions.fallback,
                     "prefetch_blocks": np.asarray(actions.prefetch_blocks).tolist(),
                     "pre_evict_blocks": np.asarray(actions.pre_evict_blocks).tolist(),
                 }
                 if tagged:
                     rec["tenant"] = tenant
                 print(json.dumps(rec), flush=True)
+                if store is not None and args.checkpoint_every and batches % args.checkpoint_every == 0:
+                    checkpoint_due = True
             except _ServeLineError as e:
                 errors += 1
                 print(json.dumps({"error": str(e), "line": lineno}), flush=True)
@@ -339,11 +418,23 @@ def cmd_serve(args) -> int:
             if p is not None:
                 close(tenant, Outcomes(fault_count=last_fault))
     finally:
+        for signum, old in installed.items():
+            signal.signal(signum, old)
         if fh is not sys.stdin:
             fh.close()
+    if store is not None:
+        store.save(batches, mux.state(), extra=extra_record())
+    if injector is not None:
+        fired = {k: injector.counts[k] for k in sorted(injector.counts)}
+        print(f"# chaos schedule={json.dumps(injector.schedule.to_dict(), sort_keys=True)} "
+              f"fired={json.dumps(fired)}", flush=True)
+    if stop:
+        print(f"# serve shutdown signal={stop['signal']} (state flushed)", flush=True)
     print(f"# serve batches={batches} predictions={mux.n_predictions} "
           f"patterns={mux.n_models} classes={mux.n_classes} top1={mux.top1:.3f} "
-          f"tenants={len(mux.managers)} errors={errors}")
+          f"tenants={len(mux.managers)} errors={errors} "
+          f"health_faults={mux.n_health_faults} fallbacks={mux.n_fallbacks} "
+          f"recoveries={mux.n_recoveries}")
     return 2 if errors and args.strict else 0
 
 
@@ -406,6 +497,24 @@ def build_parser() -> argparse.ArgumentParser:
                        help="consecutive agreeing windows before a pattern switch")
     p_srv.add_argument("--strict", action="store_true",
                        help="exit non-zero if any malformed line was reported")
+    p_srv.add_argument("--checkpoint-dir", default=None,
+                       help="snapshot directory (versioned, content-hashed manager state; "
+                            "also written once on shutdown)")
+    p_srv.add_argument("--checkpoint-every", type=int, default=0,
+                       help="snapshot after every N observed batches, at the next fully "
+                            "fed-back round boundary (0 = only the shutdown snapshot)")
+    p_srv.add_argument("--resume", action="store_true",
+                       help="restore the latest snapshot in --checkpoint-dir and skip the "
+                            "input lines it already consumed (the resumed action tail is "
+                            "bit-identical to an uninterrupted run)")
+    p_srv.add_argument("--inject", default=None,
+                       help="seeded chaos schedule, 'key=prob,...,seed=N' or '@plan.json' "
+                            "(see repro.uvm.manager.chaos); exercises the health machine — "
+                            "degraded rounds answer with rule-based fallback actions "
+                            "(health/fallback fields on every action record)")
+    p_srv.add_argument("--latency-budget-ms", type=float, default=0.0,
+                       help="per-observe dispatch budget in ms; overruns demote the learned "
+                            "path to degraded health (0 = no budget)")
     return ap
 
 

@@ -8,12 +8,21 @@ drives the trace simulator (:func:`repro.uvm.runtime.run_ours`), the
 serving KV-offload path (:class:`repro.serving.offload.LearnedOffloadManager`)
 and the ``python -m repro.uvm.cli serve`` fault-stream sidecar.
 
-See docs/API.md ("The streaming manager") for the cookbook.
+Fault tolerance rides on top: :class:`HealthConfig` turns on the
+degraded-mode state machine (fail-soft into rule-based actions),
+``state()``/``restore()`` + :class:`SnapshotStore` checkpoint a live
+manager/mux, and :class:`FaultInjector` replays seeded chaos schedules.
+
+See docs/API.md ("The streaming manager", "Fault tolerance") for the
+cookbook.
 """
+from repro.uvm.manager.chaos import ChaosError, ChaosSchedule, FaultInjector
 from repro.uvm.manager.core import (
     Actions,
     EvalRequest,
     FaultBatch,
+    HEALTH_STATES,
+    HealthConfig,
     INTERVAL_FAULTS,
     ManagerConfig,
     Outcomes,
@@ -23,11 +32,13 @@ from repro.uvm.manager.core import (
     prefetch_warm,
 )
 from repro.uvm.manager.multi import MuxActions, TenantMux
+from repro.uvm.manager.snapshot import STATE_VERSION, SnapshotStore
 from repro.uvm.manager.stream import OnlineFeatureStream
 
 __all__ = [
     "OversubscriptionManager",
     "ManagerConfig",
+    "HealthConfig",
     "FaultBatch",
     "Actions",
     "Outcomes",
@@ -36,7 +47,13 @@ __all__ = [
     "TenantMux",
     "MuxActions",
     "OnlineFeatureStream",
+    "SnapshotStore",
+    "ChaosSchedule",
+    "ChaosError",
+    "FaultInjector",
     "prefetch_warm",
     "prefetch_mask",
     "INTERVAL_FAULTS",
+    "HEALTH_STATES",
+    "STATE_VERSION",
 ]

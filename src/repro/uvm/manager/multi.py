@@ -46,6 +46,7 @@ caches), never model state.
 from __future__ import annotations
 
 import dataclasses
+import pickle
 
 import numpy as np
 
@@ -61,7 +62,9 @@ from repro.uvm.manager.core import (
     Outcomes,
     OversubscriptionManager,
     TrainRequest,
+    _cfg_signature,
 )
+from repro.uvm.manager.snapshot import STATE_VERSION
 
 _UNSET = object()
 
@@ -237,24 +240,58 @@ class TenantMux:
 
     def observe(self, batch: FaultBatch) -> MuxActions:
         """One full round: demux, per-tenant classify, ONE batched predictor
-        dispatch, combined actions."""
+        dispatch, combined actions.  With ``cfg.health`` set, each tenant's
+        pre-dispatch guard runs first (a tenant with poisoned params falls
+        back alone) and a batched-dispatch failure demotes every tenant
+        that dispatched — they all fall back this round."""
         pairs = self.observe_begin(batch)
-        evals = [(k, r) for k, r in pairs if r is not None]
-        results = iter(self.trainer.evaluate_many(
-            [r.params for _, r in evals], [r.fs for _, r in evals], [r.n_active for _, r in evals],
-        )) if evals else iter(())
-        return self.observe_finish([next(results) if r is not None else None for _, r in pairs])
+        evals = [(k, r) for k, r in pairs if r is not None and self.managers[k].guard_dispatch(r)]
+        dispatched = {id(r) for _, r in evals}
+        out: list = []
+        if evals:
+            try:
+                out = self.trainer.evaluate_many(
+                    [r.params for _, r in evals], [r.fs for _, r in evals],
+                    [r.n_active for _, r in evals],
+                )
+            except Exception as exc:  # noqa: BLE001 — degraded mode absorbs anything
+                if self.cfg.health is None:
+                    raise
+                for k, _r in evals:
+                    self.managers[k].note_fault(exc)
+                out = [None] * len(evals)
+            else:
+                out = [
+                    res if self.managers[k].check_result(*res) else None
+                    for (k, _r), res in zip(evals, out)
+                ]
+        results = iter(out)
+        return self.observe_finish(
+            [next(results) if (r is not None and id(r) in dispatched) else None for _, r in pairs]
+        )
 
     def feedback(self, outcomes: Outcomes, *, tenant=_UNSET) -> None:
         """Close the last round (or one tenant's pending batch): split the
         outcome report, advance every observed tenant's fault clock, batch
-        the fine-tune dispatches through ONE ``train_group_many``."""
+        the fine-tune dispatches through ONE ``train_group_many``.  With
+        ``cfg.health`` set, a batched train failure demotes every tenant
+        whose fine-tune was staged (their entry updates are lost; the
+        rounds still close)."""
         pairs = self.feedback_begin(outcomes, tenant=tenant)
         treqs = [(k, r) for k, r in pairs if r is not None]
-        self.trainer.train_group_many(
-            [r.entry for _, r in treqs], [r.fs for _, r in treqs], [r.n_active for _, r in treqs],
-            in_et_list=[r.in_et for _, r in treqs], use_lucir=self.cfg.use_lucir,
-        )
+        try:
+            self.trainer.train_group_many(
+                [r.entry for _, r in treqs], [r.fs for _, r in treqs], [r.n_active for _, r in treqs],
+                in_et_list=[r.in_et for _, r in treqs], use_lucir=self.cfg.use_lucir,
+            )
+        except Exception as exc:  # noqa: BLE001
+            if self.cfg.health is None:
+                raise
+            for k, _r in treqs:
+                self.managers[k].note_fault(exc)
+                self.managers[k]._pending = None
+            self.feedback_finish([None] * len(pairs))
+            return
         self.feedback_finish([r.entry if r is not None else None for _, r in pairs])
 
     # -- staged halves (lockstep drivers batch across lanes AND tenants) -----
@@ -323,6 +360,56 @@ class TenantMux:
             if entry is not None:
                 self.managers[k].feedback_finish(entry)
 
+    # -- snapshot / restore --------------------------------------------------
+
+    def state(self) -> dict:
+        """Host-side snapshot of the whole mux: the shared frequency table
+        (serialized ONCE — per-tenant states skip it), the mux-owned flush
+        clock, the dispatch-order accuracy log, and every tenant's manager
+        state in admission order.  Snapshots happen at round boundaries:
+        raises while an observe round or any tenant batch is pending."""
+        if self._round is not None:
+            raise RuntimeError("cannot snapshot mid-round; feedback() the open observe first")
+        for k, m in self.managers.items():
+            if m._pending is not None:
+                raise RuntimeError(f"cannot snapshot: tenant {k!r} has a pending batch")
+        return {
+            "version": STATE_VERSION,
+            "cfg_sig": _cfg_signature(self.cfg),
+            "shared_freq_table": self.shared_freq_table,
+            "shared_freq": pickle.dumps(self._shared_freq) if self._shared_freq is not None else None,
+            "clock": (self._fault_base, self._fault_raw, self._flush_interval),
+            "per_group": list(self.per_group),
+            "tenants": [
+                (k, m.state(include_freq_table=self._shared_freq is None))
+                for k, m in self.managers.items()
+            ],
+        }
+
+    def restore(self, state: dict) -> None:
+        """Inverse of :meth:`state`: rebuilds every tenant's manager (same
+        config, same shared-table topology) and restores each one."""
+        if state.get("version") != STATE_VERSION:
+            raise ValueError(
+                f"snapshot state version {state.get('version')!r} != supported {STATE_VERSION}"
+            )
+        if state.get("cfg_sig") != _cfg_signature(self.cfg):
+            raise ValueError(
+                "snapshot was taken under a different ManagerConfig; "
+                "restore requires an identically-configured mux"
+            )
+        if state.get("shared_freq_table") != self.shared_freq_table:
+            raise ValueError("snapshot and mux disagree on shared_freq_table topology")
+        if state["shared_freq"] is not None:
+            self._shared_freq = pickle.loads(state["shared_freq"])
+        self._fault_base, self._fault_raw, self._flush_interval = state["clock"]
+        self.per_group = list(state["per_group"])
+        self.managers = {}
+        for k, mstate in state["tenants"]:
+            self._create(k).restore(mstate)  # views rebind to the restored shared table
+        self._round = None
+        self._last_feedback = []
+
     # -- combined artifacts --------------------------------------------------
 
     def _advance_shared_clock(self, outcomes: Outcomes) -> None:
@@ -379,3 +466,21 @@ class TenantMux:
     @property
     def per_tenant_top1(self) -> dict:
         return {str(k): m.top1 for k, m in self.managers.items()}
+
+    # -- health views (the serve sidecar's summary line) ---------------------
+
+    @property
+    def n_health_faults(self) -> int:
+        return sum(m.n_health_faults for m in self.managers.values())
+
+    @property
+    def n_fallbacks(self) -> int:
+        return sum(m.n_fallbacks for m in self.managers.values())
+
+    @property
+    def n_recoveries(self) -> int:
+        return sum(m.n_recoveries for m in self.managers.values())
+
+    @property
+    def health_states(self) -> dict:
+        return {str(k): m.health_state for k, m in self.managers.items()}

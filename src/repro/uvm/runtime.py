@@ -48,6 +48,7 @@ from repro.uvm import simulator as S
 from repro.uvm import timing
 from repro.uvm.manager import (
     FaultBatch,
+    HealthConfig,
     ManagerConfig,
     Outcomes,
     OversubscriptionManager,
@@ -125,6 +126,32 @@ def _table_to_host(table: ModelTable) -> dict:
     }
 
 
+def _load_pretrain_blob(cache_path: Path) -> dict:
+    """Read a pretrain memo, verifying integrity when possible.
+
+    New memos are a checksummed envelope ``{"sha256", "payload"}`` (the
+    payload is the pickled host table); a checksum mismatch means the file
+    was torn or bit-rotted and raises so the caller recomputes.  Legacy
+    memos (the raw host-table dict, including the committed
+    experiments/cache ones) load unchanged — they predate the envelope."""
+    obj = pickle.loads(cache_path.read_bytes())
+    if isinstance(obj, dict) and "sha256" in obj and "payload" in obj:
+        digest = hashlib.sha256(obj["payload"]).hexdigest()
+        if digest != obj["sha256"]:
+            raise ValueError(
+                f"pretrain cache checksum mismatch: manifest {obj['sha256'][:12]} "
+                f"!= payload {digest[:12]}"
+            )
+        return pickle.loads(obj["payload"])
+    return obj  # legacy raw-dict memo
+
+
+def _dump_pretrain_blob(blob: dict) -> bytes:
+    """The checksummed envelope :func:`_load_pretrain_blob` verifies."""
+    payload = pickle.dumps(blob)
+    return pickle.dumps({"sha256": hashlib.sha256(payload).hexdigest(), "payload": payload})
+
+
 def pretrain_table(
     corpus: list[Trace],
     pcfg: PredictorConfig,
@@ -149,7 +176,7 @@ def pretrain_table(
     cache_path = PRETRAIN_CACHE_DIR / f"pretrain_{_pretrain_cache_key(corpus, pcfg, tcfg, kind, target_acc, max_rounds)}.pkl"
     if use_cache and cache_path.exists():
         try:
-            blob = pickle.loads(cache_path.read_bytes())
+            blob = _load_pretrain_blob(cache_path)
             table = ModelTable(lambda s: trainer.new_params(s), n_slots=blob["n_slots"])
             from repro.core.model_table import Entry
 
@@ -159,8 +186,15 @@ def pretrain_table(
                     step=e["step"], n_updates=e["n_updates"], last_acc=e["last_acc"],
                 )
             return table
-        except Exception:
-            pass  # truncated/corrupt memo: fall through and retrain
+        except Exception as exc:
+            # truncated/corrupt/checksum-failed memo: warn + retrain rather
+            # than silently serving whatever half-pickle survived the crash
+            import warnings
+
+            warnings.warn(
+                f"pretrain cache {cache_path} unreadable ({exc!r}); recomputing",
+                RuntimeWarning, stacklevel=2,
+            )
     table = ModelTable(lambda s: trainer.new_params(s), n_slots=tcfg.table_slots)
     classifier = PatternClassifier()
     groups = []  # (pattern, FeatureSet, n_active)
@@ -192,7 +226,7 @@ def pretrain_table(
             PRETRAIN_CACHE_DIR.mkdir(parents=True, exist_ok=True)
             # atomic publish: a killed writer must never leave a torn file
             tmp = cache_path.with_suffix(f".tmp.{os.getpid()}")
-            tmp.write_bytes(pickle.dumps(_table_to_host(table)))
+            tmp.write_bytes(_dump_pretrain_blob(_table_to_host(table)))
             os.replace(tmp, cache_path)
         except OSError:
             pass  # read-only checkouts still work, just without the memo
@@ -210,6 +244,7 @@ def _manager_config(
     use_lucir: bool,
     reclass_interval: int = 0,
     reclass_hysteresis: int = 2,
+    health: HealthConfig | None = None,
 ) -> ManagerConfig:
     return ManagerConfig(
         predictor=pcfg, train=tcfg, kind=kind,
@@ -218,6 +253,7 @@ def _manager_config(
         capacity=S.capacity_for(trace.n_blocks, oversubscription),
         use_thrash_term=use_thrash_term, use_lucir=use_lucir,
         reclass_interval=reclass_interval, reclass_hysteresis=reclass_hysteresis,
+        health=health,
     )
 
 
@@ -233,6 +269,7 @@ def manager_for(
     use_lucir: bool = True,
     reclass_interval: int = 0,
     reclass_hysteresis: int = 2,
+    health: HealthConfig | None = None,
 ) -> OversubscriptionManager:
     """An :class:`OversubscriptionManager` configured for one trace's
     geometry (padded block bucket + oversubscribed capacity) — the manager
@@ -243,6 +280,7 @@ def manager_for(
         oversubscription=oversubscription, kind=kind,
         use_thrash_term=use_thrash_term, use_lucir=use_lucir,
         reclass_interval=reclass_interval, reclass_hysteresis=reclass_hysteresis,
+        health=health,
     )
     return OversubscriptionManager(cfg, table=table)
 
@@ -260,6 +298,7 @@ def mux_for(
     shared_freq_table: bool = False,
     reclass_interval: int = 0,
     reclass_hysteresis: int = 2,
+    health: HealthConfig | None = None,
     trainer=None,
 ) -> TenantMux:
     """A :class:`TenantMux` for a tenant-tagged concurrent trace
@@ -275,6 +314,7 @@ def mux_for(
         oversubscription=oversubscription, kind=kind,
         use_thrash_term=use_thrash_term, use_lucir=use_lucir,
         reclass_interval=reclass_interval, reclass_hysteresis=reclass_hysteresis,
+        health=health,
     )
     tenants = [int(t) for t in np.unique(trace.tenant)]
     return TenantMux(
@@ -336,6 +376,7 @@ def run_ours(
     shared_freq_table: bool = False,
     reclass_interval: int = 0,
     reclass_hysteresis: int = 2,
+    health: HealthConfig | None = None,
 ) -> LearnedRunResult:
     """Drive one trace through the streaming manager + simulator.
 
@@ -362,12 +403,14 @@ def run_ours(
             table=table, use_thrash_term=use_thrash_term, use_lucir=use_lucir,
             shared_freq_table=shared_freq_table,
             reclass_interval=reclass_interval, reclass_hysteresis=reclass_hysteresis,
+            health=health,
         )
     else:
         mgr = manager_for(
             trace, pcfg, tcfg, oversubscription=oversubscription, kind=kind,
             table=table, use_thrash_term=use_thrash_term, use_lucir=use_lucir,
             reclass_interval=reclass_interval, reclass_hysteresis=reclass_hysteresis,
+            health=health,
         )
     nb, cap = mgr.cfg.n_blocks, mgr.cfg.capacity
     state = S.init_state(nb, seed)
@@ -447,6 +490,7 @@ def run_ours_many(
     shared_freq_table: bool = False,
     reclass_interval: int = 0,
     reclass_hysteresis: int = 2,
+    health: HealthConfig | None = None,
 ) -> list[LearnedRunResult]:
     """Run the full learned system over MANY traces in lockstep.
 
@@ -481,6 +525,7 @@ def run_ours_many(
             table=tables[li] if tables is not None else None,
             use_thrash_term=use_thrash_term, use_lucir=use_lucir,
             reclass_interval=reclass_interval, reclass_hysteresis=reclass_hysteresis,
+            health=health,
         )
         if build is mux_for:
             kw.update(shared_freq_table=shared_freq_table, trainer=trainer)

@@ -8,11 +8,11 @@ The heavier guarantees pinned here:
 * a policy registered via ``register_policy`` sweeps through the vmapped
   ``run_batch`` path with correct counters, without touching
   ``src/repro/uvm/simulator.py``;
-* the deprecated ``Ctx.sim`` / raw ``run_ours`` paths return bit-identical
-  counters to ``Session``.
+* the raw ``run_ours`` path returns bit-identical counters to ``Session``
+  (and the retired ``Ctx`` shim stays gone).
 """
 import json
-import warnings
+import os
 
 import pytest
 
@@ -202,6 +202,46 @@ def test_run_store_roundtrip_and_corruption(tmp_path):
         assert [k for k, _ in RunStore(tmp_path / "runs").records()] == []
 
 
+def test_run_store_killed_writer_leaves_no_damage(tmp_path):
+    """A writer killed mid-publish leaves only a `.tmp.<pid>` turd: the
+    published record (if any) still reads back, the turd is invisible to
+    get()/records(), and a later publish succeeds over it."""
+    store = RunStore(tmp_path / "runs")
+    spec = CellSpec(WorkloadSpec("ATAX"))
+    p = store.put(spec, {"faults": 1})
+    # simulate a crash between tmp-write and os.replace: a half-written
+    # tmp file sits next to the (old) published record
+    turd = p.with_suffix(".tmp.99999")
+    turd.write_text('{"schema": 2, "key": "' + spec.key + '", "result": {"faults":')
+    assert store.get(spec) == {"faults": 1}
+    assert [k for k, _ in store.records()] == [spec.key]
+    # republish over the turd: atomic replace still lands the new record
+    assert store.put(spec, {"faults": 2}) == p
+    assert store.get(spec) == {"faults": 2}
+    assert turd.exists()  # turds are inert, never silently adopted
+
+
+def test_run_store_torn_record_reads_as_miss_then_heals(tmp_path):
+    """A torn published file (crash mid-sector, disk-full truncation) must
+    read as a miss everywhere, and re-running the cell heals it."""
+    store = RunStore(tmp_path / "runs")
+    spec = CellSpec(WorkloadSpec("ATAX"))
+    p = store.put(spec, {"faults": 3})
+    whole = p.read_text()
+    for cut in (1, len(whole) // 2, len(whole) - 2):  # torn at any offset
+        p.write_text(whole[:cut])
+        assert store.get(spec) is None
+        assert [k for k, _ in store.records()] == []
+    # wrong-key aliasing (a renamed file) is also rejected, not served
+    other = CellSpec(WorkloadSpec("BICG"))
+    store.put(other, {"faults": 9})
+    os.replace(store.path(other.key), p)
+    assert store.get(spec) is None
+    # the heal: republishing restores a byte-identical good record
+    assert store.put(spec, {"faults": 3}) == p
+    assert p.read_text() == whole and store.get(spec) == {"faults": 3}
+
+
 def test_run_store_disabled(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_RUN_STORE", "0")
     store = RunStore(tmp_path / "runs")
@@ -238,30 +278,22 @@ def test_random_policy_not_persisted(tmp_path):
 # --- Session vs the deprecated entry points ---------------------------------
 
 
-def test_session_sim_bit_identical_to_ctx_and_run(tmp_path):
+def test_session_sim_bit_identical_to_run(tmp_path):
     s = _quick_session(tmp_path, scale=0.25, cap=1500)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        from benchmarks.common import Ctx
-
-        ctx = Ctx(scale=0.25, cap=1500)
-    ctx.store = RunStore(tmp_path / "ctx-runs")
     for pol, pf, os_ in [("lru", "tree", 1.25), ("hpe", "demand", 1.5), ("belady", "demand", 1.25)]:
         want = S.run(s.trace("NW"), policy=pol, prefetch=pf, oversubscription=os_).stats
         assert s.sim("NW", pol, pf, os_) == want
-        assert ctx.sim("NW", pol, pf, os_) == want
 
 
-def test_ctx_shim_is_deprecated():
+def test_ctx_shim_is_gone():
+    """The deprecated Ctx alias completed its removal schedule: importing
+    it must fail, while benchmarks.common's surviving re-exports stay."""
     from benchmarks import common
 
-    with pytest.warns(DeprecationWarning):
-        common.Ctx(scale=0.25, cap=100)
-    with pytest.warns(DeprecationWarning):
-        paper = common.Ctx.paper()  # the historical paper-scale constructor
-    assert paper.scale == 1.0 and paper.cap == 60_000
-    assert paper.tcfg.group_size == 2048
-    # the moved quick-config is re-exported under its old name
+    assert not hasattr(common, "Ctx")
+    with pytest.raises(ImportError):
+        from repro.uvm.api.session import Ctx  # noqa: F401
+    # the moved quick-config is still re-exported under its old name
     from repro.configs.predictor_paper import CONFIG_QUICK
 
     assert common.PCFG_QUICK is CONFIG_QUICK

@@ -1,0 +1,660 @@
+"""Fault-tolerant streaming (ISSUE 6 tentpole).
+
+The guarantees pinned here:
+
+* **snapshot/restore is invisible**: a `run_ours` drive interrupted at ANY
+  group boundary, snapshotted, and resumed into a FRESH manager finishes
+  with counters and accuracy bit-identical to the committed golden (and a
+  hypothesis net sweeps arbitrary snapshot points on the stub stack);
+* the :class:`TenantMux` composes per-tenant snapshots (shared frequency
+  table serialized exactly once) with the same bit-identical guarantee;
+* :class:`SnapshotStore` publishes atomically, GCs old snapshots, detects
+  payload corruption by checksum, and sweeps crashed-writer turds;
+* the **health state machine** walks healthy -> degraded (exponential
+  backoff, rule-based fallback actions) -> recovering -> healthy, catching
+  dispatch exceptions, NaN params/outputs and latency-budget overruns —
+  and with health off (the default) failures still fail HARD, so the
+  golden paths can never silently degrade;
+* the seeded chaos harness (:class:`FaultInjector`) is deterministic and
+  the `cli serve --inject` / `--checkpoint-dir --resume` paths survive
+  injected faults and kill/resume with a bit-identical tail.
+"""
+import dataclasses
+import importlib.util
+import json
+import pickle
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.configs.predictor_paper import SMOKE
+from repro.core.incremental import TrainConfig
+from repro.uvm import runtime as R
+from repro.uvm import simulator as S
+from repro.uvm import trace as T
+from repro.uvm.manager import (
+    ChaosError,
+    ChaosSchedule,
+    FaultBatch,
+    FaultInjector,
+    HealthConfig,
+    ManagerConfig,
+    Outcomes,
+    OversubscriptionManager,
+    SnapshotStore,
+    STATE_VERSION,
+    TenantMux,
+)
+
+GOLDEN = json.loads((Path(__file__).parent / "golden" / "ours_golden.json").read_text())
+SCALE, CAP = 0.3, 3000  # must match tests/golden/generate_ours_golden.py
+TCFG = TrainConfig(group_size=1024, epochs=2, batch_size=128)
+
+
+def _bench_trace(name: str) -> T.Trace:
+    tr = T.get_trace(name, scale=SCALE)
+    return tr.slice(0, min(len(tr), CAP))
+
+
+# --- the stub predictor stack (fast, deterministic, no jit retraces) ---------
+
+
+class _StubTrainer:
+    """Pure-numpy trainer double (same contract as test_multi's): the
+    snapshot/health plumbing under test lives in the manager, not the NN."""
+
+    def new_params(self, seed: int = 0):
+        return np.zeros(1)
+
+    def evaluate(self, params, fs, n_active: int):
+        pred = fs.delta[:, -1] % max(n_active, 1)
+        return pred == fs.label, pred
+
+    def evaluate_many(self, params_list, fs_list, n_active_list):
+        return [self.evaluate(p, f, n) for p, f, n in zip(params_list, fs_list, n_active_list)]
+
+    def train_group(self, entry, fs, n_active, *, in_et=None, use_lucir=False, rng=None):
+        entry.n_updates += 1
+        return entry
+
+    def train_group_many(self, entries, fs_list, n_active_list, *, in_et_list=None, use_lucir=False):
+        for e in entries:
+            e.n_updates += 1
+        return entries
+
+
+class _FlakyTrainer(_StubTrainer):
+    """Raises on a scripted set of evaluate calls (dispatch failures)."""
+
+    def __init__(self, fail_on=()):
+        self.calls = 0
+        self.fail_on = set(fail_on)
+
+    def evaluate(self, params, fs, n_active: int):
+        self.calls += 1
+        if self.calls in self.fail_on:
+            raise RuntimeError(f"flaky dispatch #{self.calls}")
+        return super().evaluate(params, fs, n_active)
+
+    def evaluate_many(self, params_list, fs_list, n_active_list):
+        self.calls += 1
+        if self.calls in self.fail_on:
+            raise RuntimeError(f"flaky batched dispatch #{self.calls}")
+        return [_StubTrainer.evaluate(self, p, f, n)
+                for p, f, n in zip(params_list, fs_list, n_active_list)]
+
+
+def _stub_cfg(**kw) -> ManagerConfig:
+    kw.setdefault("predictor", SMOKE)
+    kw.setdefault("train", TrainConfig(group_size=64, epochs=1, batch_size=32))
+    kw.setdefault("n_pages", 1024)
+    kw.setdefault("n_blocks", 64)
+    kw.setdefault("capacity", 16)
+    kw.setdefault("use_lucir", False)
+    kw.setdefault("use_thrash_term", False)
+    return ManagerConfig(**kw)
+
+
+def _stub_manager(trainer=None, **kw) -> OversubscriptionManager:
+    return OversubscriptionManager(_stub_cfg(**kw), trainer=trainer or _StubTrainer())
+
+
+def _batch(rng, n=64):
+    return FaultBatch(rng.integers(0, 1024, n))
+
+
+def _drive(mgr, rng, rounds, clock_step=128, start_clock=0):
+    """Drive `rounds` observe/feedback rounds; returns the action tuples
+    (the full decision stream, for bit-identity asserts)."""
+    out, clock = [], start_clock
+    for _ in range(rounds):
+        b = _batch(rng)
+        a = mgr.observe(b)
+        clock += clock_step
+        mgr.feedback(Outcomes(was_evicted=np.zeros(len(b), bool), fault_count=clock))
+        out.append((
+            tuple(np.asarray(a.prefetch_blocks).tolist()),
+            tuple(np.asarray(a.pre_evict_blocks).tolist()),
+            None if a.counters is None else tuple(np.asarray(a.counters).tolist()),
+            a.pattern, a.accuracy, a.warm, a.health, a.fallback,
+        ))
+    return out
+
+
+# --- snapshot/restore: bit-identical continuation ----------------------------
+
+
+def test_manager_snapshot_restore_bit_identical_stub():
+    """Split a 12-round drive at round 5: snapshot -> pickle -> restore
+    into a FRESH manager; the tail decision stream and accuracy match the
+    uninterrupted twin exactly."""
+    ref = _drive(_stub_manager(), np.random.default_rng(0), 12)
+
+    a = _stub_manager()
+    _drive(a, np.random.default_rng(0), 12)  # twin consuming the same rng
+
+    m1 = _stub_manager()
+    rng = np.random.default_rng(0)
+    head = _drive(m1, rng, 5)
+    blob = pickle.dumps(m1.state())  # through bytes, like a real checkpoint
+    m2 = _stub_manager()
+    m2.restore(pickle.loads(blob))
+    tail = _drive(m2, rng, 7, start_clock=5 * 128)
+    assert head + tail == ref
+    assert m2.top1 == a.top1 and m2.n_predictions == a.n_predictions
+    assert m2.vocab.table == a.vocab.table
+    assert np.array_equal(m2.freq_table.tags, a.freq_table.tags)
+    assert np.array_equal(m2._chain_li, a._chain_li)
+
+
+def test_snapshot_rejects_pending_version_and_config_drift():
+    m = _stub_manager()
+    m.observe_begin(_batch(np.random.default_rng(1)))
+    with pytest.raises(RuntimeError, match="pending"):
+        m.state()
+    m.observe_finish(None, None)
+    m.feedback(Outcomes(np.zeros(64, bool), 64))
+    st = m.state()
+    bad = dict(st, version=STATE_VERSION + 1)
+    with pytest.raises(ValueError, match="version"):
+        _stub_manager().restore(bad)
+    other = _stub_manager(capacity=8)  # different geometry
+    with pytest.raises(ValueError, match="different ManagerConfig"):
+        other.restore(st)
+    # health on/off does NOT change the signature: enabling the health
+    # machine on resume of a legacy snapshot is legitimate (serve does it)
+    healthy = _stub_manager(health=HealthConfig())
+    healthy.restore(st)
+    assert healthy.health_state == "healthy"
+
+
+def test_golden_pinned_snapshot_restore_real_predictor():
+    """The committed ATAX golden, reproduced through a mid-run checkpoint:
+    drive run_ours's exact loop, snapshot after group 1, restore into a
+    fresh manager_for() product, finish — stats AND accuracy match the
+    golden bit for bit."""
+    tr = _bench_trace("ATAX")
+    mgr = R.manager_for(tr, SMOKE, TCFG)
+    nb, cap = mgr.cfg.n_blocks, mgr.cfg.capacity
+    state = S.init_state(nb, 0)
+    blocks = tr.block.astype(np.int32)
+    nxt = S.next_use_for(tr)
+    G = TCFG.group_size
+    bounds = list(range(0, len(tr), G))
+    for i, g0 in enumerate(bounds):
+        g1 = min(g0 + G, len(tr))
+        actions = mgr.observe(R._group_batch(tr, g0, g1))
+        state = R._apply_actions(state, actions, nb, cap)
+        state, outs = S.run_segment(
+            state, blocks[g0:g1], nxt[g0:g1],
+            capacity=cap, policy="learned", prefetch="demand", n_valid=tr.n_blocks,
+        )
+        mgr.feedback(Outcomes(np.asarray(outs["was_evicted"]), int(state.fault_count)))
+        if i == 1:  # checkpoint + process death + resume
+            blob = pickle.dumps(mgr.state())
+            mgr = R.manager_for(tr, SMOKE, TCFG)
+            mgr.restore(pickle.loads(blob))
+    res = R._result(mgr, state, len(tr))
+    g = GOLDEN["ATAX"]
+    assert res.stats == g["stats"]
+    assert res.top1 == g["top1"]
+    assert res.warm_top1 == g["warm_top1"]
+    assert res.per_group_acc == g["per_group_acc"]
+    assert res.n_predictions == g["n_predictions"]
+
+
+@pytest.mark.parametrize("shared", [False, True])
+def test_mux_snapshot_restore_bit_identical(shared):
+    """Tenant-tagged drive through TenantMux, snapshotted mid-stream and
+    restored into a fresh mux: identical accuracy + frequency state per
+    tenant.  The shared frequency table is serialized ONCE and rebound to
+    every restored tenant."""
+    def mk():
+        return TenantMux(_stub_cfg(), [0, 1], shared_freq_table=shared,
+                         auto_create=False, trainer=_StubTrainer())
+
+    def drive(mux, rng, rounds, start_clock=0):
+        clock = start_clock
+        for _ in range(rounds):
+            pages = rng.integers(0, 1024, 48)
+            tags = rng.integers(0, 2, 48)
+            mux.observe(FaultBatch(pages, tenant=tags))
+            clock += 96
+            mux.feedback(Outcomes(np.zeros(48, bool), clock))
+
+    ref = mk()
+    drive(ref, np.random.default_rng(3), 10)
+
+    m1 = mk()
+    rng = np.random.default_rng(3)
+    drive(m1, rng, 4)
+    blob = pickle.dumps(m1.state())
+    m2 = mk()
+    m2.restore(pickle.loads(blob))
+    if shared:  # one shared table object, rebound across all tenants
+        assert m2.managers[0].freq_table._table is m2.managers[1].freq_table._table
+    drive(m2, rng, 6, start_clock=4 * 96)
+    assert m2.top1 == ref.top1
+    assert m2.per_tenant_top1 == ref.per_tenant_top1
+    for t in (0, 1):
+        a, b = m2.managers[t], ref.managers[t]
+        assert np.array_equal(a.freq_table.dense(64), b.freq_table.dense(64))
+        assert a.vocab.table == b.vocab.table
+        assert a._flush_interval == b._flush_interval
+
+
+def test_mux_snapshot_rejects_mid_round():
+    mux = TenantMux(_stub_cfg(), [0], auto_create=False, trainer=_StubTrainer())
+    mux.observe(FaultBatch(np.arange(32), tenant=np.zeros(32, np.int64)))
+    with pytest.raises(RuntimeError, match="mid-round"):
+        mux.state()
+
+
+# --- SnapshotStore -----------------------------------------------------------
+
+
+def test_snapshot_store_roundtrip_gc_and_corruption(tmp_path):
+    store = SnapshotStore(tmp_path / "ckpt", keep=3)
+    assert store.latest_step() is None
+    with pytest.raises(FileNotFoundError):
+        store.restore()
+    for step in range(1, 6):
+        store.save(step, {"n": step}, extra={"batches": step * 10})
+    assert store.steps() == [3, 4, 5]  # GC keeps the newest `keep`
+    step, state, extra = store.restore()
+    assert (step, state, extra) == (5, {"n": 5}, {"batches": 50})
+    assert store.restore(step=3)[1] == {"n": 3}
+    # flip one payload byte: the manifest checksum must catch it
+    payload = store.dir / f"snap_{4:09d}" / "state.pkl"
+    raw = bytearray(payload.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    payload.write_bytes(bytes(raw))
+    with pytest.raises(ValueError, match="content-hash"):
+        store.restore(step=4)
+    # a crashed writer's tmp dir is swept, never adopted
+    turd = tmp_path / "ckpt" / "snap_000000099.tmp"
+    turd.mkdir()
+    (turd / "state.pkl").write_bytes(b"half")
+    store.clean_tmp()
+    assert not turd.exists() and store.latest_step() == 5
+
+
+# --- the health state machine ------------------------------------------------
+
+
+def test_health_off_fails_hard():
+    """cfg.health=None (the default, every golden path) must re-raise the
+    dispatch error unchanged — no silent degradation."""
+    m = _stub_manager(trainer=_FlakyTrainer(fail_on={1}))
+    with pytest.raises(RuntimeError, match="flaky dispatch"):
+        m.observe(_batch(np.random.default_rng(0)))
+
+
+def test_health_state_machine_walk():
+    """2 consecutive dispatch failures: backoff doubles 1 -> 2, the blackout
+    rounds serve fallback actions, then recovery needs 2 clean dispatches
+    before re-promoting to healthy."""
+    m = _stub_manager(trainer=_FlakyTrainer(fail_on={1, 2}),
+                      health=HealthConfig(recovery_successes=2))
+    acts = _drive(m, np.random.default_rng(0), 10)
+    healths = [a[6] for a in acts]
+    fallbacks = [a[7] for a in acts]
+    assert healths == (
+        ["degraded"]                # round 1: fault #1, backoff=1
+        + ["degraded"]              # round 2: backoff burn (blackout)
+        + ["degraded"]              # round 3: recovery retry -> fault #2, backoff=2
+        + ["degraded", "degraded"]  # rounds 4-5: burn the doubled backoff
+        + ["recovering", "healthy"]  # rounds 6-7: two clean dispatches
+        + ["healthy"] * 3
+    )
+    assert fallbacks == [True] * 5 + [False] * 5
+    assert m.n_health_faults == 2
+    assert m.n_fallbacks == 5
+    assert m.n_recoveries == 1
+    assert m.health_state == "healthy"
+    assert "flaky" in m.last_health_error
+
+
+def test_fallback_actions_are_rule_based_floor():
+    """Degraded rounds serve buddy tree-prefetch + pure-LRU pre-eviction:
+    counters=None (gate closed), warm=False, bounded prefetch."""
+    m = _stub_manager(trainer=_FlakyTrainer(fail_on={1}), health=HealthConfig())
+    pages = np.tile([0, 16, 320], 22)  # blocks {0, 1, 20}, enough for windows
+    a = m.observe(FaultBatch(pages))
+    assert a.fallback and a.health == "degraded"
+    assert a.counters is None and not a.warm and a.accuracy is None
+    assert set(np.asarray(a.prefetch_blocks)) == {0, 1, 21}  # buddy siblings
+    m.feedback(Outcomes(np.zeros(len(pages), bool), 64))
+    assert m.n_fallbacks == 1
+
+
+def test_nan_params_quarantined_and_reinitialized():
+    """A NaN-poisoned model entry is caught BEFORE dispatch and its slot
+    re-initialized, so the retry after backoff runs a fresh model."""
+    m = _stub_manager(health=HealthConfig(recovery_successes=1))
+    rng = np.random.default_rng(2)
+    _drive(m, rng, 1)
+    slot = next(iter(m.table.slots))  # the one pattern slot the round used
+    poisoned = m.table.slots[slot]
+    poisoned.params = np.full(1, np.nan)
+    acts = _drive(m, rng, 3)
+    assert [a[6] for a in acts] == ["degraded", "degraded", "healthy"]
+    assert m.n_health_faults == 1 and "non-finite model params" in m.last_health_error
+    assert np.all(np.isfinite(m.table.slots[slot].params))  # quarantine re-init
+
+
+def test_nan_output_and_latency_budget_demote():
+    class _NaNTrainer(_StubTrainer):
+        def evaluate(self, params, fs, n_active):
+            return np.full(len(fs.label), np.nan), np.full(len(fs.label), np.nan)
+
+    m = _stub_manager(trainer=_NaNTrainer(), health=HealthConfig(recovery_successes=1))
+    a = m.observe(_batch(np.random.default_rng(0)))
+    assert a.fallback and m.n_health_faults == 1
+    assert "non-finite predictor output" in m.last_health_error
+
+    class _SlowTrainer(_StubTrainer):
+        def evaluate(self, params, fs, n_active):
+            import time
+
+            time.sleep(0.02)
+            return super().evaluate(params, fs, n_active)
+
+    m2 = _stub_manager(trainer=_SlowTrainer(),
+                       health=HealthConfig(latency_budget_ms=1.0))
+    a2 = m2.observe(_batch(np.random.default_rng(0)))
+    assert a2.fallback and "budget" in m2.last_health_error
+
+
+def test_train_failure_closes_round_without_update():
+    class _TrainBomb(_StubTrainer):
+        def train_group(self, entry, fs, n_active, **kw):
+            raise RuntimeError("train boom")
+
+    m = _stub_manager(trainer=_TrainBomb(), health=HealthConfig())
+    rng = np.random.default_rng(0)
+    b = _batch(rng)
+    m.observe(b)
+    m.feedback(Outcomes(np.zeros(len(b), bool), 64))  # must not raise
+    assert m.n_health_faults == 1 and m._pending is None
+    # and with health off the same failure is fatal
+    m2 = _stub_manager(trainer=_TrainBomb())
+    b2 = _batch(rng)
+    m2.observe(b2)
+    with pytest.raises(RuntimeError, match="train boom"):
+        m2.feedback(Outcomes(np.zeros(len(b2), bool), 64))
+
+
+def test_mux_batched_dispatch_failure_degrades_all_tenants():
+    mux = TenantMux(_stub_cfg(health=HealthConfig(recovery_successes=1)), [0, 1],
+                    auto_create=False, trainer=_FlakyTrainer(fail_on={1}))
+    pages, tags = np.arange(48) * 16, np.tile([0, 1], 24)
+    mux.observe(FaultBatch(pages, tenant=tags))
+    mux.feedback(Outcomes(np.zeros(48, bool), 64))
+    assert mux.n_health_faults == 2  # both tenants rode the failed dispatch
+    assert set(mux.health_states.values()) == {"degraded"}
+    for _ in range(3):
+        mux.observe(FaultBatch(pages, tenant=tags))
+        mux.feedback(Outcomes(np.zeros(48, bool), 64))
+    assert set(mux.health_states.values()) == {"healthy"}
+    assert mux.n_recoveries == 2
+
+
+# --- the chaos harness -------------------------------------------------------
+
+
+def test_chaos_schedule_parse_and_validation(tmp_path):
+    s = ChaosSchedule.parse("trainer_exc=0.3,nan_output=0.1,seed=7")
+    assert (s.trainer_exc, s.nan_output, s.seed) == (0.3, 0.1, 7)
+    plan = tmp_path / "plan.json"
+    plan.write_text(json.dumps({"drop_batch": 0.5, "seed": 9}))
+    s2 = ChaosSchedule.parse(f"@{plan}")
+    assert s2.drop_batch == 0.5 and s2.seed == 9
+    assert ChaosSchedule.parse("") == ChaosSchedule()
+    with pytest.raises(ValueError, match="unknown chaos keys"):
+        ChaosSchedule.parse("typo_key=0.5")
+    with pytest.raises(ValueError, match="not key=value"):
+        ChaosSchedule.parse("trainer_exc")
+    with pytest.raises(ValueError, match=r"outside \[0, 1\]"):
+        ChaosSchedule(trainer_exc=1.5)
+    assert ChaosSchedule.parse("seed=3").to_dict()["seed"] == 3
+
+
+def test_chaos_injection_is_seed_deterministic():
+    sched = ChaosSchedule(seed=11, trainer_exc=0.5, train_exc=0.3, nan_params=0.2)
+
+    def run():
+        inj = FaultInjector(sched)
+        m = _stub_manager(trainer=inj.wrap_trainer(_StubTrainer()),
+                          health=HealthConfig(recovery_successes=1))
+        acts = _drive(m, np.random.default_rng(5), 20)
+        return dict(inj.counts), [a[6] for a in acts], m.top1
+
+    assert run() == run()
+    counts, healths, _ = run()
+    assert counts["trainer_exc"] > 0 and "degraded" in healths and "healthy" in healths
+
+
+def test_chaos_trainer_raises_chaos_error_without_health():
+    inj = FaultInjector(ChaosSchedule(seed=0, trainer_exc=1.0))
+    m = _stub_manager(trainer=inj.wrap_trainer(_StubTrainer()))
+    with pytest.raises(ChaosError):
+        m.observe(_batch(np.random.default_rng(0)))
+
+
+def test_chaos_freq_table_wrapper_drops_updates():
+    from repro.core.policy import PredictionFrequencyTable
+
+    inj = FaultInjector(ChaosSchedule(seed=0, drop_freq_update=1.0))
+    t = inj.wrap_freq_table(PredictionFrequencyTable())
+    t.update(np.asarray([1, 2, 3]))
+    assert t.lookup(1) == -1  # never admitted: the update was dropped
+    assert int(np.sum(t.counters)) == 0
+    assert inj.counts["drop_freq_update"] == 1  # one fire per update() call
+
+
+def test_chaos_transform_lines():
+    obs = [json.dumps({"pages": [i]}) for i in range(4)]
+    fb = json.dumps({"feedback": {"fault_count": 1}})
+    lines = [obs[0], "# comment", "", fb, obs[1], obs[2], obs[3]]
+    # pass-through schedule: byte-identical stream, no randomness consumed
+    inj = FaultInjector(ChaosSchedule(seed=0))
+    assert list(inj.transform_lines(lines)) == lines
+    # drop everything droppable: only blanks/comments + feedback survive
+    # losing feedback too leaves just the structural lines
+    inj2 = FaultInjector(ChaosSchedule(seed=0, drop_batch=1.0, lose_feedback=1.0))
+    assert list(inj2.transform_lines(lines)) == ["# comment", ""]
+    # delayed feedback is re-delivered after the next delivered line
+    inj3 = FaultInjector(ChaosSchedule(seed=0, delay_feedback=1.0))
+    out = list(inj3.transform_lines([obs[0], fb, obs[1]]))
+    assert out == [obs[0], obs[1], fb]
+    # a held line at EOF still drains
+    out2 = list(inj3.transform_lines([obs[0], fb]))
+    assert out2 == [obs[0], fb]
+    # duplication doubles observe lines deterministically
+    inj4 = FaultInjector(ChaosSchedule(seed=0, dup_batch=1.0))
+    assert list(inj4.transform_lines([obs[0]])) == [obs[0], obs[0]]
+
+
+# --- serve hardening (in-process, for coverage) ------------------------------
+
+
+def _serve_lines(n_batches=8, pages_per=40):
+    rng = np.random.default_rng(42)
+    lines, clock = [], 0
+    for b in range(n_batches):
+        t = "A" if b % 2 == 0 else "B"
+        pages = rng.integers(0, 300, pages_per).tolist()
+        lines.append(json.dumps({"pages": pages, "tenant": t}))
+        clock += 64
+        lines.append(json.dumps({"feedback": {"was_evicted": [False] * pages_per,
+                                              "fault_count": clock}, "tenant": t}))
+    return lines
+
+
+_SERVE_ARGS = ["--n-pages", "300", "--pages-per-block", "4",
+               "--capacity", "16", "--group-size", "32"]
+
+
+def _recs(out):
+    return [json.loads(l) for l in out.strip().splitlines() if l.startswith("{")]
+
+
+def test_cli_serve_inject_never_tracebacks(tmp_path, capsys):
+    """Chaos-injected serve: exit 0, structured records only, the health
+    machine degrades then recovers, and the chaos summary line reports
+    what fired."""
+    from repro.uvm import cli
+
+    stream = tmp_path / "faults.jsonl"
+    stream.write_text("\n".join(_serve_lines(12)) + "\n")
+    assert cli.main(["serve", "--input", str(stream), *_SERVE_ARGS,
+                     "--inject", "trainer_exc=0.4,seed=3"]) == 0
+    out = capsys.readouterr().out
+    assert "Traceback" not in out
+    acts = [r for r in _recs(out) if "batch" in r]
+    healths = [a["health"] for a in acts]
+    assert "degraded" in healths and "healthy" in healths
+    assert any(a["fallback"] for a in acts)
+    assert "# chaos schedule=" in out and "fired=" in out
+    assert "health_faults=" in out and "fallbacks=" in out
+
+
+def test_cli_serve_checkpoint_resume_bit_identical_tail(tmp_path, capsys):
+    """Kill/resume invariant: run the full stream once for reference; run
+    a truncated prefix with checkpointing (simulating a kill), then
+    --resume on the full stream — the resumed tail records and the final
+    summary are byte-identical to the uninterrupted run."""
+    from repro.uvm import cli
+
+    lines = _serve_lines(12)
+    full, head = tmp_path / "full.jsonl", tmp_path / "head.jsonl"
+    full.write_text("\n".join(lines) + "\n")
+    head.write_text("\n".join(lines[:12]) + "\n")  # 6 closed batches
+    ck = tmp_path / "ckpt"
+
+    assert cli.main(["serve", "--input", str(full), *_SERVE_ARGS]) == 0
+    ref = capsys.readouterr().out.strip().splitlines()
+
+    assert cli.main(["serve", "--input", str(head), *_SERVE_ARGS,
+                     "--checkpoint-dir", str(ck), "--checkpoint-every", "2"]) == 0
+    capsys.readouterr()
+    store = SnapshotStore(ck)
+    assert store.latest_step() == 6  # final flush at EOF
+
+    assert cli.main(["serve", "--input", str(full), *_SERVE_ARGS,
+                     "--checkpoint-dir", str(ck), "--resume"]) == 0
+    res = capsys.readouterr().out.strip().splitlines()
+    assert any(l.startswith("# resumed batch=6") for l in res)
+    tail = [l for l in res if l.startswith("{")]
+    ref_tail = [l for l in ref if l.startswith("{")][6:]
+    assert tail == ref_tail  # byte-identical records
+    assert res[-1] == ref[-1]  # identical final summary
+
+    # resuming from an EARLIER snapshot replays the gap identically too
+    # (the resume run above flushed its own final snapshot; prune back to 4)
+    import shutil
+
+    for s in SnapshotStore(ck).steps():
+        if s != 4:
+            shutil.rmtree(store.dir / f"snap_{s:09d}")
+    assert cli.main(["serve", "--input", str(full), *_SERVE_ARGS,
+                     "--checkpoint-dir", str(ck), "--resume"]) == 0
+    res2 = capsys.readouterr().out.strip().splitlines()
+    assert any(l.startswith("# resumed batch=4") for l in res2)
+    assert [l for l in res2 if l.startswith("{")] == [l for l in ref if l.startswith("{")][4:]
+
+
+def test_cli_serve_resume_requires_checkpoint_dir(tmp_path, capsys):
+    from repro.uvm import cli
+
+    stream = tmp_path / "s.jsonl"
+    stream.write_text("\n".join(_serve_lines(1)) + "\n")
+    assert cli.main(["serve", "--input", str(stream), "--resume"]) == 2
+    assert "checkpoint-dir" in capsys.readouterr().err
+
+
+# --- serving-layer checkpointing ---------------------------------------------
+
+
+def test_offload_manager_checkpoint_resume(tmp_path):
+    from repro.serving.offload import LearnedOffloadManager
+
+    def drive(mgr, steps, rng):
+        for _ in range(steps):
+            touched = rng.integers(0, 64, 16)
+            mass = np.zeros(64)
+            mass[touched] = 1.0
+            mgr.on_attention(mass, touched)
+
+    ref = LearnedOffloadManager(64, 16, group=32)
+    drive(ref, 20, np.random.default_rng(9))
+
+    m1 = LearnedOffloadManager(64, 16, group=32,
+                               checkpoint_dir=tmp_path / "ck", checkpoint_every=2)
+    rng = np.random.default_rng(9)
+    drive(m1, 10, rng)
+    assert SnapshotStore(tmp_path / "ck").latest_step() is not None
+    m2 = LearnedOffloadManager(64, 16, group=32,
+                               checkpoint_dir=tmp_path / "ck", resume=True)
+    # roll forward to m1's live position (the snapshot may lag by < every)
+    assert m2._observed_batches <= m1._observed_batches
+    m2.restore(m1.state())
+    drive(m2, 10, rng)
+    assert dataclasses.asdict(m2.stats) == dataclasses.asdict(ref.stats)
+    assert np.array_equal(m2.resident, ref.resident)
+    assert m2.manager.top1 == ref.manager.top1
+
+
+def test_model_spec_health_threads_to_manager(tmp_path):
+    from repro.uvm.api import Session
+    from repro.uvm.api.store import RunStore
+
+    s = Session(scale=0.25, cap=1500, store=RunStore(tmp_path / "runs"))
+    mgr = s.manager("NW", health=True, latency_budget_ms=2.5)
+    assert mgr.cfg.health is not None
+    assert mgr.cfg.health.latency_budget_ms == 2.5
+    assert s.manager("NW").cfg.health is None  # off by default
+
+
+# --- hypothesis: snapshot anywhere is invisible ------------------------------
+
+if importlib.util.find_spec("hypothesis"):
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 9), st.integers(10, 999))
+    def test_snapshot_point_invisible_hypothesis(cut, seed):
+        """For ANY snapshot point and input stream, interrupt+restore is
+        invisible: the stitched decision stream equals the uninterrupted
+        one (stub stack; 10 rounds, cut at round `cut`)."""
+        ref = _drive(_stub_manager(), np.random.default_rng(seed), 10)
+        m1 = _stub_manager()
+        rng = np.random.default_rng(seed)
+        head = _drive(m1, rng, cut)
+        m2 = _stub_manager()
+        m2.restore(pickle.loads(pickle.dumps(m1.state())))
+        tail = _drive(m2, rng, 10 - cut, start_clock=cut * 128)
+        assert head + tail == ref
