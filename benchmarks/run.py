@@ -56,11 +56,12 @@ SUITES = {
     "table6": tables.table6,
     "table7": tables.table7,
     "table8": tables.table8,
+    "table9": tables.table9,
     "roofline": roofline_summary,
 }
 
 # cheap first, NN-heavy later (shared caches warm up in order)
-ORDER = ["roofline", "table1", "table2", "table3", "table4", "fig3", "fig4", "fig6", "fig10", "fig11", "fig12", "table6", "fig13", "fig14", "table7", "table8"]
+ORDER = ["roofline", "table1", "table2", "table3", "table4", "fig3", "fig4", "fig6", "fig10", "fig11", "fig12", "table6", "fig13", "fig14", "table7", "table8", "table9"]
 
 
 def main(argv=None) -> int:

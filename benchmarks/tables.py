@@ -1,7 +1,9 @@
 """Paper tables: I (strategies w/o prefetch vs upper bound), II (HPE x
 prefetcher interplay), IV (predictor footprint), VI (full strategy matrix),
 VII (concurrent multi-workload accuracy), VIII (Section V-F concurrent
-top-1 through the full runtime: TenantMux vs merged-single-manager)."""
+top-1 through the full runtime: TenantMux vs merged-single-manager),
+IX (drift: re-classifying vs frozen-pattern managers on phase-changing zoo
+traces — a subsystem result beyond the paper's tables)."""
 from __future__ import annotations
 
 import time
@@ -184,4 +186,112 @@ def table8(ctx: Session):
     # the acceptance pin: per-tenant specialization must not lose to the
     # merged baseline on the Section V-F suite
     assert avg >= 0, rows
+    return rows
+
+
+def table9(ctx: Session):
+    """Drift benchmark: streaming re-classification measured as a subsystem
+    result on the zoo's phase-changing traces (benchmarks beyond the paper's
+    tables; see docs/REPRODUCING.md).
+
+    Each trace alternates a learnable streaming phase (StreamTriad) with the
+    zoo's RandomScan noise phase (fresh uniform draws — unmemorizable).  A
+    FROZEN-pattern manager (``reclass_interval`` so large the seed window
+    never expires) funnels every phase into the pattern classified first, so
+    the noise phases train straight into the streaming model; re-classifying
+    managers (``reclass_interval=256/512``, hysteresis 2) quarantine the
+    noise in the RANDOM entry and return to a warm, unpolluted model at each
+    switch-back.  The rule-based ``hpe+tree`` column is the no-learning
+    floor.  The headline assertion: the 256-fault re-classifier beats frozen
+    on top-1 AND pages-thrashed on every row (strictly on average).
+
+    The geometry is PINNED to quick scale (trace scale 0.4, the quick
+    predictor, group 256) regardless of ``--scale`` — this is a subsystem
+    pin like the golden suite, not a paper-scale table, and pinning keeps
+    the committed BENCH_sim.json ``drift`` section byte-stable.  Rows are
+    recorded into BENCH_sim.json (deterministic content only)."""
+    import json
+    from pathlib import Path
+
+    from benchmarks.common import PCFG_QUICK
+    from repro.uvm import runtime as R
+    from repro.uvm.api.specs import PretrainSpec, TrainSpec
+
+    t0 = time.time()
+    FROZEN = 1 << 30  # seed window never expires: the frozen-pattern manager
+    train = TrainSpec(group_size=256, epochs=2, batch_size=128)
+    tcfg = train.to_train_config()
+    pretrain = PretrainSpec(scale=0.24)  # quick Session.default_pretrain
+    table = lambda: ctx.pretrained(pretrain, pcfg=PCFG_QUICK, train=train)
+
+    def learned(tr, oversub, **kw):
+        mgr = R.manager_for(tr, PCFG_QUICK, tcfg, oversubscription=oversub,
+                            table=table(), **kw)
+        res = R.run_ours(tr, PCFG_QUICK, tcfg, oversubscription=oversub, manager=mgr)
+        return res, mgr.n_pattern_switches
+
+    cycle = ("StreamTriad", "RandomScan")
+    suite = [  # (drifting workload, oversubscription)
+        (ctx.drifting(cycle + ("StreamTriad",), scale=0.4, cap=6000, segment=1024), 1.25),
+        (ctx.drifting(cycle * 2 + ("StreamTriad",), scale=0.4, cap=6400, segment=1280), 1.2),
+        (ctx.drifting(cycle * 2 + ("StreamTriad",), scale=0.4, cap=6000, segment=1024), 1.3),
+    ]
+    rows, d_top1, d_thrash = [], [], []
+    for w, oversub in suite:
+        tr = ctx.trace(w)
+        froz, _ = learned(tr, oversub, reclass_interval=FROZEN)
+        r256, switches = learned(tr, oversub, reclass_interval=256, reclass_hysteresis=2)
+        r512, _ = learned(tr, oversub, reclass_interval=512, reclass_hysteresis=2)
+        rule = ctx.sim(w, "hpe", "tree", oversub)
+        rows.append({
+            "trace": tr.name.replace("drift:", ""),
+            "oversub": oversub,
+            "frozen_top1": round(froz.top1, 3),
+            "frozen_thrash": froz.stats["pages_thrashed"],
+            "reclass256_top1": round(r256.top1, 3),
+            "reclass256_thrash": r256.stats["pages_thrashed"],
+            "switches": switches,
+            "reclass512_top1": round(r512.top1, 3),
+            "reclass512_thrash": r512.stats["pages_thrashed"],
+            "rule_thrash": rule["pages_thrashed"],
+            "derived": f"dtop1={r256.top1 - froz.top1:+.3f}",
+        })
+        d_top1.append(r256.top1 - froz.top1)
+        d_thrash.append(r256.stats["pages_thrashed"] - froz.stats["pages_thrashed"])
+        # re-classification must actually fire (noise in, noise out, back):
+        # >= 2 switches per trace, and the learned manager must stay far
+        # below the no-learning floor on thrashing
+        assert switches >= 2, rows
+        assert r256.stats["pages_thrashed"] < rule["pages_thrashed"], rows
+    avg_t1, avg_thr = float(np.mean(d_top1)), float(np.mean(d_thrash))
+    rows.insert(0, {
+        "trace": "AVG_RECLASS_VS_FROZEN", "oversub": "", "frozen_top1": "",
+        "frozen_thrash": "", "reclass256_top1": "", "reclass256_thrash": "",
+        "switches": "", "reclass512_top1": "", "reclass512_thrash": "",
+        "rule_thrash": "", "derived": f"dtop1={avg_t1:+.3f} dthrash={avg_thr:+.0f}",
+    })
+    emit("table9_drift_reclass", rows, t0)
+    # THE drift claim: periodic re-classification beats the frozen-pattern
+    # manager on BOTH metrics — never worse on any phase-changing trace,
+    # strictly better on average
+    assert all(d >= 0 for d in d_top1) and avg_t1 > 0, rows
+    assert all(d <= 0 for d in d_thrash) and avg_thr < 0, rows
+    # record the subsystem result (deterministic content only) into the
+    # committed benchmark ledger
+    bench = Path(__file__).resolve().parent.parent / "BENCH_sim.json"
+    data = json.loads(bench.read_text())
+    data["drift"] = {
+        "benchmark": "PYTHONPATH=src python -m benchmarks.run --only table9",
+        "headline": {
+            "avg_top1_delta_reclass256_vs_frozen": round(avg_t1, 4),
+            "avg_pages_thrashed_delta": round(avg_thr, 1),
+            "notes": "re-classifying manager (interval 256, hysteresis 2) vs "
+                     "frozen-pattern manager on phase-changing zoo traces "
+                     "(StreamTriad x RandomScan cycles), quick-pinned geometry; "
+                     "interval 512 is too coarse to switch on the 1024-access "
+                     "phases and collapses onto the frozen manager",
+        },
+        "rows": rows,
+    }
+    bench.write_text(json.dumps(data, indent=2) + "\n")
     return rows

@@ -31,14 +31,21 @@ SUBCOMMAND_MODULES = {"repro.uvm.cli"}
 #: JSONL/protocol fields that must stay documented on BOTH sides: in the
 #: subcommand's own --help AND in at least one scanned doc (a field the
 #: code grows without docs — or docs promise without code — is drift)
-REQUIRED_FIELD_MENTIONS = {("repro.uvm.cli", "serve"): ("tenant", "health", "fallback")}
+REQUIRED_FIELD_MENTIONS = {
+    ("repro.uvm.cli", "serve"): ("tenant", "health", "fallback", "pattern"),
+}
 
 #: flags that must stay documented on BOTH sides too: the fault-tolerance
-#: serve surface (PR 6) ships with docs or CI fails
+#: serve surface (PR 6) and the drift-replay surface (PR 7) ship with docs
+#: or CI fails
 REQUIRED_FLAG_MENTIONS = {
     ("repro.uvm.cli", "serve"): (
         "--checkpoint-dir", "--checkpoint-every", "--resume", "--inject",
-        "--latency-budget-ms",
+        "--latency-budget-ms", "--reclass-interval", "--reclass-hysteresis",
+    ),
+    ("repro.uvm.cli", "export"): (
+        "--phases", "--drift-kind", "--switch", "--mix-window", "--joins",
+        "--spans", "--out",
     ),
 }
 

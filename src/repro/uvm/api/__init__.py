@@ -23,6 +23,7 @@ See docs/API.md for the cookbook.
 """
 from repro.uvm.api.specs import (
     CellSpec,
+    DriftSpec,
     ExperimentSpec,
     ModelSpec,
     PolicySpec,
@@ -50,8 +51,8 @@ from repro.uvm.registry import (
 )
 
 __all__ = [
-    "WorkloadSpec", "PolicySpec", "PrefetchSpec", "TrainSpec", "PretrainSpec",
-    "ModelSpec", "CellSpec", "ProtocolSpec", "ExperimentSpec",
+    "WorkloadSpec", "DriftSpec", "PolicySpec", "PrefetchSpec", "TrainSpec",
+    "PretrainSpec", "ModelSpec", "CellSpec", "ProtocolSpec", "ExperimentSpec",
     "spec_key", "spec_from_dict",
     "RunStore", "Session", "ALL_BENCH", "FEATURED",
     "register_policy", "register_prefetcher", "register_predictor",

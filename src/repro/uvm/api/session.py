@@ -70,6 +70,7 @@ from repro.uvm import runtime as R  # noqa: E402
 from repro.uvm import simulator as S  # noqa: E402
 from repro.uvm import timing  # noqa: E402
 from repro.uvm import trace as T  # noqa: E402
+from repro.uvm import zoo  # noqa: E402
 from repro.uvm.runtime import LearnedRunResult  # noqa: E402
 from repro.uvm.uvmsmart import run_uvmsmart  # noqa: E402
 
@@ -176,17 +177,34 @@ class Session:
         """A Section V-F multi-tenant workload of this session's scale."""
         return WorkloadSpec.concurrent(tenants, scale=self.scale, cap=self.cap, slice_len=slice_len, seed=seed)
 
+    def drifting(self, phases, **kw) -> WorkloadSpec:
+        """A drifting zoo workload (phase change or tenant churn) of this
+        session's scale — see :meth:`WorkloadSpec.drifting` for the knobs."""
+        kw.setdefault("scale", self.scale)
+        kw.setdefault("cap", self.cap)
+        return WorkloadSpec.drifting(phases, **kw)
+
     def _workload(self, w) -> WorkloadSpec:
         return self.workload(w) if isinstance(w, str) else w
 
     def trace(self, w: WorkloadSpec | str) -> T.Trace:
         w = self._workload(w)
         if w.key not in self._traces:
-            if w.tenants:
+            if w.drift is not None:
+                d = w.drift
+                if d.kind == "churn":
+                    tr = zoo.tenant_churn(d.phases, scale=w.scale, seed=d.seed,
+                                          joins=d.joins, spans=d.spans, slice_len=w.slice_len)
+                else:
+                    tr = zoo.phase_trace(d.phases, scale=w.scale, seed=d.seed,
+                                         segment=d.segment, switch=d.switch,
+                                         mix_window=d.mix_window)
+                self._traces[w.key] = tr.slice(0, min(len(tr), w.cap))
+            elif w.tenants:
                 parts = [self.trace(WorkloadSpec(t, w.scale, w.cap)) for t in w.tenants]
                 self._traces[w.key] = T.concurrent(parts, seed=w.seed, slice_len=w.slice_len)
             else:
-                tr = T.get_trace(w.benchmark, scale=w.scale)
+                tr = zoo.get_trace(w.benchmark, scale=w.scale)
                 self._traces[w.key] = tr.slice(0, min(len(tr), w.cap))
         return self._traces[w.key]
 

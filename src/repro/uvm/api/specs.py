@@ -62,13 +62,60 @@ class _SpecBase:
 
 
 @dataclasses.dataclass(frozen=True)
+class DriftSpec(_SpecBase):
+    """A drifting-workload recipe from the zoo (:mod:`repro.uvm.zoo`).
+
+    ``kind='phase'`` splices ``phases`` (benchmark or zoo-pattern names)
+    into one stream, ``segment`` accesses each; ``switch='gradual'`` blends
+    ``mix_window`` accesses around every boundary (``'abrupt'`` cuts hard).
+    ``kind='churn'`` merges ``phases`` as tenants that JOIN after
+    ``joins[i]`` merged accesses and LEAVE after ``spans[i]`` of their own
+    (0/absent = full trace; empty ``joins`` auto-staggers)."""
+
+    kind: str = "phase"  # phase | churn
+    phases: tuple[str, ...] = ()
+    segment: int = 1500  # accesses per phase (kind='phase')
+    switch: str = "abrupt"  # abrupt | gradual
+    mix_window: int = 0  # blended accesses per boundary (switch='gradual')
+    joins: tuple[int, ...] = ()  # per-tenant admission offsets (kind='churn')
+    spans: tuple[int, ...] = ()  # per-tenant access budgets (kind='churn')
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ("phase", "churn"):
+            raise ValueError(f"unknown drift kind {self.kind!r}; 'phase' or 'churn'")
+        if self.switch not in ("abrupt", "gradual"):
+            raise ValueError(f"unknown drift switch {self.switch!r}; 'abrupt' or 'gradual'")
+        if len(self.phases) < 2:
+            raise ValueError("a drift spec needs at least two phases/tenants")
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DriftSpec":
+        return cls(
+            kind=d.get("kind", "phase"), phases=tuple(d.get("phases", ())),
+            segment=d.get("segment", 1500), switch=d.get("switch", "abrupt"),
+            mix_window=d.get("mix_window", 0), joins=tuple(d.get("joins", ())),
+            spans=tuple(d.get("spans", ())), seed=d.get("seed", 0),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class WorkloadSpec(_SpecBase):
-    """A trace to drive: one benchmark generator, or a concurrent merge.
+    """A trace to drive: one benchmark generator, a concurrent merge, or a
+    drifting zoo workload.
 
     ``tenants`` non-empty makes this a Section V-F multi-workload trace:
     each tenant benchmark is generated at (scale, cap) and merged at
     scheduler-slice granularity into disjoint page ranges
-    (:func:`repro.uvm.trace.concurrent` with ``slice_len``/``seed``)."""
+    (:func:`repro.uvm.trace.concurrent` with ``slice_len``/``seed``).
+
+    ``drift`` non-None builds the trace through the zoo instead
+    (:func:`repro.uvm.zoo.phase_trace` / :func:`~repro.uvm.zoo.tenant_churn`
+    at this spec's ``scale``, capped at ``cap``; churn merges reuse
+    ``slice_len``); ``benchmark`` is then just the display label.
+    (PR 7 grew this field WITHOUT a schema bump, like PR 6's ModelSpec
+    growth: the default is behavior-identical, old cells simply recompute.)
+    """
 
     benchmark: str
     scale: float = 0.4
@@ -76,6 +123,7 @@ class WorkloadSpec(_SpecBase):
     tenants: tuple[str, ...] = ()
     slice_len: int = 256
     seed: int = 0  # concurrent-merge seed (unused for single-tenant)
+    drift: DriftSpec | None = None
 
     @classmethod
     def concurrent(cls, tenants, *, scale: float = 0.4, cap: int = 6000,
@@ -84,11 +132,28 @@ class WorkloadSpec(_SpecBase):
         return cls("+".join(tenants), scale, cap, tenants, slice_len, seed)
 
     @classmethod
+    def drifting(cls, phases, *, kind: str = "phase", scale: float = 0.4,
+                 cap: int = 6000, segment: int = 1500, switch: str = "abrupt",
+                 mix_window: int = 0, joins=(), spans=(), slice_len: int = 256,
+                 seed: int = 0) -> "WorkloadSpec":
+        """A zoo workload: ``kind='phase'`` splices ``phases`` with the given
+        switch style; ``kind='churn'`` merges them as joining/leaving
+        tenants."""
+        phases = tuple(phases)
+        sep = "+" if kind == "churn" else ">"
+        label = ("churn:" if kind == "churn" else "drift:") + sep.join(phases)
+        drift = DriftSpec(kind=kind, phases=phases, segment=segment, switch=switch,
+                          mix_window=mix_window, joins=tuple(joins), spans=tuple(spans),
+                          seed=seed)
+        return cls(label, scale, cap, slice_len=slice_len, drift=drift)
+
+    @classmethod
     def from_dict(cls, d: dict) -> "WorkloadSpec":
         return cls(
             benchmark=d["benchmark"], scale=d["scale"], cap=d["cap"],
             tenants=tuple(d.get("tenants", ())),
             slice_len=d.get("slice_len", 256), seed=d.get("seed", 0),
+            drift=DriftSpec.from_dict(d["drift"]) if d.get("drift") else None,
         )
 
 
@@ -360,8 +425,8 @@ class ExperimentSpec(_SpecBase):
 
 _SPEC_KINDS = {
     cls.__name__: cls
-    for cls in (WorkloadSpec, PolicySpec, PrefetchSpec, TrainSpec, PretrainSpec,
-                ModelSpec, CellSpec, ProtocolSpec, ExperimentSpec)
+    for cls in (DriftSpec, WorkloadSpec, PolicySpec, PrefetchSpec, TrainSpec,
+                PretrainSpec, ModelSpec, CellSpec, ProtocolSpec, ExperimentSpec)
 }
 
 

@@ -6,6 +6,7 @@
     PYTHONPATH=src python -m repro.uvm.cli sweep --spec experiment.json
     PYTHONPATH=src python -m repro.uvm.cli report
     PYTHONPATH=src python -m repro.uvm.cli serve --input faults.jsonl --n-pages 4096
+    PYTHONPATH=src python -m repro.uvm.cli export --phases StreamTriad PtrChase --out faults.jsonl
 
 Every executed cell is published to the content-addressed run store
 (``experiments/runs/`` by default; ``--runs-dir`` relocates it), so a
@@ -35,6 +36,17 @@ tenant's next observation, fine-tuning without the thrashing term and
 leaving the fault clock unchanged.  Malformed lines never produce a
 traceback: each yields a structured ``{"error": ..., "line": N}`` record
 (and a non-zero exit under ``--strict``).
+
+``export`` is the replay bridge: it writes any workload — a registered
+benchmark, a zoo pattern, or a drifting trace composed on the command line
+(``--phases``/``--switch``/``--mix-window``, or ``--drift-kind churn`` with
+``--joins``/``--spans``) — as a versioned JSONL UVM fault log
+(:func:`repro.uvm.trace.to_fault_log`) whose lines feed straight into
+``serve``; real logs in the same schema ingest back through
+:func:`repro.uvm.trace.from_fault_log`.  The action records ``serve`` emits
+carry the live classifier verdict in their ``"pattern"`` field, so a
+drifting replay shows the re-classification switch as it happens (tune it
+with ``--reclass-interval``/``--reclass-hysteresis``).
 
 ``serve`` is fault-tolerant end to end: the degraded-mode health machine
 is always on (action records carry ``"health"``/``"fallback"``; a trainer
@@ -66,7 +78,8 @@ from repro.uvm.api import (
     WorkloadSpec,
 )
 from repro.uvm.api.specs import PAPER_TRAIN, TrainSpec, parse_scale
-from repro.uvm.trace import BENCHMARKS, PAGES_PER_BLOCK
+from repro.uvm.trace import PAGES_PER_BLOCK
+from repro.uvm.zoo import workload_names
 
 
 def _add_common(ap: argparse.ArgumentParser) -> None:
@@ -438,7 +451,35 @@ def cmd_serve(args) -> int:
     return 2 if errors and args.strict else 0
 
 
-SUBCOMMANDS = {"run": cmd_run, "sweep": cmd_sweep, "report": cmd_report, "serve": cmd_serve}
+def _export_workload(args, session: Session) -> WorkloadSpec:
+    if args.phases:
+        return WorkloadSpec.drifting(
+            tuple(args.phases), kind=args.drift_kind, scale=session.scale, cap=session.cap,
+            segment=args.segment, switch=args.switch, mix_window=args.mix_window,
+            joins=tuple(args.joins or ()), spans=tuple(args.spans or ()),
+            slice_len=args.slice_len, seed=args.seed,
+        )
+    if not args.benchmark:
+        raise SystemExit("export needs --benchmark or --phases")
+    return session.workload(args.benchmark)
+
+
+def cmd_export(args) -> int:
+    from repro.uvm.trace import to_fault_log
+
+    session = _session(args)
+    w = _export_workload(args, session)
+    tr = session.trace(w)
+    out = sys.stdout if args.out == "-" else args.out
+    lines = to_fault_log(tr, out, batch=args.batch)
+    print(f"# export workload={w.benchmark} accesses={len(tr)} n_pages={tr.n_pages} "
+          f"tenants={len(tr.tenant_names)} lines={lines} out={args.out}",
+          file=sys.stderr if args.out == "-" else sys.stdout)
+    return 0
+
+
+SUBCOMMANDS = {"run": cmd_run, "sweep": cmd_sweep, "report": cmd_report,
+               "serve": cmd_serve, "export": cmd_export}
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -448,7 +489,7 @@ def build_parser() -> argparse.ArgumentParser:
 
     p_run = sub.add_parser("run", help="execute (or look up) one experiment cell")
     _add_common(p_run)
-    p_run.add_argument("--benchmark", required=True, choices=sorted(BENCHMARKS))
+    p_run.add_argument("--benchmark", required=True, choices=workload_names())
     p_run.add_argument("--strategy", default="sim", choices=("sim", "ours", "uvmsmart"))
     p_run.add_argument("--policy", default="lru", help="registered eviction policy (sim)")
     p_run.add_argument("--prefetch", default="tree", help="registered prefetcher (sim)")
@@ -459,7 +500,7 @@ def build_parser() -> argparse.ArgumentParser:
     _add_common(p_sweep)
     p_sweep.add_argument("--spec", default=None, help="ExperimentSpec JSON to replay (overrides the axes)")
     p_sweep.add_argument("--name", default="sweep")
-    p_sweep.add_argument("--benchmarks", nargs="*", default=None, choices=sorted(BENCHMARKS))
+    p_sweep.add_argument("--benchmarks", nargs="*", default=None, choices=workload_names())
     p_sweep.add_argument("--strategy", default="sim", choices=("sim", "ours", "uvmsmart"))
     p_sweep.add_argument("--policies", nargs="*", default=["lru"])
     p_sweep.add_argument("--prefetchers", nargs="*", default=["tree"])
@@ -515,6 +556,35 @@ def build_parser() -> argparse.ArgumentParser:
     p_srv.add_argument("--latency-budget-ms", type=float, default=0.0,
                        help="per-observe dispatch budget in ms; overruns demote the learned "
                             "path to degraded health (0 = no budget)")
+
+    p_exp = sub.add_parser(
+        "export",
+        help="write a workload (benchmark or drifting zoo trace) as a versioned "
+             "JSONL UVM fault log, ready to replay through `serve`",
+    )
+    _add_common(p_exp)
+    p_exp.add_argument("--benchmark", default=None, choices=workload_names(),
+                       help="a registered workload (the 11-benchmark suite + the zoo patterns)")
+    p_exp.add_argument("--phases", nargs="*", default=None,
+                       help="build a drifting zoo trace instead: two or more workload names, "
+                            "spliced (--drift-kind phase) or merged as churning tenants "
+                            "(--drift-kind churn)")
+    p_exp.add_argument("--drift-kind", default="phase", choices=("phase", "churn"))
+    p_exp.add_argument("--segment", type=int, default=1500,
+                       help="accesses per phase segment (--drift-kind phase)")
+    p_exp.add_argument("--switch", default="abrupt", choices=("abrupt", "gradual"),
+                       help="phase-boundary style; 'gradual' blends --mix-window accesses")
+    p_exp.add_argument("--mix-window", type=int, default=0,
+                       help="accesses blended around each gradual phase boundary")
+    p_exp.add_argument("--joins", nargs="*", type=int, default=None,
+                       help="per-tenant admission offsets in merged accesses (churn; "
+                            "default: auto-staggered)")
+    p_exp.add_argument("--spans", nargs="*", type=int, default=None,
+                       help="per-tenant access budgets (churn; 0 = the full trace)")
+    p_exp.add_argument("--slice-len", type=int, default=256, help="scheduler-slice length (churn)")
+    p_exp.add_argument("--seed", type=int, default=0, help="zoo generator seed")
+    p_exp.add_argument("--batch", type=int, default=256, help="accesses per fault-log line")
+    p_exp.add_argument("--out", default="-", help="output path ('-' = stdout)")
     return ap
 
 

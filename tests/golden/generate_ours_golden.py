@@ -14,6 +14,12 @@ under BOTH treatments — ``|merged`` (one manager over the interleaved
 stream, the pre-mux baseline) and ``|mux`` (the `TenantMux` per-tenant
 pipelines, including the per-tenant top-1 split).
 
+PR 7 adds the drifting-workload cells (the zoo): an abrupt phase change
+run with periodic re-classification, a gradual (blended-boundary) phase
+change, a tenant-churn stream through the mux, and a fault-log round-trip
+replay of that churn trace — pinning that `from_fault_log(to_fault_log(t))`
+drives `run_ours` to the exact same counters as the original trace.
+
     PYTHONPATH=src python tests/golden/generate_ours_golden.py            # rewrite
     PYTHONPATH=src python tests/golden/generate_ours_golden.py --check    # CI drift gate
     PYTHONPATH=src python tests/golden/generate_ours_golden.py --check --cells AddVectors
@@ -25,6 +31,7 @@ regeneration, or a hand-edited file) cannot survive CI.
 from __future__ import annotations
 
 import argparse
+import io
 import json
 from pathlib import Path
 
@@ -32,6 +39,7 @@ from repro.configs.predictor_paper import SMOKE
 from repro.core.incremental import TrainConfig
 from repro.uvm import runtime as R
 from repro.uvm import trace as T
+from repro.uvm import zoo as Z
 
 OUT = Path(__file__).with_name("ours_golden.json")
 
@@ -71,6 +79,34 @@ def concurrent_cell(pair: tuple[str, str], multi_tenant: bool) -> dict:
     return _payload(R.run_ours(tr, SMOKE, TCFG, multi_tenant=multi_tenant))
 
 
+def _churn_trace() -> T.Trace:
+    tr = Z.tenant_churn(("StreamTriad", "Hotspot"), scale=SCALE, slice_len=TCFG.group_size)
+    return tr.slice(0, min(len(tr), CAP))
+
+
+def _faultlog_roundtrip(tr: T.Trace) -> T.Trace:
+    buf = io.StringIO()
+    T.to_fault_log(tr, buf)
+    buf.seek(0)
+    return T.from_fault_log(buf)
+
+
+#: PR 7 drifting cells — keyed builders so ``--cells`` partial regeneration
+#: works on them like any benchmark cell
+DRIFT_CELLS = {
+    "drift:StreamTriad>PtrChase|abrupt": lambda: R.run_ours(
+        Z.phase_trace(("StreamTriad", "PtrChase"), scale=SCALE, segment=1500),
+        SMOKE, TCFG, reclass_interval=256, reclass_hysteresis=2),
+    "drift:ATAX>StridedNoise|gradual": lambda: R.run_ours(
+        Z.phase_trace(("ATAX", "StridedNoise"), scale=SCALE, segment=1500,
+                      switch="gradual", mix_window=200),
+        SMOKE, TCFG, reclass_interval=256, reclass_hysteresis=2),
+    "churn:StreamTriad+Hotspot|mux": lambda: R.run_ours(_churn_trace(), SMOKE, TCFG),
+    "faultlog:churn:StreamTriad+Hotspot|mux": lambda: R.run_ours(
+        _faultlog_roundtrip(_churn_trace()), SMOKE, TCFG),
+}
+
+
 def generate(cells: list[str] | None = None) -> dict:
     golden = {}
     for name in T.BENCHMARKS:
@@ -81,6 +117,9 @@ def generate(cells: list[str] | None = None) -> dict:
             key = f"concurrent:{'+'.join(pair)}|{label}"
             if cells is None or key in cells:
                 golden[key] = concurrent_cell(pair, mt)
+    for key, build in DRIFT_CELLS.items():
+        if cells is None or key in cells:
+            golden[key] = _payload(build())
     return golden
 
 

@@ -78,9 +78,10 @@ def test_spec_content_hash_stability():
     """Pinned hex: a hash-scheme change orphans every stored run — bump
     specs.SCHEMA intentionally instead, and regenerate these constants.
     (Regenerated for SCHEMA 2: PR 5's mux tenancy changed what a
-    concurrent `ours` result means.)"""
-    assert WorkloadSpec("ATAX").key == "b572fd7f669e3f2f"
-    assert CellSpec(WorkloadSpec("ATAX")).key == "f32939467186df64"
+    concurrent `ours` result means; regenerated again when PR 7 grew
+    `WorkloadSpec.drift`, which moves every workload hash.)"""
+    assert WorkloadSpec("ATAX").key == "55f022cc6cb02da2"
+    assert CellSpec(WorkloadSpec("ATAX")).key == "ce75be408a267d0a"
     # any field change moves the key
     keys = {
         CellSpec(WorkloadSpec("ATAX")).key,
@@ -88,8 +89,9 @@ def test_spec_content_hash_stability():
         CellSpec(WorkloadSpec("ATAX"), policy=PolicySpec("hpe")).key,
         CellSpec(WorkloadSpec("ATAX"), oversubscription=1.5).key,
         CellSpec(WorkloadSpec("ATAX"), strategy="uvmsmart").key,
+        CellSpec(WorkloadSpec.drifting(("StreamTriad", "PtrChase"))).key,
     }
-    assert len(keys) == 5
+    assert len(keys) == 6
 
 
 def test_cellspec_validation():

@@ -1,0 +1,487 @@
+"""Drifting-workload zoo (ISSUE 7 tentpole) — the generator contracts the
+drift benchmark and golden cells stand on:
+
+* zoo generators are deterministic under a fixed seed (same seed -> bit
+  identical, different seed -> different stream);
+* abrupt phase traces are EXACT segment concatenations: every segment is
+  bit-equal to its standalone base generator's prefix (table9's claim is
+  about re-classification, so each phase must be the genuine pattern);
+* gradual phase traces only touch the blend windows — outside them the
+  stream is bit-equal to the abrupt splice, and the blend is a MERGE
+  (per-phase access order preserved, access multiset conserved);
+* tenant churn: `trace.concurrent(starts=...)` admits tenants late and
+  lets them leave early without breaking the per-tenant subsequence
+  invariants, and ``starts=None`` stays bit-identical to the legacy
+  static schedule (the PR 5 concurrent goldens must not move);
+* the versioned JSONL fault log round-trips bit-identically (tenanted and
+  untenanted) and rejects malformed/mixed/unversioned input loudly;
+* end-to-end with the REAL trainer: `reclass_hysteresis` never flips on a
+  lone disagreeing window, flips exactly once per genuine phase change,
+  and the displaced pattern's model entry stays warm across a switch-back.
+"""
+import io
+
+import numpy as np
+import pytest
+
+from repro.configs.predictor_paper import SMOKE
+from repro.core.incremental import TrainConfig
+from repro.uvm import runtime as R
+from repro.uvm import trace as T
+from repro.uvm import zoo as Z
+from repro.uvm.manager import FaultBatch, Outcomes
+
+SCALE = 0.3
+
+
+def _eq(a: T.Trace, b: T.Trace) -> bool:
+    same = (a.name == b.name and a.n_pages == b.n_pages
+            and a.tenant_names == b.tenant_names)
+    for f in ("page", "pc", "tb", "kernel"):
+        same = same and np.array_equal(getattr(a, f), getattr(b, f))
+    if (a.tenant is None) != (b.tenant is None):
+        return False
+    if a.tenant is not None:
+        same = same and np.array_equal(a.tenant, b.tenant)
+    return same
+
+
+def _tuples(tr: T.Trace) -> np.ndarray:
+    """Accesses as sortable (page, pc, tb, kernel) rows (multiset compare)."""
+    return np.sort(np.stack([tr.page, tr.pc, tr.tb, tr.kernel], 1).view(
+        [("p", "i4"), ("c", "i4"), ("t", "i4"), ("k", "i4")]).ravel())
+
+
+# --- zoo generators ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(Z.PATTERNS))
+def test_zoo_generator_deterministic(name):
+    a = Z.PATTERNS[name](scale=SCALE)
+    b = Z.PATTERNS[name](scale=SCALE)
+    assert _eq(a, b)
+    assert not np.array_equal(a.page, Z.PATTERNS[name](scale=SCALE, seed=99).page)
+
+
+def test_zoo_registries_consistent():
+    assert set(Z.CATEGORY) == set(Z.PATTERNS)
+    assert not set(Z.PATTERNS) & set(T.BENCHMARKS)  # no shadowing
+    assert Z.workload_names() == sorted(T.BENCHMARKS) + sorted(Z.PATTERNS)
+
+
+def test_get_trace_resolves_suite_and_zoo():
+    assert _eq(Z.get_trace("PtrChase", scale=SCALE), Z.pointer_chase(scale=SCALE))
+    assert _eq(Z.get_trace("StreamTriad", scale=SCALE), T.get_trace("StreamTriad", scale=SCALE))
+    with pytest.raises(KeyError):
+        Z.get_trace("NoSuchWorkload")
+
+
+def test_pointer_chase_walk_covers_every_page():
+    tr = Z.pointer_chase(scale=SCALE, passes=1)
+    assert len(np.unique(tr.page)) == tr.n_pages  # one full cycle, no repeats
+
+
+def test_random_scan_fresh_draws_per_kernel():
+    tr = Z.random_scan(scale=SCALE, iters=2)
+    k0, k1 = tr.page[tr.kernel == 0], tr.page[tr.kernel == 1]
+    assert not np.array_equal(k0, k1)  # nothing to memorize across kernels
+
+
+# --- phase-change traces -----------------------------------------------------
+
+
+def test_phase_trace_abrupt_segments_bit_exact():
+    seg = 600
+    phases = ("StreamTriad", "PtrChase", "ATAX")
+    tr = Z.phase_trace(phases, scale=SCALE, segment=seg)
+    assert tr.name == "drift:StreamTriad>PtrChase>ATAX"
+    lo = 0
+    for p in phases:
+        base = Z.get_trace(p, scale=SCALE)
+        n = min(len(base), seg)
+        for f in ("page", "pc", "tb", "kernel"):
+            assert np.array_equal(getattr(tr, f)[lo:lo + n], getattr(base, f)[:n]), (p, f)
+        lo += n
+    assert len(tr) == lo
+    assert tr.n_pages == max(Z.get_trace(p, scale=SCALE).n_pages for p in phases)
+
+
+def test_phase_trace_gradual_blend_is_windowed_merge():
+    seg, w = 600, 150
+    phases = ("StreamTriad", "PtrChase")
+    ab = Z.phase_trace(phases, scale=SCALE, segment=seg)
+    gr = Z.phase_trace(phases, scale=SCALE, segment=seg, switch="gradual", mix_window=w)
+    assert gr.name == "drift:StreamTriad>PtrChase|gradual"
+    assert len(gr) == len(ab)
+    # outside the blend window the stream is bit-equal to the abrupt splice
+    for f in ("page", "pc", "tb", "kernel"):
+        assert np.array_equal(getattr(gr, f)[:seg - w], getattr(ab, f)[:seg - w])
+        assert np.array_equal(getattr(gr, f)[seg + w:], getattr(ab, f)[seg + w:])
+    # the blend permutes whole accesses — the access multiset is conserved
+    assert np.array_equal(_tuples(gr), _tuples(ab))
+    # and it is a MERGE: each phase's own accesses keep their order
+    win = slice(seg - w, seg + w)
+    out_tail, in_head = ab.page[seg - w:seg], ab.page[seg:seg + w]
+    blended = gr.page[win]
+    from_a = blended[gr.pc[win] == ab.pc[seg - 1]] if len(set(ab.pc[win])) > 1 else None
+    if from_a is not None:  # pc distinguishes the phases in this pairing
+        assert np.array_equal(from_a, out_tail)
+        assert np.array_equal(blended[gr.pc[win] != ab.pc[seg - 1]], in_head)
+    # the gradual switch is seeded: rebuilding reproduces it bit-exactly
+    assert _eq(gr, Z.phase_trace(phases, scale=SCALE, segment=seg,
+                                 switch="gradual", mix_window=w))
+
+
+def test_phase_trace_validation():
+    with pytest.raises(ValueError, match="at least two"):
+        Z.phase_trace(("StreamTriad",))
+    with pytest.raises(ValueError, match="unknown switch"):
+        Z.phase_trace(("StreamTriad", "ATAX"), switch="instant")
+    with pytest.raises(KeyError):
+        Z.phase_trace(("StreamTriad", "NoSuchWorkload"))
+
+
+# --- tenant churn + the concurrent() starts fix ------------------------------
+
+
+def test_concurrent_starts_none_bit_identical_to_legacy_zero_starts():
+    parts = [T.get_trace(n, scale=SCALE) for n in ("StreamTriad", "Hotspot")]
+    legacy = T.concurrent(parts, seed=0, slice_len=256)
+    explicit = T.concurrent(parts, seed=0, slice_len=256, starts=[0, 0])
+    assert _eq(legacy, explicit)
+
+
+def _per_tenant_ok(tr: T.Trace, parts):
+    """Per-tenant subsequence invariants: order, offsets and tag mapping."""
+    offset = 0
+    for i, p in enumerate(parts):
+        mine = tr.tenant == i
+        assert np.array_equal(tr.page[mine], p.page[:mine.sum()] + offset)
+        assert np.array_equal(tr.pc[mine], p.pc[:mine.sum()] + 16 * i)
+        assert np.array_equal(tr.kernel[mine], p.kernel[:mine.sum()] + 64 * i)
+        offset += p.n_pages
+
+
+def test_concurrent_late_join_is_honored():
+    parts = [T.get_trace("StreamTriad", scale=SCALE), T.get_trace("Hotspot", scale=SCALE)]
+    tr = T.concurrent(parts, seed=0, slice_len=128, starts=[0, 700])
+    _per_tenant_ok(tr, parts)
+    assert len(tr) == sum(len(p) for p in parts)  # nobody truncated
+    first = np.flatnonzero(tr.tenant == 1)[0]
+    assert first >= 700  # tenant 1 admitted only after its join point
+    assert np.all(tr.tenant[:first] == 0)
+
+
+def test_concurrent_early_leave_keeps_schedule_going():
+    parts = [T.get_trace("StreamTriad", scale=SCALE).slice(0, 200),
+             T.get_trace("Hotspot", scale=SCALE)]
+    tr = T.concurrent(parts, seed=0, slice_len=128, starts=[0, 0])
+    _per_tenant_ok(tr, parts)
+    last0 = np.flatnonzero(tr.tenant == 0)[-1]
+    assert last0 < len(tr) - 1  # tenant 0 leaves early, the stream continues
+    assert np.all(tr.tenant[last0 + 1:] == 1)
+
+
+def test_concurrent_all_deferred_jumps_to_earliest_joiner():
+    parts = [T.get_trace("StreamTriad", scale=SCALE).slice(0, 300),
+             T.get_trace("Hotspot", scale=SCALE).slice(0, 300)]
+    # every tenant joins in the future: the clock must jump, not deadlock
+    tr = T.concurrent(parts, seed=0, slice_len=128, starts=[5000, 9000])
+    _per_tenant_ok(tr, parts)
+    assert len(tr) == 600
+    assert tr.tenant[0] == 0  # earliest joiner admitted first
+
+
+def test_concurrent_empty_tenant_keeps_index_reserved():
+    parts = [T.get_trace("StreamTriad", scale=SCALE).slice(0, 0),
+             T.get_trace("Hotspot", scale=SCALE).slice(0, 256)]
+    tr = T.concurrent(parts, seed=0, slice_len=128, starts=[0, 0])
+    assert tr.tenant_names == ("StreamTriad", "Hotspot")
+    assert np.all(tr.tenant == 1)  # index 0 reserved but absent
+    assert len(tr) == 256
+
+
+def test_concurrent_starts_validation():
+    parts = [T.get_trace("StreamTriad", scale=SCALE)]
+    with pytest.raises(ValueError, match="starts must align"):
+        T.concurrent(parts, starts=[0, 0])
+
+
+def test_tenant_churn_trace_shape():
+    tr = Z.tenant_churn(("StreamTriad", "Hotspot"), scale=SCALE,
+                        joins=(0, 500), spans=(0, 600))
+    assert tr.name == "churn:StreamTriad+Hotspot"
+    assert tr.tenant_names == ("StreamTriad", "Hotspot")
+    assert np.flatnonzero(tr.tenant == 1)[0] >= 500  # join honored
+    assert (tr.tenant == 1).sum() == 600  # span truncates tenant 1
+    parts = [T.get_trace("StreamTriad", scale=SCALE),
+             T.get_trace("Hotspot", scale=SCALE).slice(0, 600)]
+    _per_tenant_ok(tr, parts)
+
+
+def test_tenant_churn_auto_staggers_joins():
+    tr = Z.tenant_churn(("StreamTriad", "Hotspot"), scale=SCALE)
+    total = len(tr)
+    first1 = np.flatnonzero(tr.tenant == 1)[0]
+    # default stagger: tenant 1 joins mid-stream — at its nominal total//4
+    # point, or when every earlier tenant drains first (the clock jump)
+    assert first1 >= min(total // 4, (tr.tenant == 0).sum())
+    assert tr.tenant[0] == 0
+    assert _eq(tr, Z.tenant_churn(("StreamTriad", "Hotspot"), scale=SCALE))
+
+
+# --- fault-log interchange ---------------------------------------------------
+
+
+def test_fault_log_roundtrip_untenanted(tmp_path):
+    tr = Z.phase_trace(("StreamTriad", "PtrChase"), scale=SCALE, segment=500)
+    path = tmp_path / "log.jsonl"
+    lines = T.to_fault_log(tr, str(path))
+    assert lines == path.read_text().count("\n") - 1  # + the header comment
+    head = path.read_text().splitlines()[0]
+    assert head.startswith(f"{T._FAULT_LOG_MAGIC} v{T.FAULT_LOG_VERSION} ")
+    assert _eq(T.from_fault_log(str(path)), tr)
+
+
+def test_fault_log_roundtrip_tenanted_file_object():
+    tr = Z.tenant_churn(("StreamTriad", "Hotspot"), scale=SCALE, slice_len=100)
+    buf = io.StringIO()
+    T.to_fault_log(tr, buf, batch=64)
+    buf.seek(0)
+    back = T.from_fault_log(buf)
+    assert _eq(back, tr)
+    # batches never straddle a tenant boundary: every data line is one tenant
+    buf.seek(0)
+    import json
+    for line in buf:
+        if line.startswith("#"):
+            continue
+        rec = json.loads(line)
+        tags = np.unique(tr.tenant[np.isin(tr.page, rec["pages"])])
+        assert rec["tenant"] in tags.tolist()
+
+
+def test_fault_log_rejects_missing_header():
+    with pytest.raises(ValueError, match="not a uvm-fault-log"):
+        T.from_fault_log(io.StringIO('{"pages": [1, 2]}\n'))
+    with pytest.raises(ValueError, match="not a uvm-fault-log"):
+        T.from_fault_log(io.StringIO(""))
+
+
+def test_fault_log_rejects_unsupported_version():
+    with pytest.raises(ValueError, match="unsupported fault-log version"):
+        T.from_fault_log(io.StringIO('# uvm-fault-log v999 {}\n{"pages": [1]}\n'))
+
+
+def test_fault_log_rejects_mixed_tagged_untagged():
+    log = ('# uvm-fault-log v1 {"name": "x", "n_pages": 8, "tenant_names": ["a"]}\n'
+           '{"pages": [1], "tenant": 0}\n'
+           '{"pages": [2]}\n')
+    with pytest.raises(ValueError, match="mixed tagged/untagged"):
+        T.from_fault_log(io.StringIO(log))
+
+
+def test_fault_log_drives_run_ours_identically():
+    """An exported+reingested churn trace produces the exact counters and
+    accuracy of the original (the golden file pins the same pair)."""
+    tcfg = TrainConfig(group_size=1024, epochs=2, batch_size=128)
+    tr = Z.tenant_churn(("StreamTriad", "Hotspot"), scale=SCALE, slice_len=1024)
+    tr = tr.slice(0, min(len(tr), 2048))
+    buf = io.StringIO()
+    T.to_fault_log(tr, buf)
+    buf.seek(0)
+    a = R.run_ours(tr, SMOKE, tcfg)
+    b = R.run_ours(T.from_fault_log(buf), SMOKE, tcfg)
+    assert a.stats == b.stats and a.top1 == b.top1
+
+
+# --- real-trainer re-classification end to end (satellite: hysteresis) -------
+
+
+def _concat(parts):
+    n_pages = max(p.n_pages for p in parts)
+    arrs = [np.concatenate([getattr(p, f) for p in parts]).astype(np.int32)
+            for f in ("page", "pc", "tb", "kernel")]
+    return T.Trace("seq", *arrs, n_pages)
+
+
+def test_reclass_hysteresis_end_to_end_real_trainer():
+    """The full pipeline (DFA classifier + REAL NN trainer, not the numpy
+    stub): a single disagreeing window never flips the active pattern, a
+    genuine phase change flips exactly once, and the displaced pattern's
+    model entry stays warm — its update count freezes during the foreign
+    phase and resumes (not resets) after the switch-back."""
+    G = 256
+    stream = T.get_trace("StreamTriad", scale=0.6)
+    noise = Z.random_scan(scale=0.3)
+    # [4 stream windows | 1-window blip | 4 stream | 4 noise | 4 stream]
+    tr = _concat([stream.slice(0, 4 * G), noise.slice(0, G),
+                  stream.slice(4 * G, 8 * G), noise.slice(G, 5 * G),
+                  stream.slice(8 * G, 12 * G)])
+    tcfg = TrainConfig(group_size=G, epochs=2, batch_size=128)
+    mgr = R.manager_for(tr, SMOKE, tcfg, reclass_interval=G, reclass_hysteresis=2)
+    clock, pats, switches, updates = 0, [], [], []
+    for lo in range(0, len(tr), G):
+        hi = min(lo + G, len(tr))
+        act = mgr.observe(FaultBatch(tr.page[lo:hi], pc=tr.pc[lo:hi],
+                                     tb=tr.tb[lo:hi], kernel=tr.kernel[lo:hi]))
+        clock += hi - lo
+        mgr.feedback(Outcomes(was_evicted=np.zeros(hi - lo, bool), fault_count=clock))
+        pats.append(act.pattern)
+        switches.append(mgr.n_pattern_switches)
+        entry = mgr.table.slots.get(mgr.table.slot_of(pats[0]))
+        updates.append(0 if entry is None else entry.n_updates)
+    # every window re-ran the classifier...
+    assert mgr.n_reclassifications == len(pats) == 17
+    # ...but the lone blip window (index 4) never flips: the first 9
+    # windows (2 stream phases around the blip) keep the seeded pattern
+    assert pats[:9] == [pats[0]] * 9 and switches[8] == 0
+    # exactly one switch per GENUINE phase change (noise phase + back)
+    assert mgr.n_pattern_switches == 2
+    away = next(i for i, p in enumerate(pats) if p != pats[0])
+    back = next(i for i in range(away, len(pats)) if pats[i] == pats[0])
+    assert 9 <= away <= 12 < back  # flips inside the long noise phase only
+    assert pats[-1] == pats[0]  # switch-back re-activates the SAME pattern id
+    # displaced entry: frozen while the noise pattern is active, then warm —
+    # its count RESUMES above the frozen value instead of restarting
+    frozen = updates[away - 1]
+    assert frozen >= 4  # it genuinely trained through the first phases
+    assert all(u == frozen for u in updates[away:back])
+    assert updates[-1] > frozen
+
+
+# --- property bodies (shared by pinned cases and the hypothesis net) ---------
+
+
+def _check_phase_trace_deterministic(phases, seed, segment, gradual, w):
+    """Any phase mix, seed, segment and switch mode rebuilds bit-exactly."""
+    kw = dict(scale=SCALE, seed=seed, segment=segment)
+    if gradual:
+        kw.update(switch="gradual", mix_window=w)
+    assert _eq(Z.phase_trace(phases, **kw), Z.phase_trace(phases, **kw))
+
+
+def _check_gradual_conserves(phases, seed, segment, w):
+    """Gradual vs abrupt: same length, same access multiset, bit-equal
+    outside every boundary's blend window."""
+    ab = Z.phase_trace(phases, scale=SCALE, seed=seed, segment=segment)
+    gr = Z.phase_trace(phases, scale=SCALE, seed=seed, segment=segment,
+                       switch="gradual", mix_window=w)
+    assert len(gr) == len(ab)
+    assert np.array_equal(_tuples(gr), _tuples(ab))
+    lens = [min(len(Z.get_trace(p, scale=SCALE)), segment) for p in phases]
+    bounds = np.cumsum(lens)[:-1]
+    untouched = np.ones(len(ab), bool)
+    for b in bounds:
+        untouched[max(b - w, 0):min(b + w, len(ab))] = False
+    assert np.array_equal(gr.page[untouched], ab.page[untouched])
+
+
+def _check_churn_subsequence(seed, joins, spans, slice_len):
+    """Arbitrary joins/spans/slice sizes: per-tenant access order, page
+    offsets and pc/kernel namespacing always survive the churn."""
+    names = ("StreamTriad", "Hotspot", "ATAX")[:len(joins)]
+    tr = Z.tenant_churn(names, scale=SCALE, seed=seed, joins=tuple(joins),
+                        spans=tuple(spans[:len(joins)]), slice_len=slice_len)
+    parts = []
+    for i, nm in enumerate(names):
+        p = Z.get_trace(nm, scale=SCALE)
+        span = spans[i] if spans[i] else len(p)
+        parts.append(p.slice(0, min(len(p), span)))
+    _per_tenant_ok(tr, parts)
+    assert len(tr) == sum(len(p) for p in parts)
+
+
+def _check_faultlog_roundtrip(pages, n_tenants, tagged, batch):
+    """Arbitrary synthetic traces (tenanted or not, any batch size):
+    to_fault_log -> from_fault_log is the identity."""
+    n = len(pages)
+    rng = np.random.default_rng(0)
+    tr = T.Trace(
+        "fuzz", np.asarray(pages, np.int32),
+        rng.integers(0, 16, n).astype(np.int32),
+        rng.integers(0, 8, n).astype(np.int32),
+        np.sort(rng.integers(0, 4, n)).astype(np.int32),
+        max(pages) + 1,
+        tenant=rng.integers(0, n_tenants, n).astype(np.int32) if tagged else None,
+        tenant_names=tuple(f"t{i}" for i in range(n_tenants)) if tagged else (),
+    )
+    buf = io.StringIO()
+    T.to_fault_log(tr, buf, batch=batch)
+    buf.seek(0)
+    assert _eq(T.from_fault_log(buf), tr)
+
+
+@pytest.mark.parametrize("phases,seed,segment,gradual,w", [
+    (("StreamTriad", "RandomScan"), 7, 300, False, 0),
+    (("PtrChase", "ATAX", "StridedNoise"), 123456789, 555, True, 64),
+    (("RandomScan", "RandomScan"), 0, 90, True, 200),
+])
+def test_phase_trace_deterministic_pinned(phases, seed, segment, gradual, w):
+    _check_phase_trace_deterministic(phases, seed, segment, gradual, w)
+
+
+@pytest.mark.parametrize("phases,seed,segment,w", [
+    (("StreamTriad", "ATAX"), 0, 400, 100),
+    (("PtrChase", "StridedNoise", "StreamTriad"), 42, 250, 300),
+])
+def test_gradual_blend_conserves_pinned(phases, seed, segment, w):
+    _check_gradual_conserves(phases, seed, segment, w)
+
+
+@pytest.mark.parametrize("seed,joins,spans,slice_len", [
+    (0, [0, 900], [0, 0, 0], 128),
+    (3, [400, 0, 1800], [700, 0, 500], 64),
+    (9, [2000, 2000], [100, 100, 0], 512),
+])
+def test_churn_subsequence_invariant_pinned(seed, joins, spans, slice_len):
+    _check_churn_subsequence(seed, joins, spans, slice_len)
+
+
+@pytest.mark.parametrize("pages,n_tenants,tagged,batch", [
+    ([0], 1, False, 1),
+    ([5, 5, 5, 9, 0, 4999], 3, True, 2),
+    (list(range(50)), 2, True, 32),
+])
+def test_faultlog_roundtrip_pinned(pages, n_tenants, tagged, batch):
+    _check_faultlog_roundtrip(pages, n_tenants, tagged, batch)
+
+
+# --- hypothesis net ----------------------------------------------------------
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    _POOL = ("StreamTriad", "ATAX", "PtrChase", "StridedNoise", "RandomScan")
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.sampled_from(_POOL), min_size=2, max_size=4),
+           st.integers(0, 2 ** 31 - 1), st.integers(50, 700),
+           st.booleans(), st.integers(1, 200))
+    def test_phase_trace_deterministic_hypothesis(phases, seed, segment, gradual, w):
+        _check_phase_trace_deterministic(phases, seed, segment, gradual, w)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.sampled_from(_POOL), min_size=2, max_size=3),
+           st.integers(0, 2 ** 31 - 1), st.integers(100, 600), st.integers(1, 300))
+    def test_gradual_blend_conserves_accesses_hypothesis(phases, seed, segment, w):
+        _check_gradual_conserves(phases, seed, segment, w)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1),
+           st.lists(st.integers(0, 2000), min_size=2, max_size=3),
+           st.lists(st.integers(0, 1200), min_size=3, max_size=3),
+           st.integers(16, 512))
+    def test_churn_subsequence_invariant_hypothesis(seed, joins, spans, slice_len):
+        _check_churn_subsequence(seed, joins, spans, slice_len)
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.integers(0, 5000), min_size=1, max_size=60),
+           st.integers(1, 4), st.booleans(), st.integers(1, 32))
+    def test_fault_log_roundtrip_hypothesis(pages, n_tenants, tagged, batch):
+        _check_faultlog_roundtrip(pages, n_tenants, tagged, batch)
+
+except ImportError:  # pragma: no cover - tier-1 must collect without hypothesis
+    pass
