@@ -47,6 +47,16 @@ REQUIRED_FLAG_MENTIONS = {
         "--phases", "--drift-kind", "--switch", "--mix-window", "--joins",
         "--spans", "--out",
     ),
+    # the async serving surface (PR 8): server + loadgen ship with docs
+    ("repro.uvm.cli", "server"): (
+        "--socket", "--port", "--max-sessions", "--idle-timeout",
+        "--gather-spins", "--serial", "--engine", "--aot-cache",
+    ),
+    ("repro.uvm.cli", "loadgen"): (
+        "--connect", "--clients", "--rate", "--repeat", "--hello-prefix",
+        "--malformed-every", "--malformed-client", "--inject",
+        "--chaos-client", "--json",
+    ),
 }
 
 # python -m <module> [args ...] — up to a backtick, pipe or line end

@@ -225,75 +225,40 @@ def cmd_report(args) -> int:
     return 0
 
 
-class _ServeLineError(ValueError):
-    """A malformed JSONL line — reported as a structured error line, never
-    a traceback (a long-lived sidecar must survive garbage input)."""
+# back-compat aliases: the codec moved to repro.uvm.server.protocol so the
+# single-connection sidecar and the async server share one schema
+from repro.uvm.server.protocol import ProtocolError as _ServeLineError  # noqa: E402
+from repro.uvm.server.protocol import decode_line as _decode_serve_line  # noqa: E402,F401
 
 
-def _decode_serve_line(line: str, default_tenant: str):
-    """Validate one JSONL line into ``(kind, tenant, payload)`` where kind
-    is ``'observe'`` or ``'feedback'``.  Raises :class:`_ServeLineError`
-    with a one-line reason on anything malformed."""
-    import numpy as np
-
-    try:
-        rec = json.loads(line)
-    except json.JSONDecodeError as e:
-        raise _ServeLineError(f"bad json: {e.msg}") from None
-    if not isinstance(rec, dict):
-        raise _ServeLineError(f"line must be a JSON object, got {type(rec).__name__}")
-    tenant = rec.get("tenant", None)
-    if tenant is not None and not isinstance(tenant, (str, int)):
-        raise _ServeLineError(f"'tenant' must be a string or int, got {type(tenant).__name__}")
-    tagged = tenant is not None
-    tenant = default_tenant if tenant is None else tenant
-    if ("pages" in rec) == ("feedback" in rec):
-        raise _ServeLineError("line needs exactly one of 'pages' or 'feedback'")
-    if "feedback" in rec:
-        fb = rec["feedback"] or {}
-        if not isinstance(fb, dict):
-            raise _ServeLineError("'feedback' must be a JSON object")
-        we = fb.get("was_evicted")
-        if we is not None and (not isinstance(we, list) or any(not isinstance(x, bool) for x in we)):
-            raise _ServeLineError("'was_evicted' must be a list of booleans")
-        fc = fb.get("fault_count")
-        if fc is not None and (isinstance(fc, bool) or not isinstance(fc, int) or fc < 0):
-            raise _ServeLineError("'fault_count' must be a non-negative integer")
-        return "feedback", (tenant, tagged), {"was_evicted": we, "fault_count": fc}
-    pages = rec["pages"]
-    if not isinstance(pages, list) or any(isinstance(p, bool) or not isinstance(p, int) or p < 0 for p in pages):
-        raise _ServeLineError("'pages' must be a list of non-negative integers")
-    sides = {}
-    for ch in ("pc", "tb", "kernel"):
-        v = rec.get(ch)
-        if v is not None and (not isinstance(v, list) or len(v) != len(pages)
-                              or any(isinstance(x, bool) or not isinstance(x, int) for x in v)):
-            raise _ServeLineError(f"'{ch}' must be a list of ints aligned with 'pages'")
-        sides[ch] = v
-    return "observe", (tenant, tagged), {"pages": np.asarray(pages, np.int64), **sides}
-
-
-def cmd_serve(args) -> int:
-    import signal
-
-    import numpy as np
-
+def _manager_config(args):
+    """The per-session ManagerConfig both streaming surfaces (serve and
+    server) build from the same flag set."""
     from repro.configs.predictor_paper import CONFIG_QUICK
-    from repro.uvm.manager import FaultBatch, HealthConfig, ManagerConfig, Outcomes, TenantMux
+    from repro.uvm.manager import HealthConfig, ManagerConfig
 
     n_blocks = (args.n_pages + args.pages_per_block - 1) // args.pages_per_block
     capacity = args.capacity if args.capacity is not None else max(int(n_blocks / args.oversub), 1)
-    cfg = ManagerConfig(
+    return ManagerConfig(
         predictor=CONFIG_QUICK,
         train=dataclasses.replace(TrainSpec(), group_size=args.group_size).to_train_config(),
         kind=args.kind, n_pages=args.n_pages, n_blocks=n_blocks, capacity=capacity,
         pages_per_block=args.pages_per_block,
         classifier=args.classifier, freq_table=args.freq_table,
         reclass_interval=args.reclass_interval, reclass_hysteresis=args.reclass_hysteresis,
-        # the sidecar always runs the degraded-mode health machine: a live
-        # stream must fail SOFT into rule-based actions, never crash
+        # the streaming surfaces always run the degraded-mode health
+        # machine: a live stream must fail SOFT into rule-based actions
         health=HealthConfig(latency_budget_ms=args.latency_budget_ms),
     )
+
+
+def cmd_serve(args) -> int:
+    import signal
+
+    from repro.uvm.manager import TenantMux
+    from repro.uvm.server.session import StreamSession, SyncDispatch, drive
+
+    cfg = _manager_config(args)
     # tenants are admitted on first contact (auto_create): every "tenant"-
     # tagged line gets its own classifier->predictor pipeline; untagged
     # lines share the --default-tenant one (the single-workload case)
@@ -313,36 +278,17 @@ def cmd_serve(args) -> int:
         store = SnapshotStore(args.checkpoint_dir)
         store.clean_tmp()  # sweep turds a killed writer left behind
     fh = sys.stdin if args.input == "-" else open(args.input)
-    pending: dict = {}  # tenant -> pending batch length (None: closed)
-    last_fault = 0
-    last_tenant = args.default_tenant
-    batches = 0
-    errors = 0
-    lineno = 0
-    resume_lineno = 0
+    session = StreamSession(mux, default_tenant=args.default_tenant,
+                            store=store, checkpoint_every=args.checkpoint_every)
     if args.resume:
         if store is None:
             print("# serve --resume requires --checkpoint-dir", file=sys.stderr)
             return 2
         if store.latest_step() is not None:
-            step, state, extra = store.restore()
-            mux.restore(state)
-            pending = {k: None for k in mux.managers}
-            batches = extra.get("batches", step)
-            errors = extra.get("errors", 0)
-            last_fault = extra.get("last_fault", 0)
-            last_tenant = extra.get("last_tenant", args.default_tenant)
-            resume_lineno = extra.get("lineno", 0)
+            batches, resume_lineno = session.resume_latest()
             print(f"# resumed batch={batches} lineno={resume_lineno} "
                   f"tenants={len(mux.managers)} from {store.dir}", flush=True)
-
-    def close(tenant, outcomes):
-        mux.feedback(outcomes, tenant=tenant)
-        pending[tenant] = None
-
-    def extra_record():
-        return {"lineno": lineno, "batches": batches, "errors": errors,
-                "last_fault": last_fault, "last_tenant": last_tenant}
+    dispatch = SyncDispatch(mux.trainer, cfg.use_lucir)
 
     # SIGTERM/SIGINT: finish the current line, close pending batches, flush
     # a final snapshot + the stats record, exit 0 (a drain, not a crash)
@@ -356,99 +302,124 @@ def cmd_serve(args) -> int:
             )
         except ValueError:  # not the main thread (embedded callers)
             pass
-    checkpoint_due = False
     line_iter = injector.transform_lines(fh) if injector is not None else fh
     try:
         for line in line_iter:
             if stop:
                 break
-            # snapshots happen only at fully-closed round boundaries (every
-            # tenant's pending batch fed back); a due checkpoint waits here
-            # until the boundary comes around
-            if checkpoint_due and all(v is None for v in pending.values()):
-                store.save(batches, mux.state(), extra=extra_record())
-                checkpoint_due = False
-            lineno += 1
-            if lineno <= resume_lineno:
-                continue  # consumed before the snapshot we restored from
-            line = line.strip()
-            if not line or line.startswith("#"):
-                continue
-            try:
-                kind, (tenant, tagged), payload = _decode_serve_line(line, args.default_tenant)
-                if kind == "feedback":
-                    if not tagged:
-                        tenant = last_tenant  # untagged: closes the previous batch
-                    we = payload["was_evicted"]
-                    if pending.get(tenant) is None and we is not None:
-                        # an outcome report with nothing to apply it to is
-                        # lost data -> error; a bare fault_count line merely
-                        # seeds the clock (legacy input, accepted silently)
-                        raise _ServeLineError(f"feedback for tenant {tenant!r} without a pending batch")
-                    if we is not None and len(we) != pending[tenant]:
-                        raise _ServeLineError(
-                            f"'was_evicted' must have one entry per access of tenant "
-                            f"{tenant!r}'s pending batch (expected {pending[tenant]}, got {len(we)})"
-                        )
-                    if payload["fault_count"] is not None:
-                        last_fault = payload["fault_count"]
-                    if pending.get(tenant) is not None:
-                        close(tenant, Outcomes(
-                            was_evicted=np.asarray(we, bool) if we is not None else None,
-                            fault_count=last_fault,
-                        ))
-                    continue
-                if pending.get(tenant) is not None:  # auto-close (no outcome report)
-                    close(tenant, Outcomes(fault_count=last_fault))
-                out = mux.observe(FaultBatch(
-                    payload["pages"], payload["pc"], payload["tb"], payload["kernel"],
-                    tenant=tenant,
-                ))
-                actions = out.per_tenant[tenant]
-                pending[tenant] = len(payload["pages"])
-                last_tenant = tenant
-                batches += 1
-                rec = {
-                    "batch": batches,
-                    "pattern": actions.pattern,
-                    "n_samples": actions.n_samples,
-                    "accuracy": actions.accuracy,
-                    "warm": actions.warm,
-                    "health": actions.health,
-                    "fallback": actions.fallback,
-                    "prefetch_blocks": np.asarray(actions.prefetch_blocks).tolist(),
-                    "pre_evict_blocks": np.asarray(actions.pre_evict_blocks).tolist(),
-                }
-                if tagged:
-                    rec["tenant"] = tenant
-                print(json.dumps(rec), flush=True)
-                if store is not None and args.checkpoint_every and batches % args.checkpoint_every == 0:
-                    checkpoint_due = True
-            except _ServeLineError as e:
-                errors += 1
-                print(json.dumps({"error": str(e), "line": lineno}), flush=True)
-        for tenant, p in pending.items():
-            if p is not None:
-                close(tenant, Outcomes(fault_count=last_fault))
+            for rec in drive(session.step(line), dispatch):
+                print(rec, flush=True)
+        drive(session.drain(), dispatch)
     finally:
         for signum, old in installed.items():
             signal.signal(signum, old)
         if fh is not sys.stdin:
             fh.close()
     if store is not None:
-        store.save(batches, mux.state(), extra=extra_record())
+        session.save_snapshot()
     if injector is not None:
         fired = {k: injector.counts[k] for k in sorted(injector.counts)}
         print(f"# chaos schedule={json.dumps(injector.schedule.to_dict(), sort_keys=True)} "
               f"fired={json.dumps(fired)}", flush=True)
     if stop:
         print(f"# serve shutdown signal={stop['signal']} (state flushed)", flush=True)
-    print(f"# serve batches={batches} predictions={mux.n_predictions} "
-          f"patterns={mux.n_models} classes={mux.n_classes} top1={mux.top1:.3f} "
-          f"tenants={len(mux.managers)} errors={errors} "
-          f"health_faults={mux.n_health_faults} fallbacks={mux.n_fallbacks} "
-          f"recoveries={mux.n_recoveries}")
-    return 2 if errors and args.strict else 0
+    print(session.summary_line())
+    return 2 if session.errors and args.strict else 0
+
+
+def cmd_server(args) -> int:
+    """Async fault-stream server: many concurrent serve sessions, one
+    cross-connection microbatched trainer dispatch per tick."""
+    import asyncio
+    import signal
+
+    from repro.core.incremental import Trainer
+    from repro.uvm.server.core import FaultStreamServer, ServerConfig
+
+    mcfg = _manager_config(args)
+    cfg = ServerConfig(
+        manager=mcfg, default_tenant=args.default_tenant,
+        shared_freq_table=args.shared_freq_table,
+        max_sessions=args.max_sessions, idle_timeout_s=args.idle_timeout,
+        gather_spins=args.gather_spins, microbatch=not args.serial,
+        exec_mode=args.engine,
+        checkpoint_dir=args.checkpoint_dir, checkpoint_every=args.checkpoint_every,
+        resume=args.resume, inject=args.inject,
+    )
+    if args.socket is None and args.port is None:
+        print("# server needs --socket PATH and/or --port N", file=sys.stderr)
+        return 2
+
+    async def main() -> int:
+        trainer = Trainer(mcfg.predictor, mcfg.train, mcfg.kind)
+        if args.aot_cache:
+            from repro.uvm.server.aot import enable_aot
+
+            enable_aot(trainer, args.aot_cache)
+        server = FaultStreamServer(cfg, trainer=trainer)
+        await server.start(path=args.socket, host=args.host if args.port is not None else None,
+                           port=args.port or 0)
+        where = " ".join(filter(None, [
+            f"unix={args.socket}" if args.socket else None,
+            f"tcp={args.host}:{server.tcp_port}" if args.port is not None else None,
+        ]))
+        mode = "serial" if args.serial else f"batched-{server.dispatcher.engine}"
+        print(f"# server listening {where} mode={mode} "
+              f"max_sessions={cfg.max_sessions}", flush=True)
+        stop = asyncio.Event()
+        loop = asyncio.get_running_loop()
+        for signum in (signal.SIGTERM, signal.SIGINT):
+            try:
+                loop.add_signal_handler(signum, stop.set)
+            except NotImplementedError:  # pragma: no cover - non-unix loops
+                pass
+        stopper = asyncio.ensure_future(stop.wait())
+        forever = asyncio.ensure_future(server.serve_forever())
+        await asyncio.wait({stopper, forever}, return_when=asyncio.FIRST_COMPLETED)
+        forever.cancel()
+        await server.shutdown()
+        if server.injector is not None:
+            inj = server.injector
+            fired = {k: inj.counts[k] for k in sorted(inj.counts)}
+            print(f"# chaos schedule={json.dumps(inj.schedule.to_dict(), sort_keys=True)} "
+                  f"fired={json.dumps(fired)}", flush=True)
+        if args.aot_cache:
+            print(f"# aot cache={args.aot_cache} {json.dumps(trainer.aot_cache.stats())}",
+                  flush=True)
+        print(server.summary_line(), flush=True)
+        return 0
+
+    return asyncio.run(main())
+
+
+def cmd_loadgen(args) -> int:
+    """Deterministic multi-client replay of an exported fault log against
+    a running server; reports faults/sec + p50/p99 action latency."""
+    import asyncio
+
+    from repro.uvm.server.loadgen import make_connector, run_loadgen
+
+    with (sys.stdin if args.input == "-" else open(args.input)) as fh:
+        lines = [l.rstrip("\n") for l in fh if l.strip() and not l.startswith("#")]
+    chaos_schedules = {}
+    if args.inject is not None:
+        from repro.uvm.manager import ChaosSchedule, FaultInjector
+
+        chaos_schedules[args.chaos_client] = FaultInjector(ChaosSchedule.parse(args.inject))
+    stats = asyncio.run(run_loadgen(
+        make_connector(args.connect), lines, args.clients, rate=args.rate,
+        repeat=args.repeat, hello_prefix=args.hello_prefix,
+        chaos_schedules=chaos_schedules,
+        malformed_every=args.malformed_every, malformed_client=args.malformed_client,
+    ))
+    if args.json:
+        payload = {k: v for k, v in dataclasses.asdict(stats).items() if k != "per_client"}
+        Path(args.json).write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"# loadgen clients={stats.clients} lines={stats.lines_sent} "
+          f"actions={stats.actions} errors={stats.errors} faults={stats.faults} "
+          f"wall_s={stats.wall_s:.3f} faults_per_s={stats.faults_per_s:.1f} "
+          f"p50_ms={stats.p50_ms:.2f} p99_ms={stats.p99_ms:.2f}")
+    return 0
 
 
 def _export_workload(args, session: Session) -> WorkloadSpec:
@@ -479,7 +450,54 @@ def cmd_export(args) -> int:
 
 
 SUBCOMMANDS = {"run": cmd_run, "sweep": cmd_sweep, "report": cmd_report,
-               "serve": cmd_serve, "export": cmd_export}
+               "serve": cmd_serve, "server": cmd_server, "loadgen": cmd_loadgen,
+               "export": cmd_export}
+
+
+def _add_stream_flags(p) -> None:
+    """The per-session manager surface `serve` and `server` share: one
+    flag set -> one ManagerConfig (:func:`_manager_config`), so the two
+    streaming surfaces cannot drift apart."""
+    p.add_argument("--n-pages", type=int, default=4096, help="working-set size in pages")
+    p.add_argument("--pages-per-block", type=int, default=PAGES_PER_BLOCK,
+                   help="pages per management block (1 = manage pages directly)")
+    p.add_argument("--oversub", type=float, default=1.25,
+                   help="oversubscription level (sets the prefetch-budget capacity)")
+    p.add_argument("--capacity", type=int, default=None,
+                   help="device capacity in blocks (overrides --oversub)")
+    p.add_argument("--kind", default="transformer", help="registered predictor kind")
+    p.add_argument("--classifier", default="dfa", help="registered pattern classifier")
+    p.add_argument("--freq-table", default="setassoc", help="registered frequency-table engine")
+    p.add_argument("--group-size", type=int, default=512, help="fine-tune schedule group size")
+    p.add_argument("--default-tenant", default="default",
+                   help="tenant id for JSONL lines without a per-line 'tenant' field "
+                        "(tagged lines each get their own classifier->predictor pipeline)")
+    p.add_argument("--shared-freq-table", action="store_true",
+                   help="tenants share ONE prediction-frequency table (default: isolated per tenant)")
+    p.add_argument("--reclass-interval", type=int, default=0,
+                   help="re-run the pattern classifier every N faults (observed accesses "
+                        "when no feedback reports a fault count; 0 = every batch)")
+    p.add_argument("--reclass-hysteresis", type=int, default=2,
+                   help="consecutive agreeing windows before a pattern switch")
+    p.add_argument("--checkpoint-dir", default=None,
+                   help="snapshot directory (versioned, content-hashed manager state; "
+                        "also written once on shutdown; the server keeps one "
+                        "subdirectory per hello-named session)")
+    p.add_argument("--checkpoint-every", type=int, default=0,
+                   help="snapshot after every N observed batches, at the next fully "
+                        "fed-back round boundary (0 = only the shutdown snapshot)")
+    p.add_argument("--resume", action="store_true",
+                   help="restore the latest snapshot in --checkpoint-dir and skip the "
+                        "input lines it already consumed (the resumed action tail is "
+                        "bit-identical to an uninterrupted run)")
+    p.add_argument("--inject", default=None,
+                   help="seeded chaos schedule, 'key=prob,...,seed=N' or '@plan.json' "
+                        "(see repro.uvm.manager.chaos); exercises the health machine — "
+                        "degraded rounds answer with rule-based fallback actions "
+                        "(health/fallback fields on every action record)")
+    p.add_argument("--latency-budget-ms", type=float, default=0.0,
+                   help="per-observe dispatch budget in ms; overruns demote the learned "
+                        "path to degraded health (0 = no budget)")
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -515,47 +533,74 @@ def build_parser() -> argparse.ArgumentParser:
 
     p_srv = sub.add_parser("serve", help="drive the streaming manager over a JSONL fault stream")
     p_srv.add_argument("--input", default="-", help="JSONL fault-batch stream ('-' = stdin)")
-    p_srv.add_argument("--n-pages", type=int, default=4096, help="working-set size in pages")
-    p_srv.add_argument("--pages-per-block", type=int, default=PAGES_PER_BLOCK,
-                       help="pages per management block (1 = manage pages directly)")
-    p_srv.add_argument("--oversub", type=float, default=1.25,
-                       help="oversubscription level (sets the prefetch-budget capacity)")
-    p_srv.add_argument("--capacity", type=int, default=None,
-                       help="device capacity in blocks (overrides --oversub)")
-    p_srv.add_argument("--kind", default="transformer", help="registered predictor kind")
-    p_srv.add_argument("--classifier", default="dfa", help="registered pattern classifier")
-    p_srv.add_argument("--freq-table", default="setassoc", help="registered frequency-table engine")
-    p_srv.add_argument("--group-size", type=int, default=512, help="fine-tune schedule group size")
-    p_srv.add_argument("--default-tenant", default="default",
-                       help="tenant id for JSONL lines without a per-line 'tenant' field "
-                            "(tagged lines each get their own classifier->predictor pipeline)")
-    p_srv.add_argument("--shared-freq-table", action="store_true",
-                       help="tenants share ONE prediction-frequency table (default: isolated per tenant)")
-    p_srv.add_argument("--reclass-interval", type=int, default=0,
-                       help="re-run the pattern classifier every N faults (observed accesses "
-                            "when no feedback reports a fault count; 0 = every batch)")
-    p_srv.add_argument("--reclass-hysteresis", type=int, default=2,
-                       help="consecutive agreeing windows before a pattern switch")
+    _add_stream_flags(p_srv)
     p_srv.add_argument("--strict", action="store_true",
                        help="exit non-zero if any malformed line was reported")
-    p_srv.add_argument("--checkpoint-dir", default=None,
-                       help="snapshot directory (versioned, content-hashed manager state; "
-                            "also written once on shutdown)")
-    p_srv.add_argument("--checkpoint-every", type=int, default=0,
-                       help="snapshot after every N observed batches, at the next fully "
-                            "fed-back round boundary (0 = only the shutdown snapshot)")
-    p_srv.add_argument("--resume", action="store_true",
-                       help="restore the latest snapshot in --checkpoint-dir and skip the "
-                            "input lines it already consumed (the resumed action tail is "
-                            "bit-identical to an uninterrupted run)")
-    p_srv.add_argument("--inject", default=None,
-                       help="seeded chaos schedule, 'key=prob,...,seed=N' or '@plan.json' "
-                            "(see repro.uvm.manager.chaos); exercises the health machine — "
-                            "degraded rounds answer with rule-based fallback actions "
-                            "(health/fallback fields on every action record)")
-    p_srv.add_argument("--latency-budget-ms", type=float, default=0.0,
-                       help="per-observe dispatch budget in ms; overruns demote the learned "
-                            "path to degraded health (0 = no budget)")
+
+    p_ssrv = sub.add_parser(
+        "server",
+        help="async fault-stream server: many concurrent serve sessions, one "
+             "cross-connection microbatched ('tenant'-aware, health-guarded) "
+             "trainer dispatch per tick; action records carry the same "
+             '"pattern"/"health"/"fallback" fields as serve',
+    )
+    _add_stream_flags(p_ssrv)
+    p_ssrv.add_argument("--socket", default=None,
+                        help="unix socket path to listen on (and/or --port)")
+    p_ssrv.add_argument("--host", default="127.0.0.1", help="TCP bind host (with --port)")
+    p_ssrv.add_argument("--port", type=int, default=None,
+                        help="TCP port to listen on (0 = ephemeral, announced on startup)")
+    p_ssrv.add_argument("--max-sessions", type=int, default=4096,
+                        help="admission cap: concurrent connections beyond it are refused "
+                             "with a structured error record")
+    p_ssrv.add_argument("--idle-timeout", type=float, default=0.0,
+                        help="close (drain + snapshot) connections idle this many seconds "
+                             "(0 = never)")
+    p_ssrv.add_argument("--gather-spins", type=int, default=2,
+                        help="event-loop passes the dispatcher waits per tick so every "
+                             "connection with buffered input stages its half")
+    p_ssrv.add_argument("--serial", action="store_true",
+                        help="per-connection serial dispatch instead of cross-connection "
+                             "microbatching (the serve_perf baseline; action streams are "
+                             "bit-identical either way)")
+    p_ssrv.add_argument("--engine", choices=("auto", "vmap", "fused"), default="auto",
+                        help="how a microbatched tick executes: 'vmap' stacks every lane "
+                             "into one vmapped dispatch (pays on multi-device), 'fused' "
+                             "sweeps the warm serial jits in one worker hop (single-device "
+                             "default); 'auto' picks by device count, REPRO_OURS_BATCHED "
+                             "overrides")
+    p_ssrv.add_argument("--aot-cache", default=None,
+                        help="directory of AOT-exported trainer executables: compile-once "
+                             "artifacts reloaded on start so a fresh process skips the "
+                             "per-process jit traces (falls back to jit on any mismatch)")
+
+    p_lg = sub.add_parser(
+        "loadgen",
+        help="deterministic multi-client load generator: replay an exported "
+             "fault log over N concurrent server connections at a target rate",
+    )
+    p_lg.add_argument("--connect", required=True,
+                      help="server address: 'unix:/path/to.sock' or 'host:port'")
+    p_lg.add_argument("--input", default="-",
+                      help="JSONL fault log every client replays ('-' = stdin)")
+    p_lg.add_argument("--clients", type=int, default=8, help="concurrent connections")
+    p_lg.add_argument("--rate", type=float, default=0.0,
+                      help="per-client lines/second pacing (0 = as fast as the "
+                           "closed loop allows)")
+    p_lg.add_argument("--repeat", type=int, default=1, help="replay passes per client")
+    p_lg.add_argument("--hello-prefix", default=None,
+                      help="send a hello line naming each session '<prefix><idx>' "
+                           "(binds server-side checkpoints/resume)")
+    p_lg.add_argument("--malformed-every", type=int, default=0,
+                      help="the --malformed-client injects a non-JSON line every N lines")
+    p_lg.add_argument("--malformed-client", type=int, default=None,
+                      help="index of the client that injects malformed lines")
+    p_lg.add_argument("--inject", default=None,
+                      help="seeded chaos schedule applied to the --chaos-client's OUTGOING "
+                           "stream (transform_lines: drops/dups/reorders/losses)")
+    p_lg.add_argument("--chaos-client", type=int, default=0,
+                      help="index of the client whose stream --inject transforms")
+    p_lg.add_argument("--json", default=None, help="also write the aggregate stats as JSON")
 
     p_exp = sub.add_parser(
         "export",

@@ -244,10 +244,8 @@ class TenantMux:
         pre-dispatch guard runs first (a tenant with poisoned params falls
         back alone) and a batched-dispatch failure demotes every tenant
         that dispatched — they all fall back this round."""
-        pairs = self.observe_begin(batch)
-        evals = [(k, r) for k, r in pairs if r is not None and self.managers[k].guard_dispatch(r)]
-        dispatched = {id(r) for _, r in evals}
-        out: list = []
+        pairs, evals = self.observe_requests(batch)
+        out: list | BaseException = []
         if evals:
             try:
                 out = self.trainer.evaluate_many(
@@ -255,16 +253,38 @@ class TenantMux:
                     [r.n_active for _, r in evals],
                 )
             except Exception as exc:  # noqa: BLE001 — degraded mode absorbs anything
-                if self.cfg.health is None:
-                    raise
-                for k, _r in evals:
-                    self.managers[k].note_fault(exc)
-                out = [None] * len(evals)
-            else:
-                out = [
-                    res if self.managers[k].check_result(*res) else None
-                    for (k, _r), res in zip(evals, out)
-                ]
+                out = exc
+        return self.observe_apply(pairs, evals, out)
+
+    def observe_requests(self, batch: FaultBatch):
+        """The dispatch-staging half of :meth:`observe`: demux + classify
+        via :meth:`observe_begin`, then run each tenant's pre-dispatch
+        health guard.  Returns ``(pairs, evals)`` — all ``(tenant,
+        request)`` pairs plus the guarded subset that should actually hit
+        the trainer.  A lockstep server batches many muxes' ``evals``
+        through ONE ``evaluate_many`` and hands each mux its result slice
+        (or the shared exception) back via :meth:`observe_apply`."""
+        pairs = self.observe_begin(batch)
+        evals = [(k, r) for k, r in pairs if r is not None and self.managers[k].guard_dispatch(r)]
+        return pairs, evals
+
+    def observe_apply(self, pairs, evals, out) -> MuxActions:
+        """The result-folding half of :meth:`observe`.  ``out`` is
+        ``evaluate_many``'s result list aligned with ``evals`` — or the
+        exception it raised, which (with ``cfg.health`` set) demotes every
+        tenant that dispatched; they all fall back this round."""
+        dispatched = {id(r) for _, r in evals}
+        if isinstance(out, BaseException):
+            if self.cfg.health is None:
+                raise out
+            for k, _r in evals:
+                self.managers[k].note_fault(out)
+            out = [None] * len(evals)
+        else:
+            out = [
+                res if self.managers[k].check_result(*res) else None
+                for (k, _r), res in zip(evals, out)
+            ]
         results = iter(out)
         return self.observe_finish(
             [next(results) if (r is not None and id(r) in dispatched) else None for _, r in pairs]
@@ -277,16 +297,39 @@ class TenantMux:
         ``cfg.health`` set, a batched train failure demotes every tenant
         whose fine-tune was staged (their entry updates are lost; the
         rounds still close)."""
-        pairs = self.feedback_begin(outcomes, tenant=tenant)
-        treqs = [(k, r) for k, r in pairs if r is not None]
+        pairs, treqs = self.feedback_requests(outcomes, tenant=tenant)
+        exc = None
+        # dispatch even with zero staged trains: a chaos-wrapped trainer
+        # draws its RNG per CALL, so skipping the empty call would shift
+        # every later injection site of a seeded schedule
         try:
             self.trainer.train_group_many(
-                [r.entry for _, r in treqs], [r.fs for _, r in treqs], [r.n_active for _, r in treqs],
+                [r.entry for _, r in treqs], [r.fs for _, r in treqs],
+                [r.n_active for _, r in treqs],
                 in_et_list=[r.in_et for _, r in treqs], use_lucir=self.cfg.use_lucir,
             )
-        except Exception as exc:  # noqa: BLE001
+        except Exception as e:  # noqa: BLE001
+            exc = e
+        self.feedback_apply(pairs, treqs, exc)
+
+    def feedback_requests(self, outcomes: Outcomes, *, tenant=_UNSET):
+        """The dispatch-staging half of :meth:`feedback`: split the outcome
+        report and stage each tenant's fine-tune.  Returns ``(pairs,
+        treqs)`` — all ``(tenant, request)`` pairs plus the non-``None``
+        subset to hand to ``train_group_many`` (requests carry
+        ``use_lucir``; a lockstep server batches them across muxes)."""
+        pairs = self.feedback_begin(outcomes, tenant=tenant)
+        treqs = [(k, r) for k, r in pairs if r is not None]
+        return pairs, treqs
+
+    def feedback_apply(self, pairs, treqs, exc) -> None:
+        """The result-folding half of :meth:`feedback`.  ``exc`` is the
+        exception ``train_group_many`` raised (entries are updated in
+        place, so success carries no payload); with ``cfg.health`` set it
+        demotes every tenant whose fine-tune was staged."""
+        if exc is not None:
             if self.cfg.health is None:
-                raise
+                raise exc
             for k, _r in treqs:
                 self.managers[k].note_fault(exc)
                 self.managers[k]._pending = None

@@ -1,0 +1,48 @@
+"""Async fault-stream serving: many concurrent JSONL clients, one
+cross-connection microbatched model dispatch per tick.
+
+The package splits the ``cli serve`` sidecar into reusable layers:
+
+* :mod:`~repro.uvm.server.protocol` — the versioned JSONL line codec
+  (observe / feedback / hello records, structured error lines) shared by
+  ``cli serve``, the async server, and the load generator.
+* :mod:`~repro.uvm.server.session` — :class:`StreamSession`, a sans-io
+  per-connection state machine that turns input lines into staged
+  :class:`~repro.uvm.manager.core.EvalRequest` /
+  :class:`~repro.uvm.manager.core.TrainRequest` ticks and folds results
+  back into action records.  ``cli serve`` drives one session inline;
+  the server drives thousands through a shared dispatcher.
+* :mod:`~repro.uvm.server.core` — :class:`FaultStreamServer`, the
+  asyncio accept loop + :class:`MicrobatchDispatcher` lockstep engine
+  that batches every session's staged halves through ONE vmapped
+  ``Trainer.evaluate_many`` / ``train_group_many`` call per tick.
+* :mod:`~repro.uvm.server.loadgen` — a deterministic multi-client load
+  generator replaying exported fault logs at a target rate.
+* :mod:`~repro.uvm.server.aot` — compile-once AOT export/reload of the
+  trainer's jitted executables, bit-identical to the jit path.
+"""
+from repro.uvm.server.aot import AotCache, enable_aot
+from repro.uvm.server.core import FaultStreamServer, MicrobatchDispatcher, ServerConfig
+from repro.uvm.server.loadgen import LoadStats, make_connector, run_loadgen
+from repro.uvm.server.protocol import ProtocolError, decode_line, encode_error, encode_record
+from repro.uvm.server.session import EvalTick, StreamSession, SyncDispatch, TrainTick, drive
+
+__all__ = [
+    "AotCache",
+    "EvalTick",
+    "FaultStreamServer",
+    "LoadStats",
+    "MicrobatchDispatcher",
+    "ProtocolError",
+    "ServerConfig",
+    "StreamSession",
+    "SyncDispatch",
+    "TrainTick",
+    "decode_line",
+    "drive",
+    "enable_aot",
+    "encode_error",
+    "encode_record",
+    "make_connector",
+    "run_loadgen",
+]

@@ -1,0 +1,434 @@
+"""The asyncio fault-stream server: many sessions, one dispatch per tick.
+
+:class:`FaultStreamServer` accepts JSONL fault-stream clients on a unix
+and/or TCP socket, binds each connection to its own
+:class:`~repro.uvm.manager.TenantMux`-backed
+:class:`~repro.uvm.server.session.StreamSession` (health machine always
+on, per-session checkpoints under ``checkpoint_dir/<session>/``), and
+suspends every session at its staged
+:class:`~repro.uvm.server.session.EvalTick` /
+:class:`~repro.uvm.server.session.TrainTick`.
+:class:`MicrobatchDispatcher` is the lockstep engine
+(:func:`repro.uvm.runtime.run_ours_many` generalized across
+connections): each tick it drains every session's staged halves and
+executes them in ONE worker hop on a shared trainer, off the event loop
+so new lines keep streaming in while the model dispatch runs.  How the
+hop executes follows the repo's benched dispatch policy
+(:func:`_resolve_engine`): one vmapped ``Trainer.evaluate_many`` /
+``train_group_many`` across lanes on multi-device, a fused sweep of the
+warm serial jits on a single device.  ``microbatch=False`` drops the
+gathering entirely — every session-tick becomes its own executor task
+and event-loop round-trip, the per-connection baseline
+``benchmarks/serve_perf.py`` measures against.  All modes emit
+bit-identical per-connection action streams (lanes are independent
+models and ``evaluate_many`` is bit-identical to its serial fallback,
+so neither tick composition nor dispatch order can leak between
+sessions); a chaos-wrapped shared trainer is the one exception — its
+seeded schedule fires per dispatch call, so only the deterministic
+microbatched modes replay it reproducibly.
+
+Isolation: a malformed line earns its connection a structured error
+record, an overlong line closes that connection, and a failed batched
+dispatch is absorbed by each session's degraded-mode health machine —
+none of it stalls or corrupts the other sessions' action streams.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import os
+from pathlib import Path
+
+from repro.core.incremental import Trainer
+from repro.uvm.manager import (
+    ChaosSchedule,
+    FaultInjector,
+    ManagerConfig,
+    SnapshotStore,
+    TenantMux,
+)
+from repro.uvm.server.protocol import ProtocolError, encode_error
+from repro.uvm.server.session import EvalTick, StreamSession, SyncDispatch, TrainTick
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    """Everything the server needs beyond the per-session ManagerConfig."""
+
+    manager: ManagerConfig
+    default_tenant: str = "default"
+    shared_freq_table: bool = False
+    max_sessions: int = 4096  # admission cap; excess connections are refused
+    idle_timeout_s: float = 0.0  # close connections idle this long (0 = never)
+    gather_spins: int = 2  # event-loop passes that gather staged halves per tick
+    microbatch: bool = True  # False: per-connection serial dispatch (baseline)
+    exec_mode: str = "auto"  # batched tick engine: 'auto' | 'vmap' | 'fused'
+    checkpoint_dir: str | None = None  # named sessions snapshot under <dir>/<name>/
+    checkpoint_every: int = 0
+    resume: bool = False  # restore a named session's latest snapshot on hello
+    inject: str | None = None  # chaos schedule for the SHARED trainer
+    line_limit: int = 1 << 20  # bytes; longer lines close the connection
+
+
+def _resolve_engine(exec_mode: str) -> str:
+    """How a gathered tick executes: ``vmap`` stacks every lane into one
+    ``evaluate_many``/``train_group_many`` dispatch (pays on multi-device,
+    where lanes shard across devices — the ``run_ours_many`` regime);
+    ``fused`` sweeps the lanes through the already-warm serial jits inside
+    ONE worker-thread hop (the single-device default: the repo's benched
+    policy is that the vmapped path costs more than serial on one CPU
+    device).  ``auto`` follows the same ``REPRO_OURS_BATCHED`` override
+    the batch runtime uses (``1`` forces vmap, ``0`` forces fused)."""
+    if exec_mode in ("vmap", "fused"):
+        return exec_mode
+    if exec_mode != "auto":
+        raise ValueError(f"exec_mode must be auto|vmap|fused, got {exec_mode!r}")
+    import jax
+
+    knob = os.environ.get("REPRO_OURS_BATCHED", "")
+    return "vmap" if knob != "0" and (knob == "1" or len(jax.devices()) > 1) else "fused"
+
+
+class MicrobatchDispatcher:
+    """Cross-connection lockstep dispatcher.
+
+    Sessions ``submit()`` their staged tick and suspend on a future; the
+    run loop wakes, spins the event loop ``gather_spins`` times so every
+    connection with buffered input can stage its half too, then cuts the
+    batch and executes it in ONE worker-thread hop (vmapped or fused per
+    :func:`_resolve_engine`) so the socket side keeps streaming.  Results
+    (or the shared exception — each session's health machine absorbs it)
+    are scattered back to the futures.
+
+    With ``microbatch=False`` there is no gathering at all: every
+    session-tick is its own executor task plus its own event-loop
+    round-trip, dispatch-equivalent to N independent ``cli serve``
+    processes sharing warm jits — the per-connection serial baseline
+    ``benchmarks/serve_perf.py`` measures against.
+    """
+
+    def __init__(self, trainer, *, use_lucir: bool = False, microbatch: bool = True,
+                 gather_spins: int = 2, exec_mode: str = "auto"):
+        self.trainer = trainer
+        self.use_lucir = use_lucir
+        self.microbatch = microbatch
+        self.engine = _resolve_engine(exec_mode)
+        self.gather_spins = gather_spins
+        self._sync = SyncDispatch(trainer, use_lucir)
+        self._pending: list = []  # [(tick, future)]
+        self._wake: asyncio.Event | None = None
+        self._task: asyncio.Task | None = None
+        self.n_ticks = 0
+        self.n_eval_requests = 0
+        self.n_train_requests = 0
+        self.max_eval_lanes = 0  # widest single gathered tick this run
+
+    def start(self) -> None:
+        self._wake = asyncio.Event()
+        self._task = asyncio.ensure_future(self._run())
+
+    async def stop(self) -> None:
+        if self._task is not None:
+            self._task.cancel()
+            try:
+                await self._task
+            except asyncio.CancelledError:
+                pass
+            self._task = None
+        for _tick, fut in self._pending:
+            if not fut.done():
+                fut.cancel()
+        self._pending = []
+
+    async def submit(self, tick):
+        self._count(tick)
+        if not self.microbatch:
+            # per-connection dispatch: no gathering, one executor task and
+            # one loop round-trip per session-tick (concurrent across
+            # connections on the default pool)
+            self.n_ticks += 1
+            return await asyncio.get_running_loop().run_in_executor(
+                None, self._sync, tick)
+        fut = asyncio.get_running_loop().create_future()
+        self._pending.append((tick, fut))
+        self._wake.set()
+        return await fut
+
+    def _count(self, tick) -> None:
+        if isinstance(tick, EvalTick):
+            self.n_eval_requests += len(tick.reqs)
+        else:
+            self.n_train_requests += len(tick.reqs)
+
+    async def _run(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            await self._wake.wait()
+            for _ in range(self.gather_spins):
+                await asyncio.sleep(0)
+            batch, self._pending = self._pending, []
+            self._wake.clear()
+            if not batch:
+                continue
+            self.n_ticks += 1
+            evals = [(t, f) for t, f in batch if isinstance(t, EvalTick)]
+            trains = [(t, f) for t, f in batch if isinstance(t, TrainTick)]
+            self.max_eval_lanes = max(
+                self.max_eval_lanes, sum(len(t.reqs) for t, _ in evals))
+            eval_out, train_out = await loop.run_in_executor(
+                None, self._dispatch, [t for t, _ in evals], [t for t, _ in trains])
+            for (_t, fut), res in zip(evals, eval_out):
+                if not fut.done():
+                    fut.set_result(res)
+            for (_t, fut), res in zip(trains, train_out):
+                if not fut.done():
+                    fut.set_result(res)
+
+    # -- worker-thread side (pure trainer calls, no loop state) --------------
+
+    def _dispatch(self, evals: list, trains: list):
+        if self.engine == "fused":
+            # the gathered lanes sweep through the warm serial jits inside
+            # this single worker hop — amortizes the executor/loop churn
+            # without paying the single-device vmap penalty
+            return [self._sync(t) for t in evals], [self._sync(t) for t in trains]
+        return self._dispatch_evals(evals), self._dispatch_trains(trains)
+
+    def _dispatch_evals(self, evals: list):
+        flat = [r for t in evals for r in t.reqs]
+        if not flat:
+            return [[] for _ in evals]
+        try:
+            out = self.trainer.evaluate_many(
+                [r.params for r in flat], [r.fs for r in flat], [r.n_active for r in flat])
+        except Exception as exc:  # noqa: BLE001 — every session's health machine decides
+            return [exc for _ in evals]
+        results, i = [], 0
+        for t in evals:
+            results.append(out[i:i + len(t.reqs)])
+            i += len(t.reqs)
+        return results
+
+    def _dispatch_trains(self, trains: list):
+        flat = [r for t in trains for r in t.reqs]
+        if not flat:
+            return [None for _ in trains]
+        try:
+            self.trainer.train_group_many(
+                [r.entry for r in flat], [r.fs for r in flat], [r.n_active for r in flat],
+                in_et_list=[r.in_et for r in flat], use_lucir=self.use_lucir)
+        except Exception as exc:  # noqa: BLE001
+            return [exc for _ in trains]
+        return [None for _ in trains]
+
+
+class _Handle:
+    __slots__ = ("name", "session", "writer", "last_active")
+
+    def __init__(self, name, session, writer, last_active):
+        self.name = name
+        self.session = session
+        self.writer = writer
+        self.last_active = last_active
+
+
+class FaultStreamServer:
+    """Accept loop + session registry around :class:`MicrobatchDispatcher`."""
+
+    def __init__(self, cfg: ServerConfig, *, trainer=None):
+        self.cfg = cfg
+        mcfg = cfg.manager
+        self.trainer = trainer if trainer is not None else Trainer(mcfg.predictor, mcfg.train, mcfg.kind)
+        self.injector = None
+        if cfg.inject:
+            # wrap the SHARED trainer: every session's dispatches draw from
+            # one seeded schedule, exactly like serve --inject
+            self.injector = FaultInjector(ChaosSchedule.parse(cfg.inject))
+            self.trainer = self.injector.wrap_trainer(self.trainer)
+        self.dispatcher = MicrobatchDispatcher(
+            self.trainer, use_lucir=mcfg.use_lucir,
+            microbatch=cfg.microbatch, gather_spins=cfg.gather_spins,
+            exec_mode=cfg.exec_mode)
+        self.sessions: dict = {}  # name -> _Handle
+        self.stats = {"served": 0, "refused": 0, "idle_closed": 0, "resumed": 0}
+        self._conn_seq = 0
+        self._servers: list = []
+        self._gc_task: asyncio.Task | None = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    async def start(self, *, path: str | None = None, host: str | None = None,
+                    port: int = 0) -> "FaultStreamServer":
+        self.dispatcher.start()
+        if self.cfg.idle_timeout_s > 0:
+            self._gc_task = asyncio.ensure_future(self._gc())
+        if path is not None:
+            self._servers.append(await asyncio.start_unix_server(
+                self._handle, path=path, limit=self.cfg.line_limit))
+        if host is not None:
+            self._servers.append(await asyncio.start_server(
+                self._handle, host=host, port=port, limit=self.cfg.line_limit))
+        if not self._servers:
+            raise ValueError("server needs a unix socket path and/or a TCP host")
+        return self
+
+    @property
+    def tcp_port(self) -> int | None:
+        for srv in self._servers:
+            for sock in srv.sockets:
+                name = sock.getsockname()
+                if isinstance(name, tuple):
+                    return name[1]
+        return None
+
+    async def serve_forever(self) -> None:
+        await asyncio.gather(*(s.serve_forever() for s in self._servers))
+
+    async def shutdown(self, timeout: float = 30.0) -> None:
+        """Graceful drain: stop accepting, close every client connection
+        (their handlers run the normal EOF drain + final snapshot), wait
+        for the registry to empty, then stop the dispatcher."""
+        for srv in self._servers:
+            srv.close()
+        for handle in list(self.sessions.values()):
+            handle.writer.close()
+        deadline = asyncio.get_running_loop().time() + timeout
+        while self.sessions and asyncio.get_running_loop().time() < deadline:
+            await asyncio.sleep(0.02)
+        if self._gc_task is not None:
+            self._gc_task.cancel()
+            try:
+                await self._gc_task
+            except asyncio.CancelledError:
+                pass
+            self._gc_task = None
+        await self.dispatcher.stop()
+        for srv in self._servers:
+            await srv.wait_closed()
+
+    def summary_line(self) -> str:
+        d = self.dispatcher
+        return (f"# server sessions={self.stats['served']} refused={self.stats['refused']} "
+                f"idle_closed={self.stats['idle_closed']} resumed={self.stats['resumed']} "
+                f"ticks={d.n_ticks} eval_requests={d.n_eval_requests} "
+                f"train_requests={d.n_train_requests} max_eval_lanes={d.max_eval_lanes} "
+                f"mode={f'batched-{d.engine}' if d.microbatch else 'serial'}")
+
+    # -- per-connection plumbing ---------------------------------------------
+
+    def _new_session(self, handle: _Handle) -> StreamSession:
+        mux = TenantMux(self.cfg.manager, shared_freq_table=self.cfg.shared_freq_table,
+                        trainer=self.trainer)
+        return StreamSession(mux, default_tenant=self.cfg.default_tenant,
+                             on_hello=lambda session, name: self._on_hello(handle, session, name))
+
+    def _on_hello(self, handle: _Handle, session: StreamSession, name):
+        if name is None:
+            return None
+        other = self.sessions.get(name)
+        if other is not None and other is not handle:
+            raise ProtocolError(f"session name {name!r} already in use")
+        self.sessions.pop(handle.name, None)
+        handle.name = session.name = name
+        self.sessions[name] = handle
+        if not self.cfg.checkpoint_dir:
+            return None
+        store = SnapshotStore(str(Path(self.cfg.checkpoint_dir) / name))
+        store.clean_tmp()
+        session.store = store
+        session.checkpoint_every = self.cfg.checkpoint_every
+        if self.cfg.resume and store.latest_step() is not None:
+            batches, resume_lineno = session.resume_latest()
+            self.stats["resumed"] += 1
+            return (f"# resumed batch={batches} lineno={resume_lineno} "
+                    f"tenants={len(session.mux.managers)} from {store.dir}")
+        return None
+
+    async def _run_gen(self, gen):
+        """Drive one session generator, awaiting the dispatcher per tick."""
+        try:
+            tick = next(gen)
+        except StopIteration as stop:
+            return stop.value or []
+        while True:
+            result = await self.dispatcher.submit(tick)
+            try:
+                tick = gen.send(result)
+            except StopIteration as stop:
+                return stop.value or []
+
+    async def _handle(self, reader, writer) -> None:
+        loop = asyncio.get_running_loop()
+        if len(self.sessions) >= self.cfg.max_sessions:
+            self.stats["refused"] += 1
+            with _swallow_transport_errors():
+                writer.write((encode_error(
+                    f"server full ({self.cfg.max_sessions} sessions)", 0) + "\n").encode())
+                await writer.drain()
+            writer.close()
+            return
+        handle = _Handle(f"conn-{self._conn_seq}", None, writer, loop.time())
+        self._conn_seq += 1
+        handle.session = session = self._new_session(handle)
+        self.sessions[handle.name] = handle
+        self.stats["served"] += 1
+        try:
+            while True:
+                try:
+                    raw = await reader.readline()
+                except (asyncio.LimitOverrunError, ValueError):
+                    # an overlong line poisons the stream framing: report
+                    # it and drop the connection (others are unaffected)
+                    session.errors += 1
+                    with _swallow_transport_errors():
+                        writer.write((encode_error(
+                            "line too long", session.lineno + 1) + "\n").encode())
+                        await writer.drain()
+                    break
+                except (ConnectionResetError, BrokenPipeError, OSError):
+                    break
+                if not raw:
+                    break
+                handle.last_active = loop.time()
+                records = await self._run_gen(session.step(raw.decode("utf-8", "replace")))
+                with _swallow_transport_errors():
+                    for rec in records:
+                        writer.write((rec + "\n").encode())
+                    await writer.drain()
+            # EOF / disconnect: close pending batches, flush the final
+            # snapshot, answer with the same summary line `serve` prints
+            await self._run_gen(session.drain())
+            if session.store is not None:
+                session.save_snapshot()
+            with _swallow_transport_errors():
+                writer.write((session.summary_line() + "\n").encode())
+                await writer.drain()
+        finally:
+            self.sessions.pop(handle.name, None)
+            with _swallow_transport_errors():
+                writer.close()
+                await writer.wait_closed()
+
+    async def _gc(self) -> None:
+        while True:
+            await asyncio.sleep(max(self.cfg.idle_timeout_s / 4, 0.05))
+            now = asyncio.get_running_loop().time()
+            for handle in list(self.sessions.values()):
+                if now - handle.last_active > self.cfg.idle_timeout_s:
+                    # closing the transport EOFs the handler's readline;
+                    # it drains + snapshots like any disconnect
+                    self.stats["idle_closed"] += 1
+                    handle.last_active = float("inf")  # close once
+                    handle.writer.close()
+
+
+class _swallow_transport_errors:
+    """A peer that vanished mid-write must not take the handler down with
+    a traceback — its session cleanup still runs."""
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, _tb):
+        return exc_type is not None and issubclass(
+            exc_type, (ConnectionResetError, BrokenPipeError, RuntimeError, OSError))

@@ -361,7 +361,7 @@ def _check_serve_line_contract(line: str):
         kind, (tenant, tagged), payload = _decode_serve_line(line, "default")
     except _ServeLineError:
         return
-    assert kind in ("observe", "feedback")
+    assert kind in ("observe", "feedback", "hello")
     if kind == "observe":
         assert payload["pages"].dtype == np.int64
 
