@@ -57,11 +57,12 @@ SUITES = {
     "table7": tables.table7,
     "table8": tables.table8,
     "table9": tables.table9,
+    "table10": tables.table10,
     "roofline": roofline_summary,
 }
 
 # cheap first, NN-heavy later (shared caches warm up in order)
-ORDER = ["roofline", "table1", "table2", "table3", "table4", "fig3", "fig4", "fig6", "fig10", "fig11", "fig12", "table6", "fig13", "fig14", "table7", "table8", "table9"]
+ORDER = ["roofline", "table1", "table2", "table3", "table4", "fig3", "fig4", "fig6", "fig10", "fig11", "fig12", "table6", "fig13", "fig14", "table7", "table8", "table9", "table10"]
 
 
 def main(argv=None) -> int:

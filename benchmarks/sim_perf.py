@@ -186,6 +186,61 @@ def bench_multi_tenant(scale: float, cap: int) -> dict:
     }
 
 
+def bench_qos(scale: float, cap: int) -> dict:
+    """The `--manager` section's QoS row (PR 9): what budgeted capacity
+    partitioning costs on the streaming path.  Drives the SAME concurrent
+    trace through a plain TenantMux and a budgeted one (BudgetController:
+    first-toucher block claims, per-round pressure scoring, elastic budget
+    recompute, plus the per-round `evict_pref` sweep the runtime performs)
+    — the controller is pure host-side numpy bookkeeping, so the warm
+    overhead must stay well under 1.1x."""
+    from repro.configs.predictor_paper import SMOKE
+    from repro.core.incremental import TrainConfig
+    from repro.uvm import runtime as R
+    from repro.uvm.api import QosSpec, QosTierSpec
+    from repro.uvm.manager import FaultBatch, Outcomes
+
+    parts = [_suite_trace(n, scale, cap) for n in ("StreamTriad", "Hotspot")]
+    tr = T.concurrent(parts, seed=0, slice_len=512)
+    tr = tr.slice(0, min(len(tr), 8000))  # bound the row's wall clock
+    tcfg = TrainConfig(group_size=512, epochs=1, batch_size=128)
+    spec = QosSpec(tiers=(QosTierSpec("StreamTriad", floor=0.5, share=1.0),
+                          QosTierSpec("Hotspot", floor=0.3, share=1.0)))
+
+    def drive(budgeted: bool):
+        mgr = R.mux_for(tr, SMOKE, tcfg, qos=spec if budgeted else None)
+        # a plausible half-resident device, sized to the manager's padded
+        # block bucket (what the runtime's simulator state hands evict_pref)
+        resident = np.zeros(mgr.cfg.n_blocks, dtype=bool)
+        resident[::2] = True
+        t0 = time.time()
+        fc = 0
+        for g0 in range(0, len(tr), tcfg.group_size):
+            g1 = min(g0 + tcfg.group_size, len(tr))
+            mgr.observe(FaultBatch(
+                tr.page[g0:g1], tr.pc[g0:g1], tr.tb[g0:g1], tr.kernel[g0:g1],
+                tenant=tr.tenant[g0:g1],
+            ))
+            mgr.evict_pref(resident)  # the runtime calls this every group
+            fc += (g1 - g0) // 4  # a plausible far-fault rate for the clock
+            mgr.feedback(Outcomes(fault_count=fc))
+        return time.time() - t0, mgr
+
+    drive(False), drive(True)  # warm both paths' jit caches (fresh managers each drive)
+    shared_s, _ = drive(False)
+    qos_s, mgr = drive(True)
+    assert mgr.qos is not None and mgr.qos.budgets, "budgeted drive produced no budgets"
+    return {
+        "benchmark": f"qos:{tr.name}",
+        "accesses": len(tr),
+        "shared_s": round(shared_s, 3),
+        "qos_s": round(qos_s, 3),
+        "overhead_x": round(qos_s / max(shared_s, 1e-9), 2),
+        "budgets": {str(k): int(v) for k, v in mgr.qos.budgets.items()},
+        "qos_acc_per_s": int(len(tr) / max(qos_s, 1e-9)),
+    }
+
+
 def bench_fault_tolerance(scale: float, cap: int) -> dict:
     """The `--manager` section's fault-tolerance row (PR 6): what resilience
     costs.  Times `state()` serialization, a SnapshotStore save/restore
@@ -295,6 +350,9 @@ def main(argv=None) -> int:
         t0 = time.time()
         ft_row = bench_fault_tolerance(args.scale, args.cap)
         emit("sim_perf_manager_fault_tolerance", [ft_row], t0)
+        t0 = time.time()
+        qos_row = bench_qos(args.scale, args.cap)
+        emit("sim_perf_manager_qos", [qos_row], t0)
         assert mrows[0]["speedup_x"] >= 2.0, mrows[0]  # vectorization must actually pay
         # the mux's demux + per-tenant dispatch overhead must stay modest
         # (it runs the SAME number of predictor samples, just partitioned)
@@ -303,6 +361,9 @@ def main(argv=None) -> int:
         # all-faults run must not cost more than a small multiple of the
         # healthy run (recovery retries still dispatch-and-fail)
         assert ft_row["degraded_x"] < 5.0, ft_row
+        # the budget controller is host-side numpy bookkeeping layered on
+        # the same predictor dispatches — warm overhead must stay marginal
+        assert qos_row["overhead_x"] < 1.1, qos_row
         # the committed record follows the file's convention: rewrite only
         # on an explicit --update-baseline, never from a routine/CI run
         if args.update_baseline and BASELINE_PATH.exists():
@@ -314,6 +375,7 @@ def main(argv=None) -> int:
                 },
                 "multi_tenant": mux_row,
                 "fault_tolerance": ft_row,
+                "qos": qos_row,
                 "rows": mrows,
             }
             BASELINE_PATH.write_text(json.dumps(base, indent=2) + "\n")

@@ -3,7 +3,9 @@ prefetcher interplay), IV (predictor footprint), VI (full strategy matrix),
 VII (concurrent multi-workload accuracy), VIII (Section V-F concurrent
 top-1 through the full runtime: TenantMux vs merged-single-manager),
 IX (drift: re-classifying vs frozen-pattern managers on phase-changing zoo
-traces — a subsystem result beyond the paper's tables)."""
+traces — a subsystem result beyond the paper's tables), X (QoS fairness:
+per-tenant thrash/IPC under an adversarial co-tenant, budgeted mux vs
+shared pool — the PR 9 capacity-partitioning subsystem result)."""
 from __future__ import annotations
 
 import time
@@ -184,8 +186,15 @@ def table8(ctx: Session):
     })
     emit("table8_concurrent_mux", rows, t0)
     # the acceptance pin: per-tenant specialization must not lose to the
-    # merged baseline on the Section V-F suite
-    assert avg >= 0, rows
+    # merged baseline on the Section V-F suite.  On failure, print the
+    # per-pair breakdown so the CI log says WHICH pair regressed and by
+    # how much, not just that the average went negative.
+    if avg < 0:
+        print(f"table8: AVG_MUX_GAIN {avg:+.3f} < 0 — per-pair breakdown:")
+        for r in rows[1:]:
+            print(f"  {r['workloads']:<24} merged={r['merged_top1']} "
+                  f"mux={r['mux_top1']} {r['derived']}")
+        raise AssertionError(f"avg mux gain {avg:+.3f} < 0 (see breakdown above)")
     return rows
 
 
@@ -278,7 +287,7 @@ def table9(ctx: Session):
     assert all(d <= 0 for d in d_thrash) and avg_thr < 0, rows
     # record the subsystem result (deterministic content only) into the
     # committed benchmark ledger
-    bench = Path(__file__).resolve().parent.parent / "BENCH_sim.json"
+    bench = _bench_ledger()
     data = json.loads(bench.read_text())
     data["drift"] = {
         "benchmark": "PYTHONPATH=src python -m benchmarks.run --only table9",
@@ -290,6 +299,132 @@ def table9(ctx: Session):
                      "(StreamTriad x RandomScan cycles), quick-pinned geometry; "
                      "interval 512 is too coarse to switch on the 1024-access "
                      "phases and collapses onto the frozen manager",
+        },
+        "rows": rows,
+    }
+    bench.write_text(json.dumps(data, indent=2) + "\n")
+    return rows
+
+
+def _bench_ledger():
+    from pathlib import Path
+
+    return Path(__file__).resolve().parent.parent / "BENCH_sim.json"
+
+
+def table10(ctx: Session):
+    """QoS fairness: per-tenant pages-thrashed and IPC under an adversarial
+    co-tenant, budgeted mux vs today's shared pool (PR 9 subsystem result
+    beyond the paper's tables).
+
+    Each scenario merges one well-behaved tenant with the zoo's
+    ``RandomScan`` (fresh uniform draws every iteration — it faults on
+    nearly every access and, in the shared pool, evicts its neighbour's
+    blocks at will).  Three treatments per scenario:
+
+    * ``solo``     — the well-behaved tenant alone at the same oversub
+      (its no-neighbour reference);
+    * ``shared``   — the PR 5 mux over the merge, one global capacity pool;
+    * ``budgeted`` — the same mux with a :class:`~repro.uvm.api.specs.QosSpec`
+      (well-behaved floor 0.5, scanner floor 0.05): the controller learns
+      the scanner is unstable, squeezes its budget toward the floor, and
+      the leading victim key evicts the scanner's over-budget blocks
+      before ANY under-budget block.
+
+    Per-tenant IPC uses the repo's timing model on per-tenant attributed
+    counters (faults/thrash by triggering access; migrations approximated
+    by demand faults — prefetch transfers overlap compute and vanish in
+    the ``max(mig - base, 0)`` term at this scale).  ``ipc_spread`` is
+    max/min across tenants — 1.0 = perfectly fair.
+
+    The headline assertions (the ISSUE 9 acceptance): under budgets, the
+    well-behaved tenant's pages-thrashed is (a) no worse than its
+    standalone run and (b) no worse than the shared pool gave it.
+    Geometry is quick-PINNED like table9 (scale 0.4, quick predictor,
+    group 256) so the committed BENCH_sim.json ``qos`` section stays
+    byte-stable."""
+    import json
+
+    from benchmarks.common import PCFG_QUICK
+    from repro.uvm import runtime as R
+    from repro.uvm import timing
+    from repro.uvm import trace as T
+    from repro.uvm import zoo as Z
+    from repro.uvm.api.specs import QosSpec, QosTierSpec, TrainSpec
+
+    t0 = time.time()
+    SCALE, CAP, GROUP = 0.4, 3000, 256
+    tcfg = TrainSpec(group_size=GROUP, epochs=2, batch_size=128).to_train_config()
+    qos = lambda good: QosSpec(tiers=(
+        QosTierSpec(good, floor=0.5, share=1.0),
+        QosTierSpec("RandomScan", floor=0.05, share=1.0),
+    ))
+
+    def cut(tr):
+        return tr.slice(0, min(len(tr), CAP))
+
+    def tenant_ipc(res, stats):
+        # per-tenant timing-model IPC from attributed counters (see above)
+        return timing.ipc(
+            {"faults": stats["faults"], "pages_thrashed": stats["pages_thrashed"],
+             "migrated_blocks": stats["faults"], "zero_copy": 0},
+            stats["accesses"],
+        )
+
+    rows, checks = [], []
+    # per-scenario oversubscription picked where the shared pool visibly
+    # hurts the well-behaved tenant (pressure high enough that RandomScan's
+    # evictions land on the neighbour) — part of the quick pin
+    for good, oversub in (("StreamTriad", 2.5), ("Hotspot", 1.6)):
+        solo_tr = cut(T.get_trace(good, scale=SCALE))
+        merged = T.concurrent(
+            [cut(T.get_trace(good, scale=SCALE)), cut(Z.get_trace("RandomScan", scale=SCALE))],
+            seed=0, slice_len=GROUP,
+        )
+        solo = R.run_ours(solo_tr, PCFG_QUICK, tcfg, oversubscription=oversub)
+        shared = R.run_ours(merged, PCFG_QUICK, tcfg, oversubscription=oversub)
+        budgeted = R.run_ours(merged, PCFG_QUICK, tcfg, oversubscription=oversub,
+                              qos=qos(good))
+        for name, res in (("shared", shared), ("budgeted", budgeted)):
+            pts = res.per_tenant_stats
+            g, s = pts["0"], pts["1"]  # concurrent() order: good first
+            ipc_g, ipc_s = tenant_ipc(res, g), tenant_ipc(res, s)
+            rows.append({
+                "scenario": f"{good}+RandomScan",
+                "oversub": oversub,
+                "pool": name,
+                "good_thrash": g["pages_thrashed"],
+                "scan_thrash": s["pages_thrashed"],
+                "solo_thrash": solo.stats["pages_thrashed"],
+                "good_ipc": round(ipc_g, 4),
+                "scan_ipc": round(ipc_s, 4),
+                "ipc_spread": round(max(ipc_g, ipc_s) / max(min(ipc_g, ipc_s), 1e-9), 3),
+                "budgets": res.budgets or "",
+            })
+        checks.append({
+            "scenario": f"{good}+RandomScan",
+            "solo": solo.stats["pages_thrashed"],
+            "shared": shared.per_tenant_stats["0"]["pages_thrashed"],
+            "budgeted": budgeted.per_tenant_stats["0"]["pages_thrashed"],
+        })
+    emit("table10_qos_fairness", rows, t0)
+    # THE fairness claim: budgets keep the well-behaved tenant whole under
+    # a thrashing neighbour — no worse than standalone, and never worse
+    # than the shared pool gave it
+    for c in checks:
+        assert c["budgeted"] <= c["solo"], (c, rows)
+        assert c["budgeted"] <= c["shared"], (c, rows)
+    bench = _bench_ledger()
+    data = json.loads(bench.read_text())
+    data["qos"] = {
+        "benchmark": "PYTHONPATH=src python -m benchmarks.run --only table10",
+        "headline": {
+            "well_behaved_thrash": {c["scenario"]: {k: c[k] for k in ("solo", "shared", "budgeted")}
+                                    for c in checks},
+            "notes": "budgeted mux (floors 0.5/0.05, percentile stability) vs "
+                     "shared pool under an adversarial RandomScan co-tenant, "
+                     "quick-pinned geometry; asserted in-benchmark: budgeted "
+                     "<= solo and budgeted <= shared for the well-behaved tenant",
         },
         "rows": rows,
     }

@@ -32,7 +32,7 @@ SUBCOMMAND_MODULES = {"repro.uvm.cli"}
 #: subcommand's own --help AND in at least one scanned doc (a field the
 #: code grows without docs — or docs promise without code — is drift)
 REQUIRED_FIELD_MENTIONS = {
-    ("repro.uvm.cli", "serve"): ("tenant", "health", "fallback", "pattern"),
+    ("repro.uvm.cli", "serve"): ("tenant", "health", "fallback", "pattern", "budget"),
 }
 
 #: flags that must stay documented on BOTH sides too: the fault-tolerance
@@ -42,6 +42,8 @@ REQUIRED_FLAG_MENTIONS = {
     ("repro.uvm.cli", "serve"): (
         "--checkpoint-dir", "--checkpoint-every", "--resume", "--inject",
         "--latency-budget-ms", "--reclass-interval", "--reclass-hysteresis",
+        # the QoS surface (PR 9): budgeted capacity partitioning
+        "--qos-tier", "--qos-stability", "--qos-interval",
     ),
     ("repro.uvm.cli", "export"): (
         "--phases", "--drift-kind", "--switch", "--mix-window", "--joins",
@@ -51,6 +53,7 @@ REQUIRED_FLAG_MENTIONS = {
     ("repro.uvm.cli", "server"): (
         "--socket", "--port", "--max-sessions", "--idle-timeout",
         "--gather-spins", "--serial", "--engine", "--aot-cache",
+        "--qos-tier", "--qos-stability", "--qos-interval",
     ),
     ("repro.uvm.cli", "loadgen"): (
         "--connect", "--clients", "--rate", "--repeat", "--hello-prefix",

@@ -30,6 +30,8 @@ from repro.uvm.api.specs import (
     PrefetchSpec,
     PretrainSpec,
     ProtocolSpec,
+    QosSpec,
+    QosTierSpec,
     TrainSpec,
     WorkloadSpec,
     spec_from_dict,
@@ -43,20 +45,23 @@ from repro.uvm.registry import (
     register_predictor,
     register_classifier,
     register_freq_table,
+    register_stability,
     policy_names,
     prefetcher_names,
     predictor_names,
     classifier_names,
     freq_table_names,
+    stability_names,
 )
 
 __all__ = [
     "WorkloadSpec", "DriftSpec", "PolicySpec", "PrefetchSpec", "TrainSpec",
     "PretrainSpec", "ModelSpec", "CellSpec", "ProtocolSpec", "ExperimentSpec",
+    "QosSpec", "QosTierSpec",
     "spec_key", "spec_from_dict",
     "RunStore", "Session", "ALL_BENCH", "FEATURED",
     "register_policy", "register_prefetcher", "register_predictor",
-    "register_classifier", "register_freq_table",
+    "register_classifier", "register_freq_table", "register_stability",
     "policy_names", "prefetcher_names", "predictor_names",
-    "classifier_names", "freq_table_names",
+    "classifier_names", "freq_table_names", "stability_names",
 ]

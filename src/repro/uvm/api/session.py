@@ -346,6 +346,7 @@ class Session:
             reclass_interval=model.reclass_interval,
             reclass_hysteresis=model.reclass_hysteresis,
             health=model.health_config(),
+            qos=model.qos,
         )
         tcfg = model.train.to_train_config()
 
@@ -436,7 +437,7 @@ class Session:
     def _ours_model(self, **kw) -> ModelSpec:
         unknown = set(kw) - {"kind", "use_thrash_term", "use_lucir",
                              "tenancy", "reclass_interval", "reclass_hysteresis",
-                             "health", "latency_budget_ms"}
+                             "health", "latency_budget_ms", "qos"}
         if unknown:
             raise TypeError(f"unknown learned-run options: {sorted(unknown)}")
         return dataclasses.replace(self.model, pretrain=self.default_pretrain, **kw)
@@ -489,7 +490,8 @@ class Session:
         if tr.tenant is not None and model.tenancy != "merged":
             return R.mux_for(
                 tr, model.predictor, model.train.to_train_config(),
-                shared_freq_table=model.tenancy == "mux-shared", **common,
+                shared_freq_table=model.tenancy == "mux-shared",
+                qos=model.qos, **common,
             )
         return R.manager_for(tr, model.predictor, model.train.to_train_config(), **common)
 

@@ -20,7 +20,12 @@ from typing import Iterator
 from repro.configs.predictor_paper import CONFIG_QUICK, PredictorConfig
 from repro.core.incremental import TrainConfig
 
-SCHEMA = 2  # bump to invalidate every stored run
+SCHEMA = 3  # bump to invalidate every stored run
+# SCHEMA 3 (PR 9): the QoS subsystem — ModelSpec grew a `qos` block
+# (per-tenant tiers + budget controller knobs) and budgeted muxes release
+# departed tenants' counters; a concurrent `ours` result now depends on
+# the capacity-partitioning regime it ran under, so results stored under
+# SCHEMA 2 no longer mean the same thing.
 # SCHEMA 2 (PR 5): concurrent `ours` cells route through the TenantMux
 # (per-tenant pipelines) instead of one merged-stream manager, and
 # ModelSpec grew tenancy/re-classification fields — results stored under
@@ -238,6 +243,61 @@ class PretrainSpec(_SpecBase):
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class QosTierSpec(_SpecBase):
+    """One tenant's QoS contract in a spec: ``tenant`` names the workload
+    (a :func:`repro.uvm.trace.concurrent` part name, or a serve-session
+    tenant id), ``floor`` its guaranteed fraction of device capacity,
+    ``share`` its weight over the elastic pool the floors leave over."""
+
+    tenant: str
+    floor: float = 0.0
+    share: float = 1.0
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "QosTierSpec":
+        return cls(tenant=d["tenant"], floor=d.get("floor", 0.0),
+                   share=d.get("share", 1.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class QosSpec(_SpecBase):
+    """The per-tenant capacity-partitioning block of a learned run: QoS
+    tiers plus the :class:`~repro.uvm.qos.BudgetController` knobs.
+    ``stability`` names a registered stability scorer (``percentile`` /
+    ``gmr``), ``interval`` how many feedback rounds pass between budget
+    recomputes.  Tenants without a tier get the all-elastic default
+    (floor 0, share 1)."""
+
+    tiers: tuple[QosTierSpec, ...] = ()
+    stability: str = "percentile"
+    interval: int = 1
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "QosSpec":
+        return cls(
+            tiers=tuple(QosTierSpec.from_dict(t) for t in d.get("tiers", ())),
+            stability=d.get("stability", "percentile"),
+            interval=d.get("interval", 1),
+        )
+
+    def controller(self, capacity: int, n_blocks: int, tenant_names=()):
+        """Build the :class:`~repro.uvm.qos.BudgetController` this spec
+        describes.  ``tenant_names`` maps integer tenant ids (a trace's
+        ``tenant_names`` tuple) onto the spec's name-keyed tiers so the
+        same spec serves both trace-driven and streaming paths."""
+        from repro.uvm.qos import BudgetController, QosTier
+
+        tiers: dict = {t.tenant: QosTier(t.floor, t.share) for t in self.tiers}
+        for i, name in enumerate(tenant_names or ()):
+            if name in tiers:
+                tiers[i] = tiers[name]
+        return BudgetController(
+            capacity, n_blocks, tiers=tiers,
+            stability=self.stability, interval=self.interval,
+        )
+
+
 #: how a concurrent (tenant-tagged) workload is managed by an `ours` cell
 TENANCIES = ("mux", "mux-shared", "merged")
 
@@ -261,7 +321,11 @@ class ModelSpec(_SpecBase):
     health state machine (:class:`repro.uvm.manager.HealthConfig`):
     dispatch failures and non-finite model outputs fall back to rule-based
     actions instead of raising.  Off by default — the goldens pin the
-    legacy fail-hard path bit for bit."""
+    legacy fail-hard path bit for bit.
+
+    ``qos`` opts a ``mux`` run into per-tenant capacity partitioning
+    (:class:`QosSpec` → a :class:`~repro.uvm.qos.BudgetController`);
+    ``None`` (default) is the legacy shared pool, pinned by the goldens."""
 
     kind: str = "transformer"
     predictor: PredictorConfig = CONFIG_QUICK
@@ -274,6 +338,7 @@ class ModelSpec(_SpecBase):
     reclass_hysteresis: int = 2
     health: bool = False
     latency_budget_ms: float = 0.0
+    qos: QosSpec | None = None
 
     def __post_init__(self):
         if self.tenancy not in TENANCIES:
@@ -293,6 +358,7 @@ class ModelSpec(_SpecBase):
             reclass_hysteresis=d.get("reclass_hysteresis", 2),
             health=d.get("health", False),
             latency_budget_ms=d.get("latency_budget_ms", 0.0),
+            qos=QosSpec.from_dict(d["qos"]) if d.get("qos") else None,
         )
 
     def health_config(self):
@@ -426,7 +492,8 @@ class ExperimentSpec(_SpecBase):
 _SPEC_KINDS = {
     cls.__name__: cls
     for cls in (DriftSpec, WorkloadSpec, PolicySpec, PrefetchSpec, TrainSpec,
-                PretrainSpec, ModelSpec, CellSpec, ProtocolSpec, ExperimentSpec)
+                PretrainSpec, QosTierSpec, QosSpec, ModelSpec, CellSpec,
+                ProtocolSpec, ExperimentSpec)
 }
 
 

@@ -252,6 +252,19 @@ def _manager_config(args):
     )
 
 
+def _qos_controller(args, cfg):
+    """The per-session BudgetController the shared --qos-* flags describe
+    (``None`` when no tier is declared = the legacy shared pool)."""
+    if not args.qos_tier:
+        return None
+    from repro.uvm.qos import BudgetController, parse_tier_flags
+
+    return BudgetController(
+        cfg.capacity, cfg.n_blocks, tiers=parse_tier_flags(args.qos_tier),
+        stability=args.qos_stability, interval=args.qos_interval,
+    )
+
+
 def cmd_serve(args) -> int:
     import signal
 
@@ -262,7 +275,8 @@ def cmd_serve(args) -> int:
     # tenants are admitted on first contact (auto_create): every "tenant"-
     # tagged line gets its own classifier->predictor pipeline; untagged
     # lines share the --default-tenant one (the single-workload case)
-    mux = TenantMux(cfg, shared_freq_table=args.shared_freq_table)
+    mux = TenantMux(cfg, shared_freq_table=args.shared_freq_table,
+                    qos=_qos_controller(args, cfg))
     injector = None
     if args.inject:
         from repro.uvm.manager import ChaosSchedule, FaultInjector
@@ -345,6 +359,8 @@ def cmd_server(args) -> int:
         exec_mode=args.engine,
         checkpoint_dir=args.checkpoint_dir, checkpoint_every=args.checkpoint_every,
         resume=args.resume, inject=args.inject,
+        qos_tiers=args.qos_tier, qos_stability=args.qos_stability,
+        qos_interval=args.qos_interval,
     )
     if args.socket is None and args.port is None:
         print("# server needs --socket PATH and/or --port N", file=sys.stderr)
@@ -498,6 +514,17 @@ def _add_stream_flags(p) -> None:
     p.add_argument("--latency-budget-ms", type=float, default=0.0,
                    help="per-observe dispatch budget in ms; overruns demote the learned "
                         "path to degraded health (0 = no budget)")
+    p.add_argument("--qos-tier", action="append", default=None, metavar="TENANT:FLOOR[:SHARE]",
+                   help="per-tenant QoS tier (repeatable): guaranteed FLOOR fraction of "
+                        "device capacity plus elastic SHARE weight (default 1.0); any "
+                        "--qos-tier turns on budgeted eviction — over-budget tenants' "
+                        "blocks are evicted before any under-budget tenant's, and each "
+                        "action record gains the tenant's current 'budget'")
+    p.add_argument("--qos-stability", default="percentile",
+                   help="registered stability scorer weighting the elastic pool "
+                        "(percentile | gmr; see repro.uvm.qos)")
+    p.add_argument("--qos-interval", type=int, default=1,
+                   help="feedback rounds between budget recomputes")
 
 
 def build_parser() -> argparse.ArgumentParser:

@@ -81,12 +81,18 @@ class MuxActions:
     shared); ``None`` when no tenant's prefetch gate opened this round,
     matching the single-manager cadence (a stale export stays staged).
     ``pre_evict_blocks`` round-robins the tenants' advisory rankings so no
-    tenant's victims dominate the head."""
+    tenant's victims dominate the head.
+
+    ``budgets`` is the QoS capacity partition this round was observed
+    under (tenant -> blocks), ``None`` on muxes without a budget
+    controller — consumers that want the eviction-tier artifact itself
+    call :meth:`TenantMux.evict_pref` with their residency mask."""
 
     per_tenant: dict
     prefetch_blocks: np.ndarray
     counters: np.ndarray | None
     pre_evict_blocks: np.ndarray
+    budgets: dict | None = None
 
     @property
     def patterns(self) -> dict:
@@ -164,6 +170,13 @@ class TenantMux:
     ``tables`` seeds each tenant's per-pattern model table: a dict keyed
     by tenant, or ONE Section V-A pretrained master that every tenant
     clones (fine-tuning mutates entries — tenants must not share them).
+
+    ``qos`` attaches a :class:`repro.uvm.qos.BudgetController`: every
+    observed batch claims its tenant's blocks (first-toucher ownership),
+    every feedback round feeds the tenant's thrash rate into the elastic
+    rebalance, and :meth:`evict_pref` compiles the current budgets into
+    the simulator's leading victim key.  ``None`` (default) = today's
+    shared pool, bit-identical.
     """
 
     def __init__(
@@ -175,6 +188,7 @@ class TenantMux:
         auto_create: bool = True,
         tables: dict | ModelTable | None = None,
         trainer: Trainer | None = None,
+        qos=None,
     ):
         self.cfg = cfg
         self.shared_freq_table = shared_freq_table
@@ -182,7 +196,11 @@ class TenantMux:
         self._tables = tables
         self.trainer = trainer if trainer is not None else Trainer(cfg.predictor, cfg.train, cfg.kind)
         self._shared_freq = _registry.freq_table_factory(cfg.freq_table)() if shared_freq_table else None
+        self.qos = qos
         self.managers: dict = {}
+        # released tenants' final stats, so departure doesn't erase them
+        # from the run-level result views below
+        self._departed: dict = {}
         self.per_group: list[float] = []  # batch accuracies in dispatch order
         self._round: list[tuple] | None = None  # [(tenant, positions, n)], last observe's split
         self._last_feedback: list[tuple] = []  # feedback_begin's pairs, for feedback_finish
@@ -216,6 +234,27 @@ class TenantMux:
                 raise KeyError(f"unknown tenant {key!r}; declared: {list(self.managers)}")
             self._create(key)
         return self.managers[key]
+
+    def release(self, key) -> None:
+        """Retire a departed tenant: drop its manager so its (stale)
+        frequency counters leave :meth:`_combined_dense`'s per-tenant max,
+        and return its QoS claim so budgets rebalance to live tenants.
+        A churned trace's early-leaving tenant would otherwise hold rows
+        in the combined dense export — and a budget slice — forever.
+        Idempotent; a re-appearing tag is re-admitted fresh.  The departed
+        tenant's accuracy/model counts are retained so the run-level
+        result views still cover it."""
+        m = self.managers.pop(key, None)
+        if m is not None:
+            self._departed[key] = {
+                "corr": (m._corr_true, m._corr_n), "warm": (m._warm_true, m._warm_n),
+                "top1": m.top1, "n_predictions": m.n_predictions,
+                "n_classes": m.n_classes, "n_models": m.n_models,
+            }
+        if self.qos is not None:
+            self.qos.release(key)
+        if self._round is not None:
+            self._round = [r for r in self._round if r[0] != key] or None
 
     def _split(self, batch: FaultBatch) -> list[tuple]:
         """Partition one batch by tenant tag, first-appearance order,
@@ -346,6 +385,10 @@ class TenantMux:
         batch = batch if isinstance(batch, FaultBatch) else FaultBatch(np.asarray(batch))
         split = self._split(batch)
         self._round = [(k, idx, len(idx)) for k, idx, _ in split]
+        if self.qos is not None:
+            for k, _idx, sub in split:
+                self.qos.observe_blocks(
+                    k, np.unique(np.asarray(sub.page, np.int64) // self.cfg.pages_per_block))
         return [(k, self.tenant(k).observe_begin(sub)) for k, idx, sub in split]
 
     def observe_finish(self, results: list) -> MuxActions:
@@ -368,6 +411,7 @@ class TenantMux:
             prefetch_blocks=_stable_unique([a.prefetch_blocks for a in per_tenant.values()]),
             counters=counters,
             pre_evict_blocks=_round_robin([a.pre_evict_blocks for a in per_tenant.values()]),
+            budgets=dict(self.qos.budgets) if self.qos is not None else None,
         )
 
     def feedback_begin(self, outcomes: Outcomes, *, tenant=_UNSET) -> list[tuple[object, TrainRequest | None]]:
@@ -380,6 +424,11 @@ class TenantMux:
             # a later round-level feedback must not replay it
             if self._round is not None:
                 self._round = [r for r in self._round if r[0] != tenant] or None
+            if self.qos is not None:
+                we1 = outcomes.was_evicted
+                self.qos.observe_pressure(
+                    tenant, float(np.mean(we1)) if we1 is not None and len(we1) else 0.0)
+                self.qos.step()
             self._last_feedback = out
             return out
         if self._round is None:
@@ -391,7 +440,14 @@ class TenantMux:
                 was_evicted=None if we is None else we[idx],
                 fault_count=outcomes.fault_count,  # the GLOBAL device clock
             )
+            # the tenant's thrash rate this round (its own slice of the
+            # report) is the budget controller's pressure signal
+            if self.qos is not None:
+                sw = sub.was_evicted
+                self.qos.observe_pressure(k, float(np.mean(sw)) if sw is not None and len(sw) else 0.0)
             out.append((k, self.managers[k].feedback_begin(sub)))
+        if self.qos is not None:
+            self.qos.step()
         self._round = None
         self._last_feedback = out
         return out
@@ -423,6 +479,8 @@ class TenantMux:
             "shared_freq": pickle.dumps(self._shared_freq) if self._shared_freq is not None else None,
             "clock": (self._fault_base, self._fault_raw, self._flush_interval),
             "per_group": list(self.per_group),
+            "qos": self.qos.state() if self.qos is not None else None,
+            "departed": {k: dict(v) for k, v in self._departed.items()},
             "tenants": [
                 (k, m.state(include_freq_table=self._shared_freq is None))
                 for k, m in self.managers.items()
@@ -447,6 +505,11 @@ class TenantMux:
             self._shared_freq = pickle.loads(state["shared_freq"])
         self._fault_base, self._fault_raw, self._flush_interval = state["clock"]
         self.per_group = list(state["per_group"])
+        # pre-QoS snapshots carry no "qos" entry; a budgeted mux restores
+        # its controller only when the snapshot recorded one
+        if self.qos is not None and state.get("qos") is not None:
+            self.qos.restore(state["qos"])
+        self._departed = {k: dict(v) for k, v in state.get("departed", {}).items()}
         self.managers = {}
         for k, mstate in state["tenants"]:
             self._create(k).restore(mstate)  # views rebind to the restored shared table
@@ -474,41 +537,60 @@ class TenantMux:
     def _combined_dense(self) -> np.ndarray:
         """Device-wide dense frequency export: the shared table directly,
         or the elementwise max across the isolated per-tenant tables
-        (disjoint tenant page ranges make the max a union; -1 = never)."""
+        (disjoint tenant page ranges make the max a union; -1 = never).
+        Only LIVE tenants contribute — :meth:`release` drops a departed
+        tenant's manager, so its stale counters stop shadowing the max."""
         nb = self.cfg.n_blocks
         if self._shared_freq is not None:
             return self._shared_freq.dense(nb)
+        if not self.managers:
+            return np.full(nb, -1, np.int32)  # every tenant released
         return np.maximum.reduce([m.freq_table.dense(nb) for m in self.managers.values()])
+
+    def evict_pref(self, resident) -> np.ndarray | None:
+        """The QoS leading victim key for ``resident`` (the simulator's
+        bool residency mask) — ``None`` without a budget controller, which
+        keeps budget-free drivers on the exact pre-QoS compiled path."""
+        return None if self.qos is None else self.qos.evict_pref(resident)
 
     # -- result views (the shapes LearnedRunResult aggregates) ---------------
 
     @property
     def top1(self) -> float:
         t = sum(m._corr_true for m in self.managers.values())
+        t += sum(d["corr"][0] for d in self._departed.values())
         n = sum(m._corr_n for m in self.managers.values())
+        n += sum(d["corr"][1] for d in self._departed.values())
         return t / n if n else 0.0
 
     @property
     def warm_top1(self) -> float:
         t = sum(m._warm_true for m in self.managers.values())
+        t += sum(d["warm"][0] for d in self._departed.values())
         n = sum(m._warm_n for m in self.managers.values())
+        n += sum(d["warm"][1] for d in self._departed.values())
         return t / n if n else self.top1
 
     @property
     def n_predictions(self) -> int:
-        return sum(m.n_predictions for m in self.managers.values())
+        return sum(m.n_predictions for m in self.managers.values()) + \
+            sum(d["n_predictions"] for d in self._departed.values())
 
     @property
     def n_classes(self) -> int:
-        return sum(m.n_classes for m in self.managers.values())
+        return sum(m.n_classes for m in self.managers.values()) + \
+            sum(d["n_classes"] for d in self._departed.values())
 
     @property
     def n_models(self) -> int:
-        return sum(m.n_models for m in self.managers.values())
+        return sum(m.n_models for m in self.managers.values()) + \
+            sum(d["n_models"] for d in self._departed.values())
 
     @property
     def per_tenant_top1(self) -> dict:
-        return {str(k): m.top1 for k, m in self.managers.items()}
+        out = {str(k): d["top1"] for k, d in self._departed.items()}
+        out.update({str(k): m.top1 for k, m in self.managers.items()})
+        return out
 
     # -- health views (the serve sidecar's summary line) ---------------------
 

@@ -1,0 +1,35 @@
+"""`repro.uvm.qos` — per-tenant capacity partitioning for the shared device.
+
+The simulator evicts from ONE global capacity pool, so a thrashing tenant
+can starve a well-behaved neighbour (the Section V-F fairness gap): the
+victim keys say nothing about WHO owns a block.  This package closes the
+gap with three pieces that sit between the :class:`~repro.uvm.manager.TenantMux`
+and the simulator/server:
+
+* **Budgeted eviction** — :meth:`BudgetController.evict_pref` compiles the
+  current budgets + residency into the per-block int32 leading victim key
+  the simulator's packed-priority tuple already supports
+  (``repro.uvm.simulator.run_segment(..., evict_pref=...)``): blocks of
+  over-budget tenants carry ``-1`` and are exhausted before ANY
+  under-budget tenant loses a page.  All-``None`` budgets trace the exact
+  pre-QoS program — the goldens pin that path bit for bit.
+* **Elastic rebalancing** — :class:`BudgetController` recomputes budgets
+  every ``interval`` rounds from observed per-tenant pressure (thrash per
+  access), weighting each tenant's slice of the elastic pool by a
+  registered ``stability`` scorer (:mod:`repro.uvm.qos.stability` —
+  ``percentile`` and ``gmr``, scroogevm's ``stability_assesser`` shape).
+* **Tiers** — :class:`QosTier` (guaranteed ``floor`` fraction + elastic
+  ``share`` weight) per tenant, surfaced as ``QosSpec`` on
+  :class:`~repro.uvm.api.specs.ModelSpec`, ``--qos-tier`` on ``cli
+  serve``/``server``, and ``qos=`` on :func:`repro.uvm.runtime.run_ours`.
+
+Block ownership is learned first-toucher from the observed fault stream
+(tenants of a :func:`repro.uvm.trace.concurrent` merge occupy disjoint
+block-aligned page ranges, so first-toucher IS the static owner there);
+:meth:`BudgetController.release` returns a departed tenant's claim to the
+pool so budgets rebalance to live tenants.
+"""
+from repro.uvm.qos.budget import BudgetController, QosTier, parse_tier_flags
+from repro.uvm.qos import stability as stability  # noqa: F401  (registers builtins)
+
+__all__ = ["BudgetController", "QosTier", "parse_tier_flags"]

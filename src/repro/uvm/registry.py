@@ -39,6 +39,12 @@ Contracts:
   / ``on_intervals(n)`` — the
   :class:`repro.core.policy.PredictionFrequencyTable` contract.  Builtin:
   ``setassoc`` (the paper's 1024x16 set-associative table).
+* **stability factory(**kw)** returns a scorer ``score(history) ->
+  float in [0, 1]`` mapping one tenant's per-round pressure history (its
+  thrash rate per access) to how oversubscribable that tenant currently
+  is (1 = perfectly stable, 0 = thrashing) — the shape of scroogevm's
+  ``stability_assesser``.  Builtins: ``percentile``, ``gmr``.  Used by
+  :class:`repro.uvm.qos.BudgetController` to weight elastic budgets.
 
 Registration order is identity: entry ids are assigned densely in
 registration order and traced into the compiled scans as runtime values, so
@@ -66,16 +72,19 @@ __all__ = [
     "register_predictor",
     "register_classifier",
     "register_freq_table",
+    "register_stability",
     "policy_names",
     "prefetcher_names",
     "predictor_names",
     "classifier_names",
     "freq_table_names",
+    "stability_names",
     "policy_branches",
     "prefetch_branches",
     "predictor_builder",
     "classifier_factory",
     "freq_table_factory",
+    "stability_factory",
     "registry_version",
     "scoped",
     "POLICY_IDS",
@@ -100,6 +109,7 @@ _PREFETCHERS: dict[str, _PrefetchEntry] = {}
 _PREDICTORS: dict[str, Callable] = {}
 _CLASSIFIERS: dict[str, Callable] = {}
 _FREQ_TABLES: dict[str, Callable] = {}
+_STABILITY: dict[str, Callable] = {}
 
 # name -> dense id (aliases share the target's id). These dict OBJECTS are
 # stable — the simulator imports and holds them — so registrations made
@@ -203,6 +213,20 @@ def register_freq_table(name: str, factory: Callable) -> None:
     _FREQ_TABLES[name] = factory
 
 
+def register_stability(name: str, factory: Callable) -> None:
+    """Register a QoS stability scorer by a keyword-arg factory.
+
+    ``factory(**kw)`` returns a scorer callable ``score(history) -> float``
+    mapping a tenant's per-round pressure history (1-D array, thrash rate
+    per access, higher = worse) into ``[0, 1]`` (1 = stable, safe to lend
+    capacity to; 0 = thrashing); the name becomes a valid ``stability``
+    for :class:`repro.uvm.qos.BudgetController` / ``QosSpec``.  Stability
+    scorers never enter the simulator's branch tables (no version bump).
+    """
+    _claim(_STABILITY, name, "stability")
+    _STABILITY[name] = factory
+
+
 def policy_names() -> tuple[str, ...]:
     return tuple(_POLICIES)
 
@@ -221,6 +245,10 @@ def classifier_names() -> tuple[str, ...]:
 
 def freq_table_names() -> tuple[str, ...]:
     return tuple(_FREQ_TABLES)
+
+
+def stability_names() -> tuple[str, ...]:
+    return tuple(_STABILITY)
 
 
 def policy_branches() -> tuple[Callable, ...]:
@@ -257,6 +285,13 @@ def freq_table_factory(name: str) -> Callable:
         raise KeyError(f"unknown freq-table {name!r}; registered: {sorted(_FREQ_TABLES)}") from None
 
 
+def stability_factory(name: str) -> Callable:
+    try:
+        return _STABILITY[name]
+    except KeyError:
+        raise KeyError(f"unknown stability scorer {name!r}; registered: {sorted(_STABILITY)}") from None
+
+
 @contextlib.contextmanager
 def scoped():
     """Restore all registry TABLES on exit — for tests and notebooks that
@@ -269,7 +304,7 @@ def scoped():
     saved = (
         dict(_POLICIES), dict(_PREFETCHERS), dict(_PREDICTORS),
         dict(POLICY_IDS), dict(PREFETCH_IDS), _VERSION[0],
-        dict(_CLASSIFIERS), dict(_FREQ_TABLES),
+        dict(_CLASSIFIERS), dict(_FREQ_TABLES), dict(_STABILITY),
     )
     try:
         yield
@@ -281,5 +316,6 @@ def scoped():
         PREFETCH_IDS.clear(); PREFETCH_IDS.update(saved[4])
         _CLASSIFIERS.clear(); _CLASSIFIERS.update(saved[6])
         _FREQ_TABLES.clear(); _FREQ_TABLES.update(saved[7])
+        _STABILITY.clear(); _STABILITY.update(saved[8])
         if _VERSION[0] != saved[5]:
             _VERSION[0] += 1  # restored tables are a NEW state for the jits

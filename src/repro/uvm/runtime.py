@@ -76,6 +76,12 @@ class LearnedRunResult:
     #: per-tenant strictly-causal top-1 (multi-tenant mux runs only; keys
     #: are str(tenant) so the payload stays JSON-round-trippable)
     per_tenant_top1: dict | None = None
+    #: per-tenant fairness accounting (multi-tenant runs only): str(tenant)
+    #: -> {pages_thrashed, faults, accesses}, attributed to the tenant of
+    #: the access that triggered each event — what table10 spreads
+    per_tenant_stats: dict | None = None
+    #: final per-tenant QoS block budgets (budgeted mux runs only)
+    budgets: dict | None = None
 
     def ipc(self, pred_overhead_us: float = 1.0, n_accesses: int | None = None) -> float:
         # The predictor sits at the UVM backend and runs ASYNCHRONOUSLY with
@@ -300,13 +306,19 @@ def mux_for(
     reclass_hysteresis: int = 2,
     health: HealthConfig | None = None,
     trainer=None,
+    qos=None,
 ) -> TenantMux:
     """A :class:`TenantMux` for a tenant-tagged concurrent trace
     (Section V-F): one manager per tenant over the MERGED geometry (tenants
     occupy disjoint page ranges of the shared device, so every pipeline
     sees global page ids and the combined artifacts line up with the
     simulator's block space).  ``table`` is a Section V-A master each
-    tenant clones."""
+    tenant clones.
+
+    ``qos`` opts the mux into per-tenant capacity partitioning: a
+    :class:`~repro.uvm.api.specs.QosSpec` (tiers keyed by the trace's
+    ``tenant_names``, resolved here against this trace's geometry) or an
+    already-built :class:`~repro.uvm.qos.BudgetController`."""
     if trace.tenant is None:
         raise ValueError(f"trace {trace.name!r} has no tenant tags; use manager_for() instead")
     cfg = _manager_config(
@@ -316,10 +328,12 @@ def mux_for(
         reclass_interval=reclass_interval, reclass_hysteresis=reclass_hysteresis,
         health=health,
     )
+    if qos is not None and hasattr(qos, "controller"):  # a QosSpec
+        qos = qos.controller(cfg.capacity, cfg.n_blocks, trace.tenant_names)
     tenants = [int(t) for t in np.unique(trace.tenant)]
     return TenantMux(
         cfg, tenants, shared_freq_table=shared_freq_table, auto_create=False,
-        tables=table, trainer=trainer,
+        tables=table, trainer=trainer, qos=qos,
     )
 
 
@@ -330,16 +344,21 @@ def _group_batch(trace: Trace, g0: int, g1: int) -> FaultBatch:
     )
 
 
-def _apply_actions(state, actions, nb: int, cap: int):
+def _apply_actions(state, actions, nb: int, cap: int, evict_pref=None):
     """Stage one batch's actions into the simulator state: export the dense
     counters to the `learned` eviction keys, then apply the prefetches
-    (``counters is None`` = the gate was closed; nothing to stage)."""
+    (``counters is None`` = the gate was closed; nothing to stage).
+    ``evict_pref`` is the QoS leading victim key — prefetch-to-fit
+    evictions respect the budgets exactly as demand evictions do."""
     if actions.counters is None:
         return state
     state = state._replace(freq=jnp.asarray(actions.counters))
     mask = np.zeros(nb, bool)
     mask[actions.prefetch_blocks] = True
-    return S.apply_prefetch(state, jnp.asarray(mask), capacity=cap, policy="learned")
+    return S.apply_prefetch(
+        state, jnp.asarray(mask), capacity=cap, policy="learned",
+        evict_pref=evict_pref,
+    )
 
 
 def _state_stats(state) -> dict:
@@ -352,12 +371,58 @@ def _state_stats(state) -> dict:
     }
 
 
-def _result(mgr, state, n_accesses: int) -> LearnedRunResult:
+def _result(mgr, state, n_accesses: int, per_tenant_stats: dict | None = None) -> LearnedRunResult:
+    is_mux = isinstance(mgr, TenantMux)
     return LearnedRunResult(
         _state_stats(state), mgr.top1, mgr.n_predictions, mgr.n_classes,
         mgr.n_models, mgr.per_group, mgr.warm_top1, n_accesses,
-        per_tenant_top1=mgr.per_tenant_top1 if isinstance(mgr, TenantMux) else None,
+        per_tenant_top1=mgr.per_tenant_top1 if is_mux else None,
+        per_tenant_stats=per_tenant_stats,
+        budgets={str(k): v for k, v in mgr.qos.budgets.items()}
+        if is_mux and mgr.qos is not None else None,
     )
+
+
+class _TenantLedger:
+    """Per-tenant fairness accounting + QoS departure bookkeeping for one
+    tenant-tagged trace: attributes each group's thrash/fault events to the
+    tenant of the triggering access, and (budgeted runs only) releases a
+    tenant from the mux once its last access is behind us, so its counters
+    and budget slice rebalance to the tenants still running."""
+
+    def __init__(self, trace: Trace, mgr):
+        tn = np.asarray(trace.tenant)
+        self.trace = trace
+        self.mgr = mgr if isinstance(mgr, TenantMux) else None
+        self.stats = {
+            int(t): {"pages_thrashed": 0, "faults": 0, "accesses": 0}
+            for t in np.unique(tn)
+        }
+        # releasing is observable (combined counters shrink), so it is
+        # strictly an opt-in QoS behaviour — the budget-free goldens pin
+        # the keep-forever legacy path
+        self.departs = (
+            {int(t): int(np.max(np.nonzero(tn == t)[0])) for t in np.unique(tn)}
+            if self.mgr is not None and self.mgr.qos is not None else {}
+        )
+
+    def account(self, g0: int, g1: int, outs: dict) -> None:
+        tn = self.trace.tenant[g0:g1]
+        th = np.asarray(outs["thrash"])
+        fa = np.asarray(outs["fault"])
+        for t in np.unique(tn):
+            m = tn == t
+            d = self.stats[int(t)]
+            d["pages_thrashed"] += int(th[m].sum()) * PAGES_PER_BLOCK
+            d["faults"] += int(fa[m].sum())
+            d["accesses"] += int(m.sum())
+        if g1 < len(self.trace):  # keep final-group tenants admitted
+            for t in [t for t, last in self.departs.items() if last < g1]:
+                del self.departs[t]
+                self.mgr.release(t)
+
+    def result(self) -> dict:
+        return {str(t): dict(d) for t, d in self.stats.items()}
 
 
 def run_ours(
@@ -377,6 +442,7 @@ def run_ours(
     reclass_interval: int = 0,
     reclass_hysteresis: int = 2,
     health: HealthConfig | None = None,
+    qos=None,
 ) -> LearnedRunResult:
     """Drive one trace through the streaming manager + simulator.
 
@@ -390,11 +456,22 @@ def run_ours(
     Pass ``manager`` to drive an externally-built (possibly already warm)
     :class:`OversubscriptionManager` or :class:`TenantMux` instead of a
     fresh one — its config must match the trace's geometry.
+
+    ``qos`` (a :class:`~repro.uvm.api.specs.QosSpec` or a built
+    :class:`~repro.uvm.qos.BudgetController`) opts the mux run into
+    per-tenant capacity partitioning: each segment carries the controller's
+    budgets as the leading victim key, budgets rebalance from observed
+    per-tenant pressure between groups, and a tenant whose accesses are
+    exhausted is released so its slice flows to the tenants still running.
+    Requires a tenant-tagged multi-tenant run; ``None`` (default) is the
+    legacy shared pool, pinned bit-for-bit by the goldens.
     """
     pcfg = pcfg or PredictorConfig()
     tcfg = tcfg or TrainConfig()
     if multi_tenant is None:
         multi_tenant = trace.tenant is not None
+    if qos is not None and not multi_tenant:
+        raise ValueError("qos= requires a tenant-tagged multi-tenant run")
     if manager is not None:
         mgr = manager
     elif multi_tenant:
@@ -403,7 +480,7 @@ def run_ours(
             table=table, use_thrash_term=use_thrash_term, use_lucir=use_lucir,
             shared_freq_table=shared_freq_table,
             reclass_interval=reclass_interval, reclass_hysteresis=reclass_hysteresis,
-            health=health,
+            health=health, qos=qos,
         )
     else:
         mgr = manager_for(
@@ -416,6 +493,7 @@ def run_ours(
     state = S.init_state(nb, seed)
     blocks = trace.block.astype(np.int32)
     nxt = S.next_use_for(trace)  # cached per trace across groups/cells
+    ledger = _TenantLedger(trace, mgr) if trace.tenant is not None else None
 
     n = len(trace)
     # the manager's OWN training schedule decides the batch cadence — an
@@ -425,16 +503,25 @@ def run_ours(
     for g0 in range(0, n, G):
         g1 = min(g0 + G, n)
         actions = mgr.observe(_group_batch(trace, g0, g1))
-        state = _apply_actions(state, actions, nb, cap)
+        # the QoS leading victim key for this segment: budgets vs CURRENT
+        # residency (None on budget-free runs = the exact pre-QoS program)
+        ep = (
+            mgr.evict_pref(np.asarray(state.resident))
+            if isinstance(mgr, TenantMux) else None
+        )
+        state = _apply_actions(state, actions, nb, cap, evict_pref=ep)
         state, outs = S.run_segment(
             state, blocks[g0:g1], nxt[g0:g1],
             capacity=cap, policy="learned", prefetch="demand", n_valid=trace.n_blocks,
+            evict_pref=ep,
         )
         mgr.feedback(Outcomes(
             was_evicted=np.asarray(outs["was_evicted"]),
             fault_count=int(state.fault_count),
         ))
-    return _result(mgr, state, n)
+        if ledger is not None:
+            ledger.account(g0, g1, outs)
+    return _result(mgr, state, n, None if ledger is None else ledger.result())
 
 
 @dataclasses.dataclass
@@ -451,6 +538,8 @@ class _Lane:
     state: object
     blocks: np.ndarray
     nxt: np.ndarray
+    ledger: object = None  # _TenantLedger on tenant-tagged lanes
+    ep: np.ndarray | None = None  # this group's QoS leading victim key
 
     def observe_begin_all(self, batch) -> list:
         if isinstance(self.mgr, TenantMux):
@@ -491,6 +580,7 @@ def run_ours_many(
     reclass_interval: int = 0,
     reclass_hysteresis: int = 2,
     health: HealthConfig | None = None,
+    qos=None,
 ) -> list[LearnedRunResult]:
     """Run the full learned system over MANY traces in lockstep.
 
@@ -510,6 +600,12 @@ def run_ours_many(
     and with it the learned run's counters — if paper-table stability
     across device counts matters more than throughput, force the serial
     engine with ``REPRO_OURS_BATCHED=0``.
+
+    ``qos`` (one :class:`~repro.uvm.api.specs.QosSpec`, applied to every
+    tenant-tagged lane) opts those lanes into per-tenant capacity
+    partitioning — each lane owns an independent
+    :class:`~repro.uvm.qos.BudgetController`, exactly as serial
+    :func:`run_ours` calls build one each.
     """
     pcfg = pcfg or PredictorConfig()
     tcfg = tcfg or TrainConfig()
@@ -528,11 +624,16 @@ def run_ours_many(
             health=health,
         )
         if build is mux_for:
-            kw.update(shared_freq_table=shared_freq_table, trainer=trainer)
+            kw.update(shared_freq_table=shared_freq_table, trainer=trainer, qos=qos)
+        elif qos is not None:
+            raise ValueError(
+                f"qos= requires tenant-tagged lanes; trace {trace.name!r} has none"
+            )
         mgr = build(trace, pcfg, tcfg, **kw)
         lanes.append(_Lane(
             trace=trace, mgr=mgr, state=S.init_state(mgr.cfg.n_blocks, seed),
             blocks=trace.block.astype(np.int32), nxt=S.next_use_for(trace),
+            ledger=_TenantLedger(trace, mgr) if trace.tenant is not None else None,
         ))
     G = tcfg.group_size
     max_n = max((len(l.trace) for l in lanes), default=0)
@@ -551,8 +652,17 @@ def run_ours_many(
         ))
         for l, rs in reqs:
             actions = l.observe_finish_all([next(results) if r is not None else None for r in rs])
+            # the lane's QoS leading victim key for this segment (None on
+            # budget-free lanes = the exact pre-QoS vmapped program)
+            l.ep = (
+                l.mgr.evict_pref(np.asarray(l.state.resident))
+                if isinstance(l.mgr, TenantMux) else None
+            )
             # 2. stage counters + prefetches into the lane's simulator state
-            l.state = _apply_actions(l.state, actions, l.mgr.cfg.n_blocks, l.mgr.cfg.capacity)
+            l.state = _apply_actions(
+                l.state, actions, l.mgr.cfg.n_blocks, l.mgr.cfg.capacity,
+                evict_pref=l.ep,
+            )
 
         # 3. simulator segments under the learned policy, vmapped across
         #    lanes (each lane has its own compressed event stream)
@@ -561,6 +671,7 @@ def run_ours_many(
             [(l.blocks[g0:min(g0 + G, len(l.trace))], l.nxt[g0:min(g0 + G, len(l.trace))]) for l in act],
             [(S.POLICY_IDS["learned"], S.PREFETCH_IDS["demand"], l.mgr.cfg.capacity) for l in act],
             [l.trace.n_blocks for l in act],
+            evict_prefs=[l.ep for l in act],
         )
         # 4. feedback; the fine-tune dispatches batch through one vmapped
         #    train per bucket, then every manager publishes its entry
@@ -570,13 +681,21 @@ def run_ours_many(
             treqs.append((l, l.feedback_begin_all(Outcomes(
                 was_evicted=np.asarray(outs["was_evicted"]),
                 fault_count=int(state.fault_count),
-            ))))
-        tflat = [r for _, rs in treqs for r in rs if r is not None]
+            )), outs))
+        tflat = [r for _, rs, _ in treqs for r in rs if r is not None]
         trainer.train_group_many(
             [r.entry for r in tflat], [r.fs for r in tflat], [r.n_active for r in tflat],
             in_et_list=[r.in_et for r in tflat], use_lucir=use_lucir,
         )
-        for l, rs in treqs:
+        for l, rs, outs in treqs:
             l.feedback_finish_all(rs)
+            # fairness accounting + QoS tenant departure, after the round
+            # fully closes — same ordering as the serial run_ours loop
+            if l.ledger is not None:
+                l.ledger.account(g0, min(g0 + G, len(l.trace)), outs)
 
-    return [_result(l.mgr, l.state, len(l.trace)) for l in lanes]
+    return [
+        _result(l.mgr, l.state, len(l.trace),
+                None if l.ledger is None else l.ledger.result())
+        for l in lanes
+    ]

@@ -68,6 +68,12 @@ class ServerConfig:
     resume: bool = False  # restore a named session's latest snapshot on hello
     inject: str | None = None  # chaos schedule for the SHARED trainer
     line_limit: int = 1 << 20  # bytes; longer lines close the connection
+    # per-session QoS capacity partitioning: raw --qos-tier strings
+    # (TENANT:FLOOR[:SHARE]); None/empty = the legacy shared pool.  Each
+    # connection gets its OWN BudgetController — sessions are isolated
+    qos_tiers: list | None = None
+    qos_stability: str = "percentile"
+    qos_interval: int = 1
 
 
 def _resolve_engine(exec_mode: str) -> str:
@@ -317,8 +323,19 @@ class FaultStreamServer:
     # -- per-connection plumbing ---------------------------------------------
 
     def _new_session(self, handle: _Handle) -> StreamSession:
+        qos = None
+        if self.cfg.qos_tiers:
+            from repro.uvm.qos import BudgetController, parse_tier_flags
+
+            # a fresh controller per connection: budgets partition each
+            # session's OWN device capacity, never across sessions
+            qos = BudgetController(
+                self.cfg.manager.capacity, self.cfg.manager.n_blocks,
+                tiers=parse_tier_flags(self.cfg.qos_tiers),
+                stability=self.cfg.qos_stability, interval=self.cfg.qos_interval,
+            )
         mux = TenantMux(self.cfg.manager, shared_freq_table=self.cfg.shared_freq_table,
-                        trainer=self.trainer)
+                        trainer=self.trainer, qos=qos)
         return StreamSession(mux, default_tenant=self.cfg.default_tenant,
                              on_hello=lambda session, name: self._on_hello(handle, session, name))
 

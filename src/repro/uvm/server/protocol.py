@@ -86,10 +86,12 @@ def decode_line(line: str, default_tenant: str):
     return "observe", (tenant, tagged), {"pages": np.asarray(pages, np.int64), **sides}
 
 
-def encode_record(batch: int, actions, *, tenant=None) -> str:
+def encode_record(batch: int, actions, *, tenant=None, budget=None) -> str:
     """One JSON action line for an observed batch.  Field order is part of
     the wire contract — the kill-9/resume gates compare tails byte-for-
-    byte, so serve and the server must emit identical strings."""
+    byte, so serve and the server must emit identical strings.  ``budget``
+    (the tenant's current QoS block budget) appears only on budgeted
+    streams — legacy streams stay byte-identical."""
     rec = {
         "batch": batch,
         "pattern": actions.pattern,
@@ -103,6 +105,8 @@ def encode_record(batch: int, actions, *, tenant=None) -> str:
     }
     if tenant is not None:
         rec["tenant"] = tenant
+    if budget is not None:
+        rec["budget"] = int(budget)
     return json.dumps(rec)
 
 

@@ -219,11 +219,15 @@ class StreamSession:
             result = []
             if evals:
                 result = yield EvalTick([r for _, r in evals])
-            actions = self.mux.observe_apply(pairs, evals, result).per_tenant[tenant]
+            macts = self.mux.observe_apply(pairs, evals, result)
+            actions = macts.per_tenant[tenant]
             self.pending[tenant] = len(payload["pages"])
             self.last_tenant = tenant
             self.batches += 1
-            out.append(encode_record(self.batches, actions, tenant=tenant if tagged else None))
+            out.append(encode_record(
+                self.batches, actions, tenant=tenant if tagged else None,
+                budget=None if macts.budgets is None else macts.budgets.get(tenant),
+            ))
             if self.store is not None and self.checkpoint_every and self.batches % self.checkpoint_every == 0:
                 self.checkpoint_due = True
         except ProtocolError as e:

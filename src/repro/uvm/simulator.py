@@ -384,7 +384,7 @@ def _lex_argmin(cand, *keys):
 
 
 def _evict_fit(state: SimState, capacity, policy_id, protect, interval_now, t_now,
-               policy_fns: tuple | None = None) -> SimState:
+               policy_fns: tuple | None = None, evict_pref=None) -> SimState:
     """Evict lowest-priority resident blocks until occupancy <= capacity.
 
     The victim keys are constant for the whole step (an eviction changes
@@ -392,7 +392,14 @@ def _evict_fit(state: SimState, capacity, policy_id, protect, interval_now, t_no
     victim is one chained masked-argmin over the precomputed tuple. The
     loop body — including the ``random`` policy's PRNG draw — only runs on
     steps that actually evict, which also holds under ``vmap`` (a batched
-    ``while_loop`` skips the body once every lane's condition is false)."""
+    ``while_loop`` skips the body once every lane's condition is false).
+
+    ``evict_pref`` (optional int32 per-block array, constant for the step
+    like every other key) is the QoS budget tier: it is prepended as the
+    LEADING lexicographic key, so lower-preference blocks (an over-budget
+    tenant's) are exhausted before ANY higher-preference block is
+    considered, whatever the policy's own keys say.  ``None`` (the
+    default) traces the exact pre-QoS program — bit-identical counters."""
     base = ~state.pinned & ~protect
 
     def cond(c):
@@ -402,7 +409,8 @@ def _evict_fit(state: SimState, capacity, policy_id, protect, interval_now, t_no
     def body(c):
         resident, evicted_once, occ = c
         k1, k2, k3 = _policy_keys(state, policy_id, interval_now, t_now, policy_fns)
-        victim = _lex_argmin(resident & base, k1, k2, k3)
+        keys = (k1, k2, k3) if evict_pref is None else (evict_pref, k1, k2, k3)
+        victim = _lex_argmin(resident & base, *keys)
         return resident.at[victim].set(False), evicted_once.at[victim].set(True), occ - 1
 
     resident, evicted_once, occ = jax.lax.while_loop(
@@ -412,12 +420,15 @@ def _evict_fit(state: SimState, capacity, policy_id, protect, interval_now, t_no
 
 
 def _scan_events(state: SimState, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid,
-                 policy_fns: tuple | None = None, prefetch_fns: tuple | None = None):
+                 policy_fns: tuple | None = None, prefetch_fns: tuple | None = None,
+                 evict_pref=None):
     """One lane: scan the compressed event stream. All cell parameters are
     traced values — a single compile serves every (policy, prefetch,
     capacity, n_valid) combination of this shape. ``policy_fns`` /
     ``prefetch_fns`` are the registry branch tables the caller keyed its
-    jit cache on (``None`` reads the live registry)."""
+    jit cache on (``None`` reads the live registry); ``evict_pref`` is the
+    optional QoS leading victim key, constant for the whole segment (see
+    :func:`_evict_fit`)."""
     n_blocks = state.resident.shape[0]
     iota = jnp.arange(n_blocks, dtype=jnp.int32)
     valid = iota < n_valid
@@ -483,7 +494,8 @@ def _scan_events(state: SimState, blk, nxt, dt, rl, stride, capacity, policy_id,
         # padding events must not evict even if a caller handed us an
         # over-capacity state, so they see capacity == occupancy
         cap_eff = jnp.where(active, capacity, state2.occupancy)
-        state3 = _evict_fit(state2, cap_eff, policy_id, protect, interval_now, t_first, policy_fns)
+        state3 = _evict_fit(state2, cap_eff, policy_id, protect, interval_now, t_first, policy_fns,
+                            evict_pref)
         out = {
             "fault": fault,
             "thrash": thrash,
@@ -511,24 +523,36 @@ def _jits_for(policy_fns: tuple, prefetch_fns: tuple):
     restores them (the cache keys keep the builder functions alive, so
     identity can never be recycled onto a different function)."""
 
-    def scan(st, blk, nxt, dt, rl, stride, cap, pol, pf, nv):
+    def scan(st, blk, nxt, dt, rl, stride, cap, pol, pf, nv, ep=None):
         # the cache-key tables are CLOSED OVER here, so the compiled switch
         # can never disagree with the key (a concurrent registration between
         # key computation and tracing would otherwise alias)
-        return _scan_events(st, blk, nxt, dt, rl, stride, cap, pol, pf, nv, policy_fns, prefetch_fns)
+        return _scan_events(st, blk, nxt, dt, rl, stride, cap, pol, pf, nv, policy_fns, prefetch_fns, ep)
 
+    # ``evict_pref=None`` is an empty pytree to jit, so the budget-free call
+    # traces the EXACT pre-QoS program (not a zeros-keyed variant) — the
+    # goldens pin that path bit for bit, and budget-free runs pay nothing.
     @jax.jit
-    def run_events(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid):
+    def run_events(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid,
+                   evict_pref=None):
+        if evict_pref is None:
+            return jax.vmap(
+                lambda st, cap, pol, pf, nv: scan(st, blk, nxt, dt, rl, stride, cap, pol, pf, nv)
+            )(states, capacity, policy_id, prefetch_id, n_valid)
         return jax.vmap(
-            lambda st, cap, pol, pf, nv: scan(st, blk, nxt, dt, rl, stride, cap, pol, pf, nv)
-        )(states, capacity, policy_id, prefetch_id, n_valid)
+            lambda st, cap, pol, pf, nv, ep: scan(st, blk, nxt, dt, rl, stride, cap, pol, pf, nv, ep)
+        )(states, capacity, policy_id, prefetch_id, n_valid, evict_pref)
 
     @jax.jit
-    def run_events_lanes(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid):
-        return jax.vmap(scan)(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid)
+    def run_events_lanes(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid,
+                         evict_pref=None):
+        if evict_pref is None:
+            return jax.vmap(scan)(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid)
+        return jax.vmap(scan)(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid,
+                              evict_pref)
 
     @jax.jit
-    def apply_prefetch(state, mask, capacity, policy_id):
+    def apply_prefetch(state, mask, capacity, policy_id, evict_pref=None):
         newly = mask & ~state.resident & ~state.pinned
         n_new = newly.sum(dtype=jnp.int32)
         thrash = (newly & state.evicted_once).sum(dtype=jnp.int32)
@@ -541,7 +565,8 @@ def _jits_for(policy_fns: tuple, prefetch_fns: tuple):
             last_interval=jnp.where(newly, interval_now, state.last_interval),
             last_access=jnp.where(newly, state.time, state.last_access),
         )
-        return _evict_fit(st, capacity, policy_id, jnp.zeros_like(newly), interval_now, state.time, policy_fns)
+        return _evict_fit(st, capacity, policy_id, jnp.zeros_like(newly), interval_now, state.time, policy_fns,
+                          evict_pref)
 
     return run_events, run_events_lanes, apply_prefetch
 
@@ -550,10 +575,12 @@ def _jits():
     return _jits_for(_registry.policy_branches(), _registry.prefetch_branches())
 
 
-def _run_events(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid):
+def _run_events(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid,
+                evict_pref=None):
     """Batched event scan: ``states`` and the cell parameters carry a
     leading lane axis; the event stream is shared across lanes."""
-    return _jits()[0](states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid)
+    return _jits()[0](states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid,
+                      evict_pref)
 
 
 def _stack_states(states: list[SimState]) -> SimState:
@@ -594,12 +621,16 @@ def _run_cells(
     ev: Events,
     cells: list[tuple[int, int, int]],  # (policy_id, prefetch_id, capacity)
     n_valid: int,
+    evict_prefs: list | None = None,
 ):
     """Run one compressed stream under many cells in a single vmapped scan.
 
     Lanes are padded to a power of two with inert no-evict lanes so batch
     sizes fall into a few compile buckets; when several devices are
-    visible, lanes are sharded across them (see :func:`_shard_lanes`)."""
+    visible, lanes are sharded across them (see :func:`_shard_lanes`).
+    ``evict_prefs`` (optional, one per cell, ``None`` entries = no budget)
+    stacks into the per-lane QoS leading victim key; padding lanes and
+    ``None`` entries ride as zeros, which never change an argmin."""
     n_blocks = states[0].resident.shape[0]
     b_real = len(cells)
     # lane buckets {1, 8, 16, ...}: single runs stay cheap, sweeps share compiles
@@ -611,9 +642,20 @@ def _run_cells(
     pf = jnp.asarray(np.array([c[1] for c in cells], np.int32))
     cap = jnp.asarray(np.array([c[2] for c in cells], np.int32))
     nv = jnp.full(b_pad, n_valid, jnp.int32)
+    ep = None
+    if evict_prefs is not None and any(p is not None for p in evict_prefs):
+        ep = np.zeros((b_pad, n_blocks), np.int32)
+        for i, p in enumerate(evict_prefs):
+            if p is not None:
+                ep[i, : len(p)] = np.asarray(p, np.int32)
+        ep = jnp.asarray(ep)
     evs = tuple(jnp.asarray(getattr(ev, f)) for f in ("blk", "nxt", "dt", "rl", "stride"))
-    stacked, (cap, pol, pf, nv), evs = _shard_lanes(_stack_states(states), (cap, pol, pf, nv), evs, b_pad)
-    out_states, outs = _run_events(stacked, *evs, cap, pol, pf, nv)
+    if ep is None:
+        stacked, (cap, pol, pf, nv), evs = _shard_lanes(_stack_states(states), (cap, pol, pf, nv), evs, b_pad)
+    else:
+        stacked, (cap, pol, pf, nv, ep), evs = _shard_lanes(
+            _stack_states(states), (cap, pol, pf, nv, ep), evs, b_pad)
+    out_states, outs = _run_events(stacked, *evs, cap, pol, pf, nv, ep)
     return out_states, outs, b_real
 
 
@@ -648,6 +690,7 @@ def run_segment(
     prefetch: str,
     n_valid: int,
     want_outs: bool = True,
+    evict_pref: np.ndarray | None = None,
 ):
     """Run one trace segment (compress -> batched scan -> decompress).
 
@@ -655,6 +698,11 @@ def run_segment(
     faulted (its merged occurrences are then not provably fault-free), the
     segment is rerun with plain run-length events — so the returned
     counters are always bit-identical to the per-access reference.
+
+    ``evict_pref`` (optional int32 per-block array) is the QoS budget
+    tier prepended as the LEADING victim key for the whole segment —
+    lower values evict first (see :func:`_evict_fit`); budgets are
+    per-segment constants, recomputed by the caller between segments.
     """
     state = _ensure_key(state)
     blocks = np.asarray(blocks)
@@ -665,7 +713,8 @@ def run_segment(
         if ev.n_access == 0:
             z = np.zeros(0)
             return state, {"fault": z.astype(bool), "thrash": z.astype(np.int32), "was_evicted": z.astype(bool)}
-        out_states, outs, _ = _run_cells([state], ev, [cell], n_valid)
+        out_states, outs, _ = _run_cells([state], ev, [cell], n_valid,
+                                         None if evict_pref is None else [evict_pref])
         lane = _lane(outs, 0)
         if periodic and (ev.stride > 1).any() and bool(np.asarray(lane["pfault"]).any()):
             continue  # divergence: a merged occurrence may have faulted
@@ -795,11 +844,13 @@ def run_batch(
     ]
 
 
-def _run_events_lanes(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid):
+def _run_events_lanes(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid,
+                      evict_pref=None):
     """Batched event scan where EVERY input carries a leading lane axis —
     unlike :func:`_run_events`, each lane walks its OWN event stream (the
     cross-benchmark case: different traces, same shape bucket)."""
-    return _jits()[1](states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid)
+    return _jits()[1](states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid,
+                      evict_pref)
 
 
 def run_segments_many(
@@ -809,6 +860,7 @@ def run_segments_many(
     n_valids: list[int],
     *,
     want_outs: bool = True,
+    evict_prefs: list | None = None,
 ) -> list[tuple[SimState, dict | None]]:
     """Run one trace segment per lane in bucketed vmapped scans.
 
@@ -817,8 +869,12 @@ def run_segments_many(
     padded with no-op events).  Lanes whose periodic aggregates diverged are
     rerun individually on plain RLE events, so every lane's counters stay
     bit-identical to the reference regardless of batching.
+
+    ``evict_prefs`` (optional, one entry per lane, ``None`` = no budget)
+    carries each lane's QoS leading victim key (see :func:`run_segment`).
     """
     results: list = [None] * len(states)
+    eps = evict_prefs if evict_prefs is not None else [None] * len(states)
     groups: dict = {}
     for i, (st, (blocks, next_use)) in enumerate(zip(states, segments)):
         st = _ensure_key(st)
@@ -837,7 +893,8 @@ def run_segments_many(
         """Exact single-lane rerun on plain RLE events (shares the b_pad=1
         compile bucket with run/run_segment)."""
         ev_r = compress_events(np.asarray(segments[i][0]), np.asarray(segments[i][1]))
-        o_st, o_outs, _ = _run_cells([st], ev_r, [cells[i]], n_valids[i])
+        o_st, o_outs, _ = _run_cells([st], ev_r, [cells[i]], n_valids[i],
+                                     None if eps[i] is None else [eps[i]])
         return _lane(o_st, 0), (_decompress_outs(_lane(o_outs, 0), ev_r) if want_outs else None)
 
     for (nb, e_len), lanes in groups.items():
@@ -846,7 +903,8 @@ def run_segments_many(
             # compiled shapes every serial caller already has, instead of
             # minting one vmapped compile per odd lane count
             for i, st, ev, _ in lanes:
-                out_states, outs, _ = _run_cells([st], ev, [cells[i]], n_valids[i])
+                out_states, outs, _ = _run_cells([st], ev, [cells[i]], n_valids[i],
+                                                 None if eps[i] is None else [eps[i]])
                 lane = _lane(outs, 0)
                 if (ev.stride > 1).any() and bool(np.asarray(lane["pfault"]).any()):
                     results[i] = _rle_rerun(i, st)
@@ -871,9 +929,20 @@ def run_segments_many(
             for k in range(3)
         ]
         nv = jnp.asarray(np.array([n_valids[i] for i in idxs] + [nb] * (b_pad - b_real), np.int32))
-        stacked, lane_arrs, _ = _shard_lanes(stacked, (*arrs, *cell_arr, nv), (), b_pad)
-        *arrs, pol_a, pf_a, cap_a, nv = lane_arrs
-        out_states, outs = _run_events_lanes(stacked, *arrs, cap_a, pol_a, pf_a, nv)
+        ep = None
+        if any(eps[i] is not None for i in idxs):
+            ep_np = np.zeros((b_pad, nb), np.int32)
+            for j, i in enumerate(idxs):
+                if eps[i] is not None:
+                    ep_np[j, : len(eps[i])] = np.asarray(eps[i], np.int32)
+            ep = jnp.asarray(ep_np)
+        if ep is None:
+            stacked, lane_arrs, _ = _shard_lanes(stacked, (*arrs, *cell_arr, nv), (), b_pad)
+            *arrs, pol_a, pf_a, cap_a, nv = lane_arrs
+        else:
+            stacked, lane_arrs, _ = _shard_lanes(stacked, (*arrs, *cell_arr, nv, ep), (), b_pad)
+            *arrs, pol_a, pf_a, cap_a, nv, ep = lane_arrs
+        out_states, outs = _run_events_lanes(stacked, *arrs, cap_a, pol_a, pf_a, nv, ep)
         pdiv = np.asarray(outs["pfault"]).any(axis=1)
         for j, (i, st, ev, _) in enumerate(lanes):
             if pdiv[j]:
@@ -886,16 +955,20 @@ def run_segments_many(
     return results
 
 
-def _apply_prefetch_jit(state: SimState, mask, capacity, policy_id):
-    return _jits()[2](state, mask, capacity, policy_id)
+def _apply_prefetch_jit(state: SimState, mask, capacity, policy_id, evict_pref=None):
+    return _jits()[2](state, mask, capacity, policy_id, evict_pref)
 
 
-def apply_prefetch(state: SimState, blocks_mask, *, capacity: int, policy: str = "learned") -> SimState:
-    """Stage externally-predicted prefetches (the learned runtime's async path)."""
+def apply_prefetch(state: SimState, blocks_mask, *, capacity: int, policy: str = "learned",
+                   evict_pref: np.ndarray | None = None) -> SimState:
+    """Stage externally-predicted prefetches (the learned runtime's async
+    path).  ``evict_pref`` is the optional QoS leading victim key for the
+    fit-back eviction (see :func:`run_segment`)."""
     state = _ensure_key(state)
     return _apply_prefetch_jit(
         state, jnp.asarray(blocks_mask),
         jnp.asarray(capacity, jnp.int32), jnp.asarray(POLICY_IDS[policy], jnp.int32),
+        None if evict_pref is None else jnp.asarray(evict_pref, jnp.int32),
     )
 
 

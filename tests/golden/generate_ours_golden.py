@@ -14,6 +14,13 @@ under BOTH treatments — ``|merged`` (one manager over the interleaved
 stream, the pre-mux baseline) and ``|mux`` (the `TenantMux` per-tenant
 pipelines, including the per-tenant top-1 split).
 
+PR 9 adds the budgeted-mux cells: each concurrent pair re-pinned under two
+QoS variants — ``|qos`` (percentile stability, asymmetric floors) and
+``|qos-gmr`` (GMR stability, even floors with a tilted elastic share) —
+recording the per-tenant fairness ledger and the final budgets alongside
+the usual counters.  The pre-existing ``|merged``/``|mux`` cells are NOT
+touched: budgets-off must stay bit-identical.
+
 PR 7 adds the drifting-workload cells (the zoo): an abrupt phase change
 run with periodic re-classification, a gradual (blended-boundary) phase
 change, a tenant-churn stream through the mux, and a fault-log round-trip
@@ -40,6 +47,7 @@ from repro.core.incremental import TrainConfig
 from repro.uvm import runtime as R
 from repro.uvm import trace as T
 from repro.uvm import zoo as Z
+from repro.uvm.api import QosSpec, QosTierSpec
 
 OUT = Path(__file__).with_name("ours_golden.json")
 
@@ -67,6 +75,9 @@ def _payload(res) -> dict:
     }
     if res.per_tenant_top1 is not None:
         out["per_tenant_top1"] = res.per_tenant_top1
+    if res.budgets is not None:  # budgeted cells only — legacy cells unchanged
+        out["budgets"] = res.budgets
+        out["per_tenant_stats"] = res.per_tenant_stats
     return out
 
 
@@ -77,6 +88,27 @@ def cell(name: str) -> dict:
 def concurrent_cell(pair: tuple[str, str], multi_tenant: bool) -> dict:
     tr = T.concurrent([_bench_trace(n) for n in pair], seed=0, slice_len=TCFG.group_size)
     return _payload(R.run_ours(tr, SMOKE, TCFG, multi_tenant=multi_tenant))
+
+
+#: PR 9 QoS variants per concurrent pair: (spec builder, oversubscription).
+#: ``qos`` pins asymmetric floors under the default percentile stability at
+#: moderate pressure; ``qos-gmr`` pins even floors with a tilted elastic
+#: share under the GMR scorer at heavy pressure (both registered stability
+#: kinds run through the gate, and the two cells pin distinct counters).
+QOS_VARIANTS = {
+    "qos": (lambda pair: QosSpec(tiers=(QosTierSpec(pair[0], floor=0.5, share=1.0),
+                                        QosTierSpec(pair[1], floor=0.1, share=1.0))),
+            2.5),
+    "qos-gmr": (lambda pair: QosSpec(tiers=(QosTierSpec(pair[0], floor=0.25, share=2.0),
+                                            QosTierSpec(pair[1], floor=0.25, share=1.0)),
+                                     stability="gmr", interval=2),
+                5.0),
+}
+
+
+def qos_cell(pair: tuple[str, str], spec: QosSpec, oversub: float) -> dict:
+    tr = T.concurrent([_bench_trace(n) for n in pair], seed=0, slice_len=TCFG.group_size)
+    return _payload(R.run_ours(tr, SMOKE, TCFG, oversubscription=oversub, qos=spec))
 
 
 def _churn_trace() -> T.Trace:
@@ -117,6 +149,10 @@ def generate(cells: list[str] | None = None) -> dict:
             key = f"concurrent:{'+'.join(pair)}|{label}"
             if cells is None or key in cells:
                 golden[key] = concurrent_cell(pair, mt)
+        for label, (build, oversub) in QOS_VARIANTS.items():
+            key = f"concurrent:{'+'.join(pair)}|{label}"
+            if cells is None or key in cells:
+                golden[key] = qos_cell(pair, build(pair), oversub)
     for key, build in DRIFT_CELLS.items():
         if cells is None or key in cells:
             golden[key] = _payload(build())

@@ -79,9 +79,10 @@ def test_spec_content_hash_stability():
     specs.SCHEMA intentionally instead, and regenerate these constants.
     (Regenerated for SCHEMA 2: PR 5's mux tenancy changed what a
     concurrent `ours` result means; regenerated again when PR 7 grew
-    `WorkloadSpec.drift`, which moves every workload hash.)"""
-    assert WorkloadSpec("ATAX").key == "55f022cc6cb02da2"
-    assert CellSpec(WorkloadSpec("ATAX")).key == "ce75be408a267d0a"
+    `WorkloadSpec.drift`, which moves every workload hash; regenerated
+    for SCHEMA 3 when PR 9 grew `ModelSpec.qos` capacity partitioning.)"""
+    assert WorkloadSpec("ATAX").key == "7363c55d1784e19f"
+    assert CellSpec(WorkloadSpec("ATAX")).key == "d9894afe33c1a780"
     # any field change moves the key
     keys = {
         CellSpec(WorkloadSpec("ATAX")).key,

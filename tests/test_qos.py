@@ -1,0 +1,293 @@
+"""QoS subsystem (PR 9): per-tenant capacity partitioning.
+
+The guarantees pinned here:
+
+* tier parsing/validation and the elastic partition math — guaranteed
+  floors (pro-rata scaled when over-promised), the share*stability split
+  of the elastic pool, and budgets never exceeding capacity;
+* pressure-driven rebalancing: a thrashing tenant's budget shrinks toward
+  its floor and the reclaimed blocks flow to its stable neighbour;
+* the `evict_pref` artifact: over-budget tenants' resident blocks (and
+  unowned residents) carry -1, within-budget tenants' blocks are NEVER
+  marked;
+* release returns a departed tenant's claim to the pool and budgets
+  rebalance over the live set;
+* the registered stability scorer family (`percentile`, `gmr`);
+* `QosSpec` round-trips through JSON, moves the content hash, and
+  resolves tier names onto a concurrent trace's tenant ids;
+* end to end: a budgeted `run_ours` reports `per_tenant_stats` and
+  `budgets`, rejects untagged traces, and the wire protocol only grows a
+  `"budget"` field when one is supplied (legacy streams byte-identical).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.uvm.qos import BudgetController, QosTier, parse_tier_flags
+from repro.uvm.qos.stability import gmr_scorer, percentile_scorer
+
+
+# -- tiers + parsing ----------------------------------------------------------
+
+def test_tier_validation():
+    QosTier(floor=0.0, share=0.0)  # boundary values are legal
+    QosTier(floor=1.0)
+    with pytest.raises(ValueError):
+        QosTier(floor=1.5)
+    with pytest.raises(ValueError):
+        QosTier(floor=-0.1)
+    with pytest.raises(ValueError):
+        QosTier(share=-1.0)
+
+
+def test_parse_tier_flags():
+    tiers = parse_tier_flags(["A:0.5", "B:0.1:2.0"])
+    assert tiers == {"A": QosTier(0.5, 1.0), "B": QosTier(0.1, 2.0)}
+    assert parse_tier_flags(None) == {} and parse_tier_flags([]) == {}
+    for bad in ("A", "A:0.5:1.0:9", ":0.5", "A:not-a-float"):
+        with pytest.raises(ValueError):
+            parse_tier_flags([bad])
+
+
+# -- the elastic partition ----------------------------------------------------
+
+def test_guaranteed_floors_and_elastic_split():
+    c = BudgetController(100, 128, tiers={"A": QosTier(0.5), "B": QosTier(0.2)})
+    c.admit("A")
+    c.admit("B")
+    # empty histories score 1.0, equal shares: elastic 30 splits 15/15
+    assert c.budgets == {"A": 65, "B": 35}
+    assert sum(c.budgets.values()) <= c.capacity
+
+
+def test_overpromised_floors_scale_pro_rata():
+    c = BudgetController(100, 128, tiers={"A": QosTier(0.9), "B": QosTier(0.9)})
+    c.admit("A")
+    c.admit("B")
+    # 0.9 + 0.9 > 1 scales to 0.5 each; no elastic pool remains
+    assert c.budgets == {"A": 50, "B": 50}
+
+
+def test_share_weights_tilt_the_elastic_pool():
+    c = BudgetController(90, 128, tiers={"A": QosTier(0.0, share=2.0),
+                                         "B": QosTier(0.0, share=1.0)})
+    c.admit("A")
+    c.admit("B")
+    assert c.budgets == {"A": 60, "B": 30}
+
+
+def test_pressure_shrinks_the_thrasher():
+    c = BudgetController(100, 128, tiers={"A": QosTier(0.1), "B": QosTier(0.1)})
+    c.admit("A")
+    c.admit("B")
+    even = dict(c.budgets)
+    for _ in range(8):
+        c.observe_pressure("A", 1.0)   # A thrashes every round
+        c.observe_pressure("B", 0.0)   # B never does
+        c.step()
+    assert c.scores["A"] < c.scores["B"]
+    assert c.budgets["A"] < even["A"] and c.budgets["B"] > even["B"]
+    # the guarantee holds whatever the pressure: floor(0.1 * 100) = 10
+    assert c.budgets["A"] >= 10
+    assert sum(c.budgets.values()) <= c.capacity
+
+
+def test_interval_batches_recomputes():
+    c = BudgetController(100, 128, interval=3)
+    c.admit("A")
+    c.admit("B")
+    before = dict(c.budgets)
+    c.observe_pressure("A", 1.0)
+    c.step()   # round 1: no recompute yet
+    c.step()   # round 2
+    assert c.budgets == before
+    c.step()   # round 3: recompute fires
+    assert c.budgets != before
+
+
+def test_all_zero_weights_split_evenly():
+    c = BudgetController(100, 128, tiers={"A": QosTier(0.0, share=0.0),
+                                          "B": QosTier(0.0, share=0.0)})
+    c.admit("A")
+    c.admit("B")
+    assert c.budgets == {"A": 50, "B": 50}
+
+
+# -- ownership, release, evict_pref ------------------------------------------
+
+def test_first_toucher_ownership():
+    c = BudgetController(10, 16)
+    c.observe_blocks("A", [0, 1, 2])
+    c.observe_blocks("B", [2, 3, -1, 99])   # 2 already A's; -1/99 out of range
+    assert c.block_owner[0] == c.block_owner[2] == c._index["A"]
+    assert c.block_owner[3] == c._index["B"]
+    assert c.block_owner[4] == -1
+
+
+def test_release_returns_blocks_and_rebalances():
+    c = BudgetController(10, 16, tiers={"A": QosTier(0.3), "B": QosTier(0.3)})
+    c.observe_blocks("A", [0, 1])
+    c.observe_blocks("B", [2, 3])
+    with_b = c.budgets["A"]
+    c.release("B")
+    assert np.all(c.block_owner[[2, 3]] == -1)      # claim returned to the pool
+    assert "B" not in c.budgets and "B" not in c.tenants
+    assert c.budgets["A"] > with_b                  # the live tenant absorbs it
+    c.release("B")                                  # idempotent
+
+
+def test_evict_pref_marks_only_over_budget_and_unowned():
+    c = BudgetController(4, 8, tiers={"A": QosTier(0.5), "B": QosTier(0.25)})
+    c.observe_blocks("A", [0, 1])      # budget 3 -> within budget
+    c.observe_blocks("B", [2, 3, 4])   # budget 1 -> 3 resident = over
+    resident = np.ones(8, bool)
+    pref = c.evict_pref(resident)
+    assert pref.dtype == np.int32 and pref.shape == (8,)
+    assert np.all(pref[[0, 1]] == 0)          # under-budget tenant: untouched
+    assert np.all(pref[[2, 3, 4]] == -1)      # over-budget tenant: evict first
+    assert np.all(pref[[5, 6, 7]] == -1)      # unowned residents: evict first
+    # non-resident blocks are never marked, whoever owns them
+    pref = c.evict_pref(np.zeros(8, bool))
+    assert not pref.any()
+
+
+def test_evict_pref_empty_controller_is_all_zero():
+    c = BudgetController(4, 8)
+    assert not c.evict_pref(np.ones(8, bool)).any()
+
+
+def test_state_restore_roundtrip():
+    c = BudgetController(100, 32, tiers={"A": QosTier(0.4, 2.0)}, stability="gmr",
+                         interval=2)
+    c.observe_blocks("A", [0, 1])
+    c.observe_blocks("B", [2])
+    c.observe_pressure("A", 0.8)
+    c.step()
+    c.step()
+    c2 = BudgetController(100, 32, tiers={"A": QosTier(0.4, 2.0)})
+    c2.restore(c.state())
+    assert c2.budgets == c.budgets and c2.scores == c.scores
+    assert np.array_equal(c2.block_owner, c.block_owner)
+    assert c2.stability == "gmr" and c2.interval == 2
+    # the restored controller keeps evolving identically
+    for x in (c, c2):
+        x.observe_pressure("A", 1.0)
+        x.step()
+        x.step()
+    assert c2.budgets == c.budgets
+
+
+# -- stability scorers --------------------------------------------------------
+
+def test_percentile_scorer():
+    s = percentile_scorer(q=90.0, window=4)
+    assert s([]) == 1.0                       # presumed stable until observed
+    assert s([0.0, 0.0, 0.0]) == 1.0
+    assert s([1.0, 1.0, 1.0]) == 0.0
+    assert s([9.0]) == 0.0                    # clipped into [0, 1]
+    # window: ancient thrash beyond the last 4 samples is forgotten
+    assert s([1.0] + [0.0] * 4) == 1.0
+
+
+def test_gmr_scorer():
+    s = gmr_scorer(window=4)
+    assert s([]) == 1.0
+    assert s([1.0, 1.0]) == pytest.approx(0.0, abs=1e-5)
+    # one spike washes out multiplicatively but still costs something
+    assert 0.5 < s([1.0, 0.0, 0.0, 0.0]) < 1.0
+
+
+def test_stability_registry():
+    from repro.uvm import registry as reg
+    assert {"percentile", "gmr"} <= set(reg.stability_names())
+    with pytest.raises(ValueError):
+        reg.register_stability("percentile", percentile_scorer)
+    with pytest.raises(KeyError):
+        reg.stability_factory("no-such-scorer")
+
+
+# -- QosSpec ------------------------------------------------------------------
+
+def test_qos_spec_roundtrip_and_key():
+    from repro.uvm.api import ModelSpec, QosSpec, QosTierSpec
+    spec = QosSpec(tiers=(QosTierSpec("A", floor=0.5), QosTierSpec("B", share=2.0)),
+                   stability="gmr", interval=2)
+    m = ModelSpec(qos=spec)
+    m2 = ModelSpec.from_dict(json.loads(m.to_json()))
+    assert m2 == m and m2.key == m.key
+    assert ModelSpec().key != m.key          # the qos block moves the hash
+    assert ModelSpec.from_dict(json.loads(ModelSpec().to_json())).qos is None
+
+
+def test_qos_spec_controller_maps_tenant_names():
+    from repro.uvm.api import QosSpec, QosTierSpec
+    spec = QosSpec(tiers=(QosTierSpec("right", floor=0.5),), interval=3)
+    c = spec.controller(100, 128, tenant_names=("left", "right"))
+    assert isinstance(c, BudgetController)
+    assert c.interval == 3
+    c.admit(0)   # "left": no tier -> default (floor 0)
+    c.admit(1)   # "right": floor 0.5 -> guaranteed 50
+    assert c.budgets[1] >= 50 > c.budgets[0]
+
+
+# -- runtime + wire integration ----------------------------------------------
+
+def _qos_run(**kw):
+    from repro.configs.predictor_paper import SMOKE
+    from repro.core.incremental import TrainConfig
+    from repro.uvm import runtime as R
+    from repro.uvm import trace as T
+    from repro.uvm.api import QosSpec, QosTierSpec
+
+    parts = [T.get_trace(n, scale=0.2) for n in ("StreamTriad", "Hotspot")]
+    tr = T.concurrent(parts, seed=0, slice_len=256)
+    spec = QosSpec(tiers=(QosTierSpec("StreamTriad", floor=0.5),
+                          QosTierSpec("Hotspot", floor=0.2)))
+    tcfg = TrainConfig(group_size=256, epochs=1, batch_size=64)
+    return R.run_ours(tr, SMOKE, tcfg, qos=spec, **kw)
+
+
+def test_run_ours_budgeted_reports_fairness():
+    res = _qos_run()
+    assert set(res.per_tenant_stats) == {"0", "1"}
+    for st in res.per_tenant_stats.values():
+        assert {"pages_thrashed", "faults", "accesses"} <= set(st)
+        assert st["accesses"] > 0
+    assert res.budgets and all(v >= 0 for v in res.budgets.values())
+
+
+def test_run_ours_qos_requires_tenants():
+    from repro.configs.predictor_paper import SMOKE
+    from repro.core.incremental import TrainConfig
+    from repro.uvm import runtime as R
+    from repro.uvm import trace as T
+    from repro.uvm.api import QosSpec
+
+    tr = T.get_trace("ATAX", scale=0.2)
+    with pytest.raises(ValueError, match="tenant"):
+        R.run_ours(tr, SMOKE, TrainConfig(group_size=256, epochs=1, batch_size=64),
+                   qos=QosSpec())
+
+
+def test_encode_record_budget_field_is_optional():
+    from repro.uvm.server.protocol import encode_record
+
+    class FakeActions:
+        prefetch_blocks = np.array([1, 2])
+        pre_evict_blocks = np.array([3])
+        pattern = 0
+        n_samples = 4
+        accuracy = 0.5
+        warm = 0.5
+        health = "healthy"
+        fallback = False
+
+    legacy = encode_record(7, FakeActions(), tenant="A")
+    budgeted = encode_record(7, FakeActions(), tenant="A", budget=12)
+    assert "budget" not in json.loads(legacy)
+    assert json.loads(budgeted)["budget"] == 12
+    assert json.loads(budgeted).pop("budget") is not None
+    b = json.loads(budgeted)
+    del b["budget"]
+    assert b == json.loads(legacy)   # the field is purely additive
