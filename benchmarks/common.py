@@ -22,10 +22,28 @@ from pathlib import Path
 # (repro.uvm.api.session.enable_compile_cache) before any jit runs
 from repro.uvm.api import ALL_BENCH, FEATURED, Session  # noqa: F401
 
-# Deprecated: the quick-scale predictor definition now lives with the other
-# predictor configs so the CLI and benchmarks share one source.
-from repro.configs.predictor_paper import CONFIG_QUICK as PCFG_QUICK  # noqa: F401
-from repro.configs.predictor_paper import CONFIG as PCFG_FULL  # noqa: F401
+# Deprecated re-exports (PR 3 moved the configs to repro.configs.predictor_paper;
+# in-tree call sites migrated in PR 10): accessing them warns DeprecationWarning,
+# and the names are DELETED in the next PR — see docs/API.md for the schedule.
+_DEPRECATED_CONFIGS = {"PCFG_QUICK": "CONFIG_QUICK", "PCFG_FULL": "CONFIG"}
+
+
+def __getattr__(name: str):
+    if name in _DEPRECATED_CONFIGS:
+        import warnings
+
+        from repro.configs import predictor_paper
+
+        new = _DEPRECATED_CONFIGS[name]
+        warnings.warn(
+            f"benchmarks.common.{name} is deprecated and will be removed in the "
+            f"next PR; import repro.configs.predictor_paper.{new} instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return getattr(predictor_paper, new)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 OUT_DIR = Path("experiments/bench")
 

@@ -11,6 +11,7 @@ Measures, per suite benchmark:
     PYTHONPATH=src python -m benchmarks.sim_perf            # full quick-scale sweep
     PYTHONPATH=src python -m benchmarks.sim_perf --smoke    # CI: 3 benchmarks + concurrent + sharded lane
     PYTHONPATH=src python -m benchmarks.sim_perf --manager  # manager section: vectorized vs loop freq table
+    PYTHONPATH=src python -m benchmarks.sim_perf --kernels  # kernels section: Pallas vs scan/host paths
     PYTHONPATH=src python -m benchmarks.sim_perf --update-baseline  # rewrite BENCH_sim.json "after"
 
 ``--manager`` prepends the streaming-manager section to the requested
@@ -19,6 +20,14 @@ frozen per-block loop (`LoopPredictionFrequencyTable`) on real benchmark
 block streams, asserting identical table state and a real speedup;
 combined with ``--update-baseline`` it records before/after into
 BENCH_sim.json under ``manager``.
+
+``--kernels`` prepends the Pallas-kernel section (ISSUE 10): the
+victim-selection kernel path (``REPRO_SIM_KERNELS=1``) against the
+default scan path over the full sweep grid — counters must stay
+bit-identical (hard gate) — plus `PallasPredictionFrequencyTable`
+against the host table on the same block streams.  On CPU hosts the
+kernels run in interpret mode, so the ratio gate is a regression bound;
+compiled-backend numbers are recorded into BENCH_sim.json as pending.
 
 Output: experiments/bench/sim_perf.csv (+ the `name,us_per_call,derived`
 contract line) and a comparison against the committed BENCH_sim.json
@@ -139,6 +148,77 @@ def bench_manager(scale: float, cap: int) -> list[dict]:
         "vec_blocks_per_s": int(np.mean([r["vec_blocks_per_s"] for r in rows])),
     }
     return [agg] + rows
+
+
+def bench_kernels(scale: float, cap: int, smoke: bool = False) -> list[dict]:
+    """The `--kernels` section (ISSUE 10): the Pallas victim-selection and
+    frequency-table kernels against the scan/numpy default paths.
+
+    Per benchmark: a full EQUIV_CELLS `run_batch` sweep on the scan path vs
+    REPRO_SIM_KERNELS' kernel path (counters asserted bit-identical — the
+    hard gate), and the manager's freq-table stream through the host table
+    vs `PallasPredictionFrequencyTable` (state asserted identical).  On CPU
+    backends the kernels run in INTERPRET mode, so the wall-clock ratio is
+    a regression bound, not a win; compiled-path numbers are recorded as
+    pending a TPU/GPU run (`mode` says which this was).
+    """
+    from repro.core.policy import PallasPredictionFrequencyTable, PredictionFrequencyTable
+    from repro.kernels.freq_table import ops as ft_ops
+
+    mode = "interpret" if ft_ops.default_interpret() else "compiled"
+    rows = []
+    G = 1024
+    for name in (("ATAX",) if smoke else ("ATAX", "Hotspot", "StreamTriad")):
+        tr = _suite_trace(name, scale, cap)
+        n = len(tr)
+
+        def sweep(kernels):
+            t0 = time.time()
+            out = S.run_batch(tr, SWEEP_CELLS, kernels=kernels)
+            return time.time() - t0, out
+
+        sweep(False), sweep(True)  # warm both compile caches
+        scan_s, scan_out = sweep(False)
+        kern_s, kern_out = sweep(True)
+        assert scan_out == kern_out, f"kernel path diverged from scan path on {name}"
+        rows.append({
+            "benchmark": f"evict_select:{name}",
+            "mode": mode,
+            "accesses": n,
+            "scan_s": round(scan_s, 4),
+            "kernel_s": round(kern_s, 4),
+            "kernel_vs_scan_x": round(kern_s / max(scan_s, 1e-9), 2),
+            "kernel_cell_acc_per_s": int(len(SWEEP_CELLS) * n / max(kern_s, 1e-9)),
+        })
+
+        blocks = tr.block.astype(np.int64)
+        batches = [blocks[i : i + G] for i in range(0, len(blocks), G)]
+
+        def drive(make):
+            t = make()
+            t0 = time.time()
+            for i, b in enumerate(batches):
+                t.update(b)
+                t.lookup_many(b[: G // 4])
+                if i % 3 == 2:
+                    t.on_intervals(3)
+            return time.time() - t0, t
+
+        drive(PallasPredictionFrequencyTable)  # warm the kernel compile cache
+        host_s, t_host = drive(PredictionFrequencyTable)
+        pall_s, t_pall = drive(PallasPredictionFrequencyTable)
+        assert np.array_equal(t_host.tags, t_pall.tags) and np.array_equal(
+            t_host.counters, t_pall.counters), f"pallas freq table diverged on {name}"
+        rows.append({
+            "benchmark": f"freq_kernel:{name}",
+            "mode": mode,
+            "blocks": len(blocks),
+            "host_s": round(host_s, 4),
+            "kernel_s": round(pall_s, 4),
+            "kernel_vs_host_x": round(pall_s / max(host_s, 1e-9), 2),
+            "kernel_blocks_per_s": int(len(blocks) / max(pall_s, 1e-9)),
+        })
+    return rows
 
 
 def bench_multi_tenant(scale: float, cap: int) -> dict:
@@ -334,6 +414,10 @@ def main(argv=None) -> int:
     ap.add_argument("--manager", action="store_true",
                     help="also run the manager section (vectorized vs loop frequency table);"
                          " with --update-baseline, record it into BENCH_sim.json")
+    ap.add_argument("--kernels", action="store_true",
+                    help="also run the kernels section (Pallas victim-select + freq-table"
+                         " vs scan/host paths, bit-identity gated); with --update-baseline,"
+                         " record it into BENCH_sim.json")
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite the committed BENCH_sim.json 'after' section")
     args = ap.parse_args(argv)
@@ -382,6 +466,39 @@ def main(argv=None) -> int:
             print(f"# recorded manager section into {BASELINE_PATH}")
         print("# manager section ok")
         # fall through: --manager ADDS the section to the requested run
+
+    if args.kernels:
+        t0 = time.time()
+        krows = bench_kernels(args.scale, args.cap, smoke=args.smoke)
+        evict_rows = [r for r in krows if r["benchmark"].startswith("evict_select:")]
+        freq_rows = [r for r in krows if r["benchmark"].startswith("freq_kernel:")]
+        emit("sim_perf_kernels_evict", evict_rows, t0)
+        emit("sim_perf_kernels_freq", freq_rows, t0)
+        # Bit-identity is asserted inside bench_kernels (the hard gate).
+        # The wall-clock gates are regression bounds only.  evict_select
+        # compares two jitted JAX paths, so its ratio is meaningful even
+        # in interpret mode (~2x measured; bound 10x).  freq_kernel
+        # compares against the pure-numpy host table, which interpret
+        # mode cannot touch (per-block Python dispatch) — that ratio is
+        # gated only on a compiled backend and recorded otherwise.
+        for r in evict_rows:
+            assert r["kernel_vs_scan_x"] < 10.0, r
+        if krows[0]["mode"] == "compiled":
+            for r in freq_rows:
+                assert r["kernel_vs_host_x"] < 10.0, r
+        if args.update_baseline and BASELINE_PATH.exists():
+            base = json.loads(BASELINE_PATH.read_text())
+            base["kernels"] = {
+                "mode": krows[0]["mode"],
+                "bit_identical_to_scan_path": True,
+                "compiled_backend": ("recorded" if krows[0]["mode"] == "compiled"
+                                     else "pending (CPU-only host: interpret mode)"),
+                "rows": krows,
+            }
+            BASELINE_PATH.write_text(json.dumps(base, indent=2) + "\n")
+            print(f"# recorded kernels section into {BASELINE_PATH}")
+        print("# kernels section ok")
+        # fall through: --kernels ADDS the section to the requested run
 
     names = ["ATAX", "Hotspot", "StreamTriad"] if args.smoke else list(T.BENCHMARKS)
     t0 = time.time()

@@ -222,7 +222,7 @@ def table9(ctx: Session):
     import json
     from pathlib import Path
 
-    from benchmarks.common import PCFG_QUICK
+    from repro.configs.predictor_paper import CONFIG_QUICK
     from repro.uvm import runtime as R
     from repro.uvm.api.specs import PretrainSpec, TrainSpec
 
@@ -231,12 +231,12 @@ def table9(ctx: Session):
     train = TrainSpec(group_size=256, epochs=2, batch_size=128)
     tcfg = train.to_train_config()
     pretrain = PretrainSpec(scale=0.24)  # quick Session.default_pretrain
-    table = lambda: ctx.pretrained(pretrain, pcfg=PCFG_QUICK, train=train)
+    table = lambda: ctx.pretrained(pretrain, pcfg=CONFIG_QUICK, train=train)
 
     def learned(tr, oversub, **kw):
-        mgr = R.manager_for(tr, PCFG_QUICK, tcfg, oversubscription=oversub,
+        mgr = R.manager_for(tr, CONFIG_QUICK, tcfg, oversubscription=oversub,
                             table=table(), **kw)
-        res = R.run_ours(tr, PCFG_QUICK, tcfg, oversubscription=oversub, manager=mgr)
+        res = R.run_ours(tr, CONFIG_QUICK, tcfg, oversubscription=oversub, manager=mgr)
         return res, mgr.n_pattern_switches
 
     cycle = ("StreamTriad", "RandomScan")
@@ -345,7 +345,7 @@ def table10(ctx: Session):
     byte-stable."""
     import json
 
-    from benchmarks.common import PCFG_QUICK
+    from repro.configs.predictor_paper import CONFIG_QUICK
     from repro.uvm import runtime as R
     from repro.uvm import timing
     from repro.uvm import trace as T
@@ -381,9 +381,9 @@ def table10(ctx: Session):
             [cut(T.get_trace(good, scale=SCALE)), cut(Z.get_trace("RandomScan", scale=SCALE))],
             seed=0, slice_len=GROUP,
         )
-        solo = R.run_ours(solo_tr, PCFG_QUICK, tcfg, oversubscription=oversub)
-        shared = R.run_ours(merged, PCFG_QUICK, tcfg, oversubscription=oversub)
-        budgeted = R.run_ours(merged, PCFG_QUICK, tcfg, oversubscription=oversub,
+        solo = R.run_ours(solo_tr, CONFIG_QUICK, tcfg, oversubscription=oversub)
+        shared = R.run_ours(merged, CONFIG_QUICK, tcfg, oversubscription=oversub)
+        budgeted = R.run_ours(merged, CONFIG_QUICK, tcfg, oversubscription=oversub,
                               qos=qos(good))
         for name, res in (("shared", shared), ("budgeted", budgeted)):
             pts = res.per_tenant_stats

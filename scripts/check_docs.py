@@ -60,6 +60,8 @@ REQUIRED_FLAG_MENTIONS = {
         "--malformed-every", "--malformed-client", "--inject",
         "--chaos-client", "--json",
     ),
+    # the Pallas kernel section (PR 10): the benchmark flag ships with docs
+    ("benchmarks.sim_perf", None): ("--kernels", "--manager", "--smoke", "--update-baseline"),
 }
 
 # python -m <module> [args ...] — up to a backtick, pipe or line end
@@ -164,11 +166,23 @@ def main() -> int:
             except AssertionError as e:
                 failures.append(str(e))
                 helps[key] = ""
+        label = f"{mod} {sub}" if sub else mod
         for flag in flags:
             if flag not in helps[key]:
-                failures.append(f"`{flag}` missing from `python -m {mod} {sub} --help`")
+                failures.append(f"`{flag}` missing from `python -m {label} --help`")
             if flag not in all_docs_text:
-                failures.append(f"`{flag}` ({sub}) is documented in none of {[d.name for d in DOCS]}")
+                failures.append(f"`{flag}` ({label}) is documented in none of {[d.name for d in DOCS]}")
+
+    # env-knob direction (PR 10): the kernel fast path's switch must stay
+    # documented in the scanned docs AND implemented by the simulator —
+    # docs promising a knob the code dropped (or vice versa) is drift
+    sys.path[:0] = [str(ROOT), str(ROOT / "src")]
+    from repro.uvm import simulator as _sim  # noqa: PLC0415
+
+    if "REPRO_SIM_KERNELS" not in all_docs_text:
+        failures.append(f"`REPRO_SIM_KERNELS` is documented in none of {[d.name for d in DOCS]}")
+    if not (hasattr(_sim, "sim_kernels_enabled") and "REPRO_SIM_KERNELS" in (_sim.__doc__ or "")):
+        failures.append("repro.uvm.simulator no longer implements/documents REPRO_SIM_KERNELS")
 
     # coverage direction: a subcommand added to the CLI without a documented
     # invocation is drift too (serve/run/sweep/report must all appear)

@@ -137,6 +137,45 @@ class LoopPredictionFrequencyTable(PredictionFrequencyTable):
             self.counters[s, w] = min(self.counters[s, w] + 1, COUNTER_MAX)
 
 
+class PallasPredictionFrequencyTable(PredictionFrequencyTable):
+    """Pallas-kernelized ``update``/``lookup_many`` (the ``REPRO_SIM_KERNELS``
+    path, registered as ``setassoc_pallas``).
+
+    State stays host-side numpy exactly like the base class (``dense``,
+    ``on_intervals``, pickling/snapshots all inherit), but the hot methods
+    stream through :mod:`repro.kernels.freq_table` — the whole (S, W) table
+    lives in VMEM for the batch instead of round-tripping numpy scatter
+    waves.  Bit-identical to the base table (both are pinned against the
+    loop oracle); block ids must fit int32, which the manager's page-range
+    clipping already guarantees.  Interpret mode is auto-selected on CPU
+    backends (same program as jnp ops — the CI gate); compiled-path speed
+    is a TPU/GPU follow-up (BENCH_sim.json marks it pending).
+    """
+
+    def update(self, blocks: np.ndarray):
+        b = np.asarray(blocks, np.int64).ravel()
+        if b.size == 0:
+            return
+        from repro.kernels.freq_table import ops  # lazy: default path stays jax-free
+
+        tags, counters = ops.freq_update(
+            self.tags, self.counters, b, use_kernel=True, interpret=ops.default_interpret()
+        )
+        self.tags = np.asarray(tags).astype(np.int64)
+        self.counters = np.asarray(counters).astype(np.int32)
+
+    def lookup_many(self, blocks: np.ndarray) -> np.ndarray:
+        b = np.asarray(blocks, np.int64).ravel()
+        if b.size == 0:
+            return np.zeros(0, np.int64)
+        from repro.kernels.freq_table import ops
+
+        out = ops.freq_lookup(
+            self.tags, self.counters, b, use_kernel=True, interpret=ops.default_interpret()
+        )
+        return np.asarray(out).astype(np.int64)
+
+
 def predicted_blocks(pred_pages: np.ndarray, pages_per_block: int = 16) -> np.ndarray:
     return np.unique(np.asarray(pred_pages, np.int64) // pages_per_block)
 

@@ -1,0 +1,76 @@
+"""Packed-priority victim-selection Pallas kernel.
+
+The simulator's eviction hot path re-reads four (NB,) key arrays from the
+traced scan state on every victim draw; this kernel loads the candidate
+mask and the full lexicographic key tuple into VMEM ONCE and walks the
+whole multi-victim selection in-core — one kernel invocation per scan
+step instead of one masked-argmin sweep per victim (the GPUVM bet:
+management-loop state stays device-resident).
+
+Bit-identity contract: the victim set equals the simulator's chained
+masked-argmin ``while_loop`` (``_lex_argmin`` semantics — smallest
+(k0, k1, k2, k3) tuple first, ties to the lowest block index), because
+the keys are constant for the whole step.  The kernel is shape-generic
+over NB and composes with ``vmap`` (the batching rule adds a lane grid
+axis) and ``lax.scan`` — the simulator calls it inside its per-event
+step.  ``interpret=True`` runs the identical program as jnp ops so CPU
+CI exercises the kernel path bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _select_kernel(cand_ref, k0_ref, k1_ref, k2_ref, k3_ref, n_ref, vict_ref):
+    """One program: select ``n_ref[0]`` victims from the VMEM-resident keys."""
+    cand = cand_ref[...] != 0
+    keys = (k0_ref[...], k1_ref[...], k2_ref[...], k3_ref[...])
+    n = n_ref[0]
+    nb = cand.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (nb, 1), 0)[:, 0]
+
+    def cond(c):
+        i, cand_now, _ = c
+        return (i < n) & cand_now.any()
+
+    def body(c):
+        i, cand_now, vict = c
+        m = cand_now
+        for k in keys:
+            kk = jnp.where(m, k, I32_MAX)
+            m = m & (kk == kk.min())
+        victim = jnp.argmax(m)
+        hit = iota == victim
+        return i + 1, cand_now & ~hit, vict | hit
+
+    _, _, vict = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), cand, jnp.zeros_like(cand))
+    )
+    vict_ref[...] = vict.astype(jnp.int32)
+
+
+def evict_select(cand, keys, n_evict, *, interpret: bool = False):
+    """Victim mask (bool (NB,)): the ``n_evict`` lowest-priority candidates.
+
+    ``keys`` is a tuple of up to 4 int32 (NB,) arrays, leading key first
+    (missing keys are padded with constant zeros, which never change a
+    lexicographic argmin).  ``n_evict`` is an int32 scalar — the kernel's
+    in-core loop also stops when candidates run out, mirroring the
+    simulator's ``cond``, so an over-large ``n_evict`` cannot overdraw.
+    """
+    cand = jnp.asarray(cand)
+    nb = cand.shape[0]
+    keys = tuple(jnp.asarray(k, jnp.int32) for k in keys)
+    if not 1 <= len(keys) <= 4:
+        raise ValueError(f"evict_select takes 1-4 keys, got {len(keys)}")
+    keys = keys + (jnp.zeros(nb, jnp.int32),) * (4 - len(keys))
+    vict = pl.pallas_call(
+        _select_kernel,
+        out_shape=jax.ShapeDtypeStruct((nb,), jnp.int32),
+        interpret=interpret,
+    )(cand.astype(jnp.int32), *keys, jnp.full((1,), n_evict, jnp.int32))
+    return vict != 0

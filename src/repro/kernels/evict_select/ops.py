@@ -1,0 +1,10 @@
+"""Dispatcher: Pallas victim selection when enabled, jnp oracle otherwise."""
+from __future__ import annotations
+
+from repro.kernels.evict_select import kernel, ref
+
+
+def evict_select(cand, keys, n_evict, *, use_kernel=False, interpret=False):
+    if use_kernel:
+        return kernel.evict_select(cand, keys, n_evict, interpret=interpret)
+    return ref.evict_select_ref(cand, keys, n_evict)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for packed-priority victim selection.
+
+Mirrors the simulator's eviction loop (``repro.uvm.simulator._evict_fit``)
+exactly: victims are picked one at a time by a chained masked-argmin over
+the per-step lexicographic key tuple (up to 4 int32 keys — the optional
+leading QoS ``evict_pref`` plus the policy's padded 3-tuple), ties broken
+by lowest block index, each victim removed from the candidate set before
+the next draw.  The keys are constant for the whole step (the simulator's
+documented invariant: nothing an eviction changes feeds back into the
+keys), so ``n_evict`` victims are exactly the first ``n_evict`` blocks in
+the (k0, k1, k2, k3, index) lexicographic order restricted to candidates.
+
+The oracle keeps the simulator's loop shape (``while_loop`` of masked
+argmins) so the kernel equivalence tests pin the Pallas kernel against the
+very program the scan path runs, not a re-derivation of it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lex_argmin_ref(cand, *keys):
+    """Index of the lexicographically-smallest key tuple among candidates
+    (verbatim ``repro.uvm.simulator._lex_argmin``)."""
+    for k in keys:
+        kk = jnp.where(cand, k, jnp.iinfo(jnp.int32).max)
+        cand = cand & (kk == kk.min())
+    return jnp.argmax(cand)
+
+
+def evict_select_ref(cand, keys, n_evict):
+    """Victim mask: the ``n_evict`` lowest-priority candidate blocks.
+
+    ``cand`` is the evictable mask (resident & ~pinned & ~protected),
+    ``keys`` a tuple of up to 4 int32 arrays (leading key first), and
+    ``n_evict`` the number of victims (already clamped by the caller to
+    ``min(max(occ - capacity, 0), cand.sum())`` — the loop below also
+    stops when candidates run out, like the simulator's ``cond``).
+    """
+    cand = jnp.asarray(cand, bool)
+    keys = tuple(jnp.asarray(k, jnp.int32) for k in keys)
+    iota = jnp.arange(cand.shape[0], dtype=jnp.int32)
+
+    def cond(c):
+        i, cand_now, _ = c
+        return (i < n_evict) & cand_now.any()
+
+    def body(c):
+        i, cand_now, vict = c
+        v = lex_argmin_ref(cand_now, *keys)
+        hit = iota == v
+        return i + 1, cand_now & ~hit, vict | hit
+
+    _, _, vict = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), cand, jnp.zeros_like(cand))
+    )
+    return vict

@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the prediction-frequency-table kernels.
+
+Mirrors :class:`repro.core.policy.LoopPredictionFrequencyTable` — the frozen
+per-block semantics oracle — one row update per streamed block: first-hit way,
+else first-empty way, else evict the lowest-counter way (first on ties), then
+one saturating increment.  The vectorized host table is pinned against the
+same oracle (tests/test_manager.py), so kernel == ref == host table is one
+equivalence chain.
+
+``blocks`` entries of ``-1`` are padding no-ops for ``update`` (real block
+ids are never negative); ``lookup`` runs the host ``lookup_many`` expression
+verbatim (padding results are sliced off by the caller).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import COUNTER_MAX
+
+
+def freq_update_ref(tags, counters, blocks):
+    """Stream ``blocks`` through the table; returns (tags, counters).
+
+    ``tags``/``counters`` are int32 (S, W); ``blocks`` int32 (N,) with -1
+    padding.  One ``lax.scan`` step per streamed block — arrival order IS
+    the update order, exactly the loop oracle.
+    """
+    tags = jnp.asarray(tags, jnp.int32)
+    counters = jnp.asarray(counters, jnp.int32)
+    blocks = jnp.asarray(blocks, jnp.int32)
+    n_sets, ways = tags.shape
+    wi = jnp.arange(ways, dtype=jnp.int32)
+
+    def first(mask):
+        return jnp.min(jnp.where(mask, wi, ways)).astype(jnp.int32)
+
+    def step(carry, b):
+        tags, counters = carry
+        active = b >= 0
+        s = jnp.where(active, b % n_sets, 0)
+        row_t, row_c = tags[s], counters[s]
+        hit = row_t == b
+        is_hit = hit.any()
+        empty = row_t == -1
+        min_c = row_c.min()
+        ins = jnp.where(empty.any(), first(empty), first(row_c == min_c))
+        way = jnp.where(is_hit, first(hit), ins)
+        sel = (wi == way) & active
+        base = jnp.where(is_hit, row_c[way], 0)
+        new_t = jnp.where(sel, b, row_t)
+        new_c = jnp.where(sel, jnp.minimum(base + 1, COUNTER_MAX), row_c)
+        return (tags.at[s].set(new_t), counters.at[s].set(new_c)), None
+
+    (tags, counters), _ = jax.lax.scan(step, (tags, counters), blocks)
+    return tags, counters
+
+
+def freq_lookup_ref(tags, counters, blocks):
+    """Current counter per block, -1 on miss — the host ``lookup_many``
+    expression (first-hit way via ``argmax``) as jnp ops."""
+    tags = jnp.asarray(tags, jnp.int32)
+    counters = jnp.asarray(counters, jnp.int32)
+    blocks = jnp.asarray(blocks, jnp.int32)
+    n_sets = tags.shape[0]
+    s = blocks % n_sets
+    rows_t = tags[s]
+    rows_c = counters[s]
+    hit = rows_t == blocks[:, None]
+    way = jnp.argmax(hit, axis=1)
+    cnt = jnp.take_along_axis(rows_c, way[:, None], axis=1)[:, 0]
+    return jnp.where(hit.any(axis=1), cnt, -1).astype(jnp.int32)

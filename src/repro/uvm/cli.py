@@ -291,7 +291,6 @@ def cmd_serve(args) -> int:
 
         store = SnapshotStore(args.checkpoint_dir)
         store.clean_tmp()  # sweep turds a killed writer left behind
-    fh = sys.stdin if args.input == "-" else open(args.input)
     session = StreamSession(mux, default_tenant=args.default_tenant,
                             store=store, checkpoint_every=args.checkpoint_every)
     if args.resume:
@@ -302,6 +301,10 @@ def cmd_serve(args) -> int:
             batches, resume_lineno = session.resume_latest()
             print(f"# resumed batch={batches} lineno={resume_lineno} "
                   f"tenants={len(mux.managers)} from {store.dir}", flush=True)
+    # open the input only after every early-exit validation above: an
+    # early `return 2` must not leak the handle (pytest's unraisable
+    # gate turns the ResourceWarning into a failure)
+    fh = sys.stdin if args.input == "-" else open(args.input)
     dispatch = SyncDispatch(mux.trainer, cfg.use_lucir)
 
     # SIGTERM/SIGINT: finish the current line, close pending batches, flush

@@ -47,7 +47,11 @@ from repro.core.features import DeltaVocab, FeatureSet
 from repro.core.incremental import Entry, TrainConfig, Trainer
 from repro.core.model_table import ModelTable
 from repro.core.pattern import LINEAR, RANDOM, RANDOM_REUSE, PatternClassifier
-from repro.core.policy import PredictionFrequencyTable, predicted_blocks
+from repro.core.policy import (
+    PallasPredictionFrequencyTable,
+    PredictionFrequencyTable,
+    predicted_blocks,
+)
 from repro.uvm import registry as _registry
 from repro.uvm.manager.snapshot import STATE_VERSION, tree_to_host
 from repro.uvm.manager.stream import _FIELDS as _STREAM_FIELDS
@@ -864,3 +868,10 @@ if "dfa" not in _registry.classifier_names():
     _registry.register_classifier("dfa", PatternClassifier)
 if "setassoc" not in _registry.freq_table_names():
     _registry.register_freq_table("setassoc", PredictionFrequencyTable)
+if "setassoc_pallas" not in _registry.freq_table_names():
+    # the REPRO_SIM_KERNELS freq-table engine: same 1024x16 semantics, hot
+    # methods routed through repro.kernels.freq_table (bit-identical — both
+    # tables are pinned against the loop oracle). NOTE: ``freq_table`` is
+    # part of _cfg_signature, so snapshots taken on one engine restore only
+    # onto the same engine.
+    _registry.register_freq_table("setassoc_pallas", PallasPredictionFrequencyTable)

@@ -260,6 +260,10 @@ def _manager_config(
         use_thrash_term=use_thrash_term, use_lucir=use_lucir,
         reclass_interval=reclass_interval, reclass_hysteresis=reclass_hysteresis,
         health=health,
+        # REPRO_SIM_KERNELS routes the manager's freq table through its
+        # Pallas engine too (bit-identical; note freq_table is part of the
+        # snapshot signature, so snapshots don't cross engines)
+        freq_table="setassoc_pallas" if S.sim_kernels_enabled() else "setassoc",
     )
 
 

@@ -61,6 +61,16 @@ exact (see tests/test_properties.py and tests/test_sim_equivalence.py).
     ``vmap``. (A fully vectorised sort-based "drop the ``occ - cap``
     lowest-ranked" variant was measured and rejected: batched ``cond``
     turns into ``select``, which forces the sort on every step.)
+  * **Pallas victim selection** (``REPRO_SIM_KERNELS=1``, default off) —
+    because the keys are constant per step, the whole multi-victim draw
+    is one :mod:`repro.kernels.evict_select` kernel call: candidate mask
+    + key tuple land in VMEM once and the chained masked-argmin loop runs
+    in-core, instead of re-reading the state arrays per victim.  Counters
+    are bit-identical to the scan path (the kernel runs the same loop;
+    ``n_evict = min(occ - cap, candidates)`` and the victim SET is order
+    free).  On CPU backends the kernel runs in interpret mode — same
+    program as jnp ops, exercised by CI; compiled-path numbers are a
+    TPU/GPU follow-up (BENCH_sim.json marks them pending).
   * **traced cell parameters** — policy, prefetcher, capacity, and the
     valid-block count are runtime values (not Python branches), so one
     compiled scan per (batch, n_blocks, events) shape bucket serves every
@@ -70,6 +80,7 @@ exact (see tests/test_properties.py and tests/test_sim_equivalence.py).
 from __future__ import annotations
 
 import functools
+import os
 from typing import NamedTuple
 
 import jax
@@ -383,8 +394,22 @@ def _lex_argmin(cand, *keys):
     return jnp.argmax(cand)
 
 
+def sim_kernels_enabled() -> bool:
+    """Default for the ``kernels=None`` arguments: REPRO_SIM_KERNELS=1 routes
+    victim selection through the Pallas kernel (and the manager's freq table
+    through its kernelized subclass — see :mod:`repro.uvm.manager.core`)."""
+    return os.environ.get("REPRO_SIM_KERNELS", "0").lower() not in ("0", "", "false")
+
+
+def _kernel_interpret() -> bool:
+    """Pallas interpret mode runs the kernels as jnp ops on backends with no
+    Mosaic lowering (CPU CI) — bit-identical, just not faster."""
+    return jax.default_backend() == "cpu"
+
+
 def _evict_fit(state: SimState, capacity, policy_id, protect, interval_now, t_now,
-               policy_fns: tuple | None = None, evict_pref=None) -> SimState:
+               policy_fns: tuple | None = None, evict_pref=None,
+               kernels: bool = False, interpret: bool = False) -> SimState:
     """Evict lowest-priority resident blocks until occupancy <= capacity.
 
     The victim keys are constant for the whole step (an eviction changes
@@ -399,8 +424,32 @@ def _evict_fit(state: SimState, capacity, policy_id, protect, interval_now, t_no
     LEADING lexicographic key, so lower-preference blocks (an over-budget
     tenant's) are exhausted before ANY higher-preference block is
     considered, whatever the policy's own keys say.  ``None`` (the
-    default) traces the exact pre-QoS program — bit-identical counters."""
+    default) traces the exact pre-QoS program — bit-identical counters.
+
+    ``kernels=True`` (a Python-static flag, part of the jit-cache key)
+    replaces the while_loop with ONE :mod:`repro.kernels.evict_select`
+    call selecting all ``min(max(occ - capacity, 0), |candidates|)``
+    victims in-core.  Bit-identical because the keys are constant for the
+    step (the ``random`` policy's draw is a pure ``fold_in`` — computing
+    it once for n victims equals computing it n times) and the resulting
+    resident/evicted_once/occupancy updates are victim-order free."""
     base = ~state.pinned & ~protect
+
+    if kernels:
+        from repro.kernels.evict_select import ops as _evict_ops
+
+        cand = state.resident & base
+        k1, k2, k3 = _policy_keys(state, policy_id, interval_now, t_now, policy_fns)
+        keys = (k1, k2, k3) if evict_pref is None else (evict_pref, k1, k2, k3)
+        n_evict = jnp.minimum(
+            jnp.maximum(state.occupancy - capacity, 0), cand.sum(dtype=jnp.int32)
+        )
+        vict = _evict_ops.evict_select(cand, keys, n_evict, use_kernel=True, interpret=interpret)
+        return state._replace(
+            resident=state.resident & ~vict,
+            evicted_once=state.evicted_once | vict,
+            occupancy=state.occupancy - vict.sum(dtype=jnp.int32),
+        )
 
     def cond(c):
         resident, evicted_once, occ = c
@@ -421,7 +470,7 @@ def _evict_fit(state: SimState, capacity, policy_id, protect, interval_now, t_no
 
 def _scan_events(state: SimState, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid,
                  policy_fns: tuple | None = None, prefetch_fns: tuple | None = None,
-                 evict_pref=None):
+                 evict_pref=None, kernels: bool = False, interpret: bool = False):
     """One lane: scan the compressed event stream. All cell parameters are
     traced values — a single compile serves every (policy, prefetch,
     capacity, n_valid) combination of this shape. ``policy_fns`` /
@@ -495,7 +544,7 @@ def _scan_events(state: SimState, blk, nxt, dt, rl, stride, capacity, policy_id,
         # over-capacity state, so they see capacity == occupancy
         cap_eff = jnp.where(active, capacity, state2.occupancy)
         state3 = _evict_fit(state2, cap_eff, policy_id, protect, interval_now, t_first, policy_fns,
-                            evict_pref)
+                            evict_pref, kernels, interpret)
         out = {
             "fault": fault,
             "thrash": thrash,
@@ -510,9 +559,12 @@ def _scan_events(state: SimState, blk, nxt, dt, rl, stride, capacity, policy_id,
 
 
 @functools.lru_cache(maxsize=None)
-def _jits_for(policy_fns: tuple, prefetch_fns: tuple):
+def _jits_for(policy_fns: tuple, prefetch_fns: tuple, kernels: bool = False,
+              interpret: bool = False):
     """The simulator's jitted entry points, keyed on the registry's branch
-    tables (the ordered tuples of key/mask builder functions).
+    tables (the ordered tuples of key/mask builder functions) plus the
+    Pallas-kernel selection flags — the kernel and scan paths are distinct
+    traced programs, so they get distinct compile caches.
 
     ``lax.switch`` clamps out-of-range indices, so a scan compiled under
     one table would silently run the wrong strategy for an id added later.
@@ -527,7 +579,8 @@ def _jits_for(policy_fns: tuple, prefetch_fns: tuple):
         # the cache-key tables are CLOSED OVER here, so the compiled switch
         # can never disagree with the key (a concurrent registration between
         # key computation and tracing would otherwise alias)
-        return _scan_events(st, blk, nxt, dt, rl, stride, cap, pol, pf, nv, policy_fns, prefetch_fns, ep)
+        return _scan_events(st, blk, nxt, dt, rl, stride, cap, pol, pf, nv, policy_fns, prefetch_fns, ep,
+                            kernels, interpret)
 
     # ``evict_pref=None`` is an empty pytree to jit, so the budget-free call
     # traces the EXACT pre-QoS program (not a zeros-keyed variant) — the
@@ -566,21 +619,28 @@ def _jits_for(policy_fns: tuple, prefetch_fns: tuple):
             last_access=jnp.where(newly, state.time, state.last_access),
         )
         return _evict_fit(st, capacity, policy_id, jnp.zeros_like(newly), interval_now, state.time, policy_fns,
-                          evict_pref)
+                          evict_pref, kernels, interpret)
 
     return run_events, run_events_lanes, apply_prefetch
 
 
-def _jits():
-    return _jits_for(_registry.policy_branches(), _registry.prefetch_branches())
+def _jits(kernels: bool | None = None):
+    """Resolve the jit triple for the requested eviction path.
+
+    ``kernels=None`` reads :func:`sim_kernels_enabled` (the env default);
+    an explicit bool pins the path regardless of environment.  Interpret
+    mode is auto-selected per backend — callers never choose it."""
+    k = sim_kernels_enabled() if kernels is None else bool(kernels)
+    return _jits_for(_registry.policy_branches(), _registry.prefetch_branches(),
+                     k, _kernel_interpret() if k else False)
 
 
 def _run_events(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid,
-                evict_pref=None):
+                evict_pref=None, kernels: bool | None = None):
     """Batched event scan: ``states`` and the cell parameters carry a
     leading lane axis; the event stream is shared across lanes."""
-    return _jits()[0](states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid,
-                      evict_pref)
+    return _jits(kernels)[0](states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid,
+                             evict_pref)
 
 
 def _stack_states(states: list[SimState]) -> SimState:
@@ -622,6 +682,7 @@ def _run_cells(
     cells: list[tuple[int, int, int]],  # (policy_id, prefetch_id, capacity)
     n_valid: int,
     evict_prefs: list | None = None,
+    kernels: bool | None = None,
 ):
     """Run one compressed stream under many cells in a single vmapped scan.
 
@@ -630,7 +691,13 @@ def _run_cells(
     visible, lanes are sharded across them (see :func:`_shard_lanes`).
     ``evict_prefs`` (optional, one per cell, ``None`` entries = no budget)
     stacks into the per-lane QoS leading victim key; padding lanes and
-    ``None`` entries ride as zeros, which never change an argmin."""
+    ``None`` entries ride as all-zero rows.  That fill is safe even for
+    controllers emitting NEGATIVE prefs: a ``None`` lane's row is uniform
+    (a constant leading key never changes an argmin), and within a real
+    lane only the tail BEYOND ``len(pref)`` is zero-filled — those are
+    padding blocks, which are never resident and so never candidates
+    (tests/test_properties.py::test_evict_pref_padding_invariant pins
+    this against mixed negative/``None``-interleaved lanes)."""
     n_blocks = states[0].resident.shape[0]
     b_real = len(cells)
     # lane buckets {1, 8, 16, ...}: single runs stay cheap, sweeps share compiles
@@ -655,7 +722,7 @@ def _run_cells(
     else:
         stacked, (cap, pol, pf, nv, ep), evs = _shard_lanes(
             _stack_states(states), (cap, pol, pf, nv, ep), evs, b_pad)
-    out_states, outs = _run_events(stacked, *evs, cap, pol, pf, nv, ep)
+    out_states, outs = _run_events(stacked, *evs, cap, pol, pf, nv, ep, kernels)
     return out_states, outs, b_real
 
 
@@ -691,6 +758,7 @@ def run_segment(
     n_valid: int,
     want_outs: bool = True,
     evict_pref: np.ndarray | None = None,
+    kernels: bool | None = None,
 ):
     """Run one trace segment (compress -> batched scan -> decompress).
 
@@ -703,6 +771,10 @@ def run_segment(
     tier prepended as the LEADING victim key for the whole segment —
     lower values evict first (see :func:`_evict_fit`); budgets are
     per-segment constants, recomputed by the caller between segments.
+
+    ``kernels`` selects the Pallas victim-selection path (``None`` =
+    the ``REPRO_SIM_KERNELS`` env default) — counters are bit-identical
+    either way (see :func:`_evict_fit`).
     """
     state = _ensure_key(state)
     blocks = np.asarray(blocks)
@@ -714,7 +786,7 @@ def run_segment(
             z = np.zeros(0)
             return state, {"fault": z.astype(bool), "thrash": z.astype(np.int32), "was_evicted": z.astype(bool)}
         out_states, outs, _ = _run_cells([state], ev, [cell], n_valid,
-                                         None if evict_pref is None else [evict_pref])
+                                         None if evict_pref is None else [evict_pref], kernels)
         lane = _lane(outs, 0)
         if periodic and (ev.stride > 1).any() and bool(np.asarray(lane["pfault"]).any()):
             continue  # divergence: a merged occurrence may have faulted
@@ -769,6 +841,7 @@ def run(
     oversubscription: float = 1.25,
     state: SimState | None = None,
     seed: int = 0,
+    kernels: bool | None = None,
 ) -> SimResult:
     """Run a full trace under (policy x prefetch) at an oversubscription level."""
     assert policy in POLICY_IDS and prefetch in PREFETCH_IDS, (policy, prefetch)
@@ -784,6 +857,7 @@ def run(
         capacity=cap, policy=policy,
         prefetch=prefetch,  # "none" aliases demand's id in the registry
         n_valid=trace.n_blocks,
+        kernels=kernels,
     )
     st = st._replace(key=jax.random.key_data(st.key))  # numpy-safe
     return SimResult(
@@ -800,6 +874,7 @@ def run_batch(
     *,
     seed: int = 0,
     seeds: list[int] | None = None,
+    kernels: bool | None = None,
 ) -> list[dict]:
     """Sweep many (policy, prefetch, oversubscription) cells over one trace
     in a single vmapped scan; returns one stats dict per cell, bit-identical
@@ -820,7 +895,7 @@ def run_batch(
     states = [init_state(nb, s) for s in lane_seeds]
     for periodic in (True, False):
         ev = compress_events(blocks, nxt, periodic=periodic)
-        out_states, outs, b_real = _run_cells(states, ev, id_cells, trace.n_blocks)
+        out_states, outs, b_real = _run_cells(states, ev, id_cells, trace.n_blocks, kernels=kernels)
         if periodic and (ev.stride > 1).any() and bool(np.asarray(jnp.any(outs["pfault"]))):
             continue  # some lane's periodic merge diverged: rerun all on RLE
         break
@@ -845,12 +920,12 @@ def run_batch(
 
 
 def _run_events_lanes(states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid,
-                      evict_pref=None):
+                      evict_pref=None, kernels: bool | None = None):
     """Batched event scan where EVERY input carries a leading lane axis —
     unlike :func:`_run_events`, each lane walks its OWN event stream (the
     cross-benchmark case: different traces, same shape bucket)."""
-    return _jits()[1](states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid,
-                      evict_pref)
+    return _jits(kernels)[1](states, blk, nxt, dt, rl, stride, capacity, policy_id, prefetch_id, n_valid,
+                             evict_pref)
 
 
 def run_segments_many(
@@ -861,6 +936,7 @@ def run_segments_many(
     *,
     want_outs: bool = True,
     evict_prefs: list | None = None,
+    kernels: bool | None = None,
 ) -> list[tuple[SimState, dict | None]]:
     """Run one trace segment per lane in bucketed vmapped scans.
 
@@ -871,7 +947,9 @@ def run_segments_many(
     bit-identical to the reference regardless of batching.
 
     ``evict_prefs`` (optional, one entry per lane, ``None`` = no budget)
-    carries each lane's QoS leading victim key (see :func:`run_segment`).
+    carries each lane's QoS leading victim key (see :func:`run_segment`);
+    ``kernels`` selects the Pallas victim-selection path for every lane
+    (``None`` = the ``REPRO_SIM_KERNELS`` env default).
     """
     results: list = [None] * len(states)
     eps = evict_prefs if evict_prefs is not None else [None] * len(states)
@@ -894,7 +972,7 @@ def run_segments_many(
         compile bucket with run/run_segment)."""
         ev_r = compress_events(np.asarray(segments[i][0]), np.asarray(segments[i][1]))
         o_st, o_outs, _ = _run_cells([st], ev_r, [cells[i]], n_valids[i],
-                                     None if eps[i] is None else [eps[i]])
+                                     None if eps[i] is None else [eps[i]], kernels)
         return _lane(o_st, 0), (_decompress_outs(_lane(o_outs, 0), ev_r) if want_outs else None)
 
     for (nb, e_len), lanes in groups.items():
@@ -904,7 +982,7 @@ def run_segments_many(
             # minting one vmapped compile per odd lane count
             for i, st, ev, _ in lanes:
                 out_states, outs, _ = _run_cells([st], ev, [cells[i]], n_valids[i],
-                                                 None if eps[i] is None else [eps[i]])
+                                                 None if eps[i] is None else [eps[i]], kernels)
                 lane = _lane(outs, 0)
                 if (ev.stride > 1).any() and bool(np.asarray(lane["pfault"]).any()):
                     results[i] = _rle_rerun(i, st)
@@ -942,7 +1020,7 @@ def run_segments_many(
         else:
             stacked, lane_arrs, _ = _shard_lanes(stacked, (*arrs, *cell_arr, nv, ep), (), b_pad)
             *arrs, pol_a, pf_a, cap_a, nv, ep = lane_arrs
-        out_states, outs = _run_events_lanes(stacked, *arrs, cap_a, pol_a, pf_a, nv, ep)
+        out_states, outs = _run_events_lanes(stacked, *arrs, cap_a, pol_a, pf_a, nv, ep, kernels)
         pdiv = np.asarray(outs["pfault"]).any(axis=1)
         for j, (i, st, ev, _) in enumerate(lanes):
             if pdiv[j]:
@@ -955,20 +1033,23 @@ def run_segments_many(
     return results
 
 
-def _apply_prefetch_jit(state: SimState, mask, capacity, policy_id, evict_pref=None):
-    return _jits()[2](state, mask, capacity, policy_id, evict_pref)
+def _apply_prefetch_jit(state: SimState, mask, capacity, policy_id, evict_pref=None,
+                        kernels: bool | None = None):
+    return _jits(kernels)[2](state, mask, capacity, policy_id, evict_pref)
 
 
 def apply_prefetch(state: SimState, blocks_mask, *, capacity: int, policy: str = "learned",
-                   evict_pref: np.ndarray | None = None) -> SimState:
+                   evict_pref: np.ndarray | None = None, kernels: bool | None = None) -> SimState:
     """Stage externally-predicted prefetches (the learned runtime's async
     path).  ``evict_pref`` is the optional QoS leading victim key for the
-    fit-back eviction (see :func:`run_segment`)."""
+    fit-back eviction (see :func:`run_segment`); ``kernels`` selects the
+    Pallas victim-selection path (``None`` = env default)."""
     state = _ensure_key(state)
     return _apply_prefetch_jit(
         state, jnp.asarray(blocks_mask),
         jnp.asarray(capacity, jnp.int32), jnp.asarray(POLICY_IDS[policy], jnp.int32),
         None if evict_pref is None else jnp.asarray(evict_pref, jnp.int32),
+        kernels,
     )
 
 

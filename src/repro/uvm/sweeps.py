@@ -25,14 +25,17 @@ EQUIV_CELLS = [
 _REPO = Path(__file__).resolve().parents[3]
 
 
-def run_batch_forced_devices(bench: str, scale: float, cap: int, cells=EQUIV_CELLS, devices: int = 4) -> list[dict]:
+def run_batch_forced_devices(bench: str, scale: float, cap: int, cells=EQUIV_CELLS, devices: int = 4,
+                             kernels: bool = False) -> list[dict]:
     """`simulator.run_batch` over a named benchmark trace in a subprocess
     with ``devices`` forced host devices; returns its per-cell stats.
 
     The child asserts the device count AND that the lane mesh engaged, so a
     silently-unsharded run cannot masquerade as a passing check.  Counters
     are integer state, so callers may require bit-equality with their own
-    single-device run.
+    single-device run.  ``kernels=True`` additionally pins the child onto
+    the Pallas victim-selection path (REPRO_SIM_KERNELS=1, asserted in the
+    child) — the sharded + kernel composition gate.
     """
     code = (
         "import json\n"
@@ -41,7 +44,8 @@ def run_batch_forced_devices(bench: str, scale: float, cap: int, cells=EQUIV_CEL
         "from repro.distributed.compat import lanes_mesh\n"
         f"assert lanes_mesh({len(cells)}) is not None  # the sweep really is sharded\n"
         "from repro.uvm import simulator as S, trace as T\n"
-        f"tr = T.get_trace({bench!r}, scale={scale}); tr = tr.slice(0, min(len(tr), {cap}))\n"
+        + (f"assert S.sim_kernels_enabled()  # the sweep really is kernelized\n" if kernels else "")
+        + f"tr = T.get_trace({bench!r}, scale={scale}); tr = tr.slice(0, min(len(tr), {cap}))\n"
         f"print(json.dumps(S.run_batch(tr, {cells!r})))\n"
     )
     env = dict(
@@ -50,6 +54,8 @@ def run_batch_forced_devices(bench: str, scale: float, cap: int, cells=EQUIV_CEL
         JAX_PLATFORMS="cpu",
         XLA_FLAGS=f"--xla_force_host_platform_device_count={devices} " + os.environ.get("XLA_FLAGS", ""),
     )
+    if kernels:
+        env["REPRO_SIM_KERNELS"] = "1"
     out = subprocess.run([sys.executable, "-c", code], env=env, capture_output=True, text=True, timeout=560)
     assert out.returncode == 0, out.stderr[-2000:]
     return json.loads(out.stdout.strip().splitlines()[-1])

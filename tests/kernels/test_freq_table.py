@@ -1,0 +1,123 @@
+"""Equivalence gate for the prediction-frequency-table kernels.
+
+The chain is: Pallas kernel == jnp ref == LoopPredictionFrequencyTable (the
+frozen per-block oracle) == the vectorized host table — on conflict-heavy
+streams that exercise way eviction, saturation, and first-on-ties argmin.
+"""
+import numpy as np
+import pytest
+
+from repro.core.policy import (
+    COUNTER_MAX,
+    LoopPredictionFrequencyTable,
+    PallasPredictionFrequencyTable,
+    PredictionFrequencyTable,
+)
+from repro.kernels.freq_table import ops, ref
+
+GEOMS = [
+    (1024, 16),  # the paper's table
+    (8, 4),      # tiny: every set conflicts
+    (96, 3),     # non-power-of-two rows/ways
+]
+
+
+def _stream(rng, n_sets, ways, n):
+    """Conflict-heavy stream: ~3x more distinct tags than table capacity,
+    plus hot repeats so saturating counters actually saturate."""
+    cold = rng.integers(0, n_sets * ways * 3, n)
+    hot = rng.integers(0, n_sets, n)  # one hot tag per set
+    pick = rng.random(n) < 0.3
+    return np.where(pick, hot, cold).astype(np.int64)
+
+
+@pytest.mark.parametrize("n_sets,ways", GEOMS)
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_update_lookup_match_loop_oracle(n_sets, ways, use_kernel):
+    rng = np.random.default_rng(n_sets)
+    b = _stream(rng, n_sets, ways, 4096 if n_sets == 1024 else 600)
+    loop = LoopPredictionFrequencyTable(n_sets, ways)
+    loop.update(b)
+    t, c = ops.freq_update(
+        np.full((n_sets, ways), -1, np.int32), np.zeros((n_sets, ways), np.int32),
+        b, use_kernel=use_kernel, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(t), loop.tags.astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(c), loop.counters)
+    q = rng.integers(0, n_sets * ways * 3, 500).astype(np.int64)
+    lk = ops.freq_lookup(loop.tags, loop.counters, q, use_kernel=use_kernel, interpret=True)
+    np.testing.assert_array_equal(np.asarray(lk), loop.lookup_many(q).astype(np.int32))
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_counter_saturation(use_kernel):
+    """A 100x-repeated block pins at COUNTER_MAX, exactly like the oracle."""
+    b = np.concatenate([np.full(100, 5), np.array([6, 7])]).astype(np.int64)
+    loop = LoopPredictionFrequencyTable(8, 4)
+    loop.update(b)
+    t, c = ops.freq_update(np.full((8, 4), -1, np.int32), np.zeros((8, 4), np.int32),
+                           b, use_kernel=use_kernel, interpret=True)
+    assert int(np.asarray(c).max()) == COUNTER_MAX
+    np.testing.assert_array_equal(np.asarray(t), loop.tags.astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(c), loop.counters)
+
+
+def test_update_is_incremental():
+    """Batch boundaries are invisible: many small updates == one big one."""
+    rng = np.random.default_rng(7)
+    b = _stream(rng, 64, 4, 900)
+    one = PallasPredictionFrequencyTable(64, 4)
+    one.update(b)
+    many = PallasPredictionFrequencyTable(64, 4)
+    for chunk in np.array_split(b, 13):
+        many.update(chunk)
+    np.testing.assert_array_equal(one.tags, many.tags)
+    np.testing.assert_array_equal(one.counters, many.counters)
+
+
+def test_pallas_table_drop_in():
+    """The kernelized table is a drop-in for the host table: same state
+    after interleaved update/lookup/flush traffic, same dense export, and
+    it pickles (the manager snapshots it)."""
+    import pickle
+
+    rng = np.random.default_rng(123)
+    host = PredictionFrequencyTable()
+    pall = PallasPredictionFrequencyTable()
+    for _ in range(5):
+        b = _stream(rng, 1024, 16, 2000)
+        host.update(b)
+        pall.update(b)
+        q = rng.integers(0, 1024 * 16 * 3, 400)
+        np.testing.assert_array_equal(host.lookup_many(q), pall.lookup_many(q))
+    np.testing.assert_array_equal(host.tags, pall.tags)
+    np.testing.assert_array_equal(host.counters, pall.counters)
+    np.testing.assert_array_equal(host.dense(4096), pall.dense(4096))
+    host.on_intervals(3)
+    pall.on_intervals(3)
+    assert host.flushes == pall.flushes == 1
+    np.testing.assert_array_equal(host.tags, pall.tags)
+    back = pickle.loads(pickle.dumps(pall))
+    assert isinstance(back, PallasPredictionFrequencyTable)
+    np.testing.assert_array_equal(back.tags, pall.tags)
+
+
+def test_kernel_ref_agree_on_padding_sentinel():
+    """-1 entries are update no-ops (the pow2 padding contract)."""
+    t0 = np.full((8, 4), -1, np.int32)
+    c0 = np.zeros((8, 4), np.int32)
+    b = np.array([3, -1, 3, -1, -1, 11], np.int64)
+    tk, ck = ops.freq_update(t0, c0, b, use_kernel=True, interpret=True)
+    tr_, cr = ref.freq_update_ref(t0, c0, np.array([3, -1, 3, -1, -1, 11], np.int32))
+    np.testing.assert_array_equal(np.asarray(tk), np.asarray(tr_))
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+    loop = LoopPredictionFrequencyTable(8, 4)
+    loop.update(np.array([3, 3, 11]))
+    np.testing.assert_array_equal(np.asarray(tk), loop.tags.astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(ck), loop.counters)
+
+
+def test_block_id_domain_guard():
+    with pytest.raises(ValueError):
+        ops.freq_update(np.full((8, 4), -1, np.int32), np.zeros((8, 4), np.int32),
+                        np.array([2**40]), use_kernel=True, interpret=True)

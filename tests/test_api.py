@@ -296,10 +296,15 @@ def test_ctx_shim_is_gone():
     assert not hasattr(common, "Ctx")
     with pytest.raises(ImportError):
         from repro.uvm.api.session import Ctx  # noqa: F401
-    # the moved quick-config is still re-exported under its old name
-    from repro.configs.predictor_paper import CONFIG_QUICK
+    # the moved quick-config survives under its old name ONE more PR, but
+    # now warns (in-tree call sites migrated to CONFIG_QUICK in PR 10;
+    # removal schedule in docs/API.md)
+    from repro.configs.predictor_paper import CONFIG, CONFIG_QUICK
 
-    assert common.PCFG_QUICK is CONFIG_QUICK
+    with pytest.warns(DeprecationWarning, match="PCFG_QUICK is deprecated"):
+        assert common.PCFG_QUICK is CONFIG_QUICK
+    with pytest.warns(DeprecationWarning, match="PCFG_FULL is deprecated"):
+        assert common.PCFG_FULL is CONFIG
 
 
 def test_session_ours_bit_identical_to_run_ours(tmp_path, monkeypatch):

@@ -128,6 +128,79 @@ def test_fast_path_matches_reference_concurrent(blocks_a, blocks_b, policy, seed
     _assert_fast_matches_reference(tr, policy, "tree", 1.25)
 
 
+@settings(max_examples=6, deadline=None)
+@given(
+    blocks=st.lists(st.integers(0, 31), min_size=15, max_size=90),
+    policy=st.sampled_from(["lru", "random", "belady", "hpe", "learned"]),
+    oversub=st.sampled_from([1.1, 1.5, 2.0]),
+)
+def test_kernel_path_matches_scan_path(blocks, policy, oversub):
+    """REPRO_SIM_KERNELS routes victim selection through the Pallas kernel
+    (interpret mode on CPU); counters, outputs and state must be
+    bit-identical to the while_loop scan path — INCLUDING ``random``, whose
+    fold_in draw is deterministic per step, so one-kernel-per-step and
+    one-argmin-per-victim see the same keys."""
+    tr = _trace_from_blocks(blocks, 32)
+    a = S.run(tr, policy=policy, prefetch="tree", oversubscription=oversub, kernels=False)
+    b = S.run(tr, policy=policy, prefetch="tree", oversubscription=oversub, kernels=True)
+    assert a.stats == b.stats
+    np.testing.assert_array_equal(a.fault, b.fault)
+    np.testing.assert_array_equal(a.was_evicted, b.was_evicted)
+    for field in ("resident", "evicted_once", "last_access", "freq"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.state, field)), np.asarray(getattr(b.state, field)), err_msg=field
+        )
+
+
+_PREF_LANE = st.one_of(
+    st.none(),  # no-budget lane interleaved with budgeted ones
+    st.lists(st.integers(-3, 3), min_size=32, max_size=32),  # negative + non-uniform
+)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    lane_blocks=st.lists(
+        st.lists(st.integers(0, 31), min_size=10, max_size=60), min_size=4, max_size=6
+    ),
+    prefs=st.lists(_PREF_LANE, min_size=6, max_size=6),
+    policy=st.sampled_from(["lru", "hpe", "learned"]),
+)
+def test_evict_pref_padding_invariant(lane_blocks, prefs, policy):
+    """The `evict_pref` padding claim, hardened (ISSUE 10 satellite): lanes
+    whose prefs are negative, non-uniform, or ``None``-interleaved must run
+    bit-identically batched (``run_segments_many`` pads lanes and ``None``
+    entries with zero pref rows) and solo (``run_segment``).  Zero-filled
+    PADDING blocks never become candidates (padding blocks are never
+    resident), and a ``None`` lane's all-zero pref row is a constant leading
+    key, which never changes an argmin — this property is the proof."""
+    nb = 32
+    cap = 20
+    cell = (S.POLICY_IDS[policy], S.PREFETCH_IDS["tree"], cap)
+    states = [S.init_state(nb) for _ in lane_blocks]
+    segs = []
+    for lb in lane_blocks:
+        b = np.asarray(lb, np.int32)
+        segs.append((b, S.precompute_next_use(b, nb)))
+    eps = [None if prefs[i] is None else np.asarray(prefs[i], np.int32)
+           for i in range(len(lane_blocks))]
+    batched = S.run_segments_many(
+        states, segs, [cell] * len(segs), [nb] * len(segs), evict_prefs=eps
+    )
+    for i, (st_b, outs_b) in enumerate(batched):
+        st_s, outs_s = S.run_segment(
+            S.init_state(nb), *segs[i], capacity=cap, policy=policy, prefetch="tree",
+            n_valid=nb, evict_pref=eps[i],
+        )
+        for field in ("resident", "evicted_once", "occupancy", "faults", "thrash_events"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(st_b, field)), np.asarray(getattr(st_s, field)),
+                err_msg=f"lane {i} {field}",
+            )
+        for k in outs_s:
+            np.testing.assert_array_equal(outs_b[k], outs_s[k], err_msg=f"lane {i} {k}")
+
+
 # --- compression -----------------------------------------------------------------
 
 @settings(max_examples=20, deadline=None)

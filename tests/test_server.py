@@ -540,6 +540,7 @@ def test_server_kill9_resume_bit_identical_tail(tmp_path, capsys):
     finally:
         proc.send_signal(signal.SIGKILL)
         proc.wait()
+        proc.stdout.close()  # the pipe outlives the kill; GC would warn
     assert SnapshotStore(ck / "job").latest_step() == 6
 
     sock2 = str(tmp_path / "b.sock")
@@ -549,6 +550,7 @@ def test_server_kill9_resume_bit_identical_tail(tmp_path, capsys):
     finally:
         proc.terminate()
         proc.wait()
+        proc.stdout.close()
     assert any(l.startswith("# resumed batch=6") for l in res)
     tail = [l for l in res if l.startswith("{")]
     assert tail == ref_acts[6:]  # byte-identical resumed records

@@ -17,6 +17,18 @@ def test_sharded_run_batch_matches_single_device():
     assert got == want
 
 
+def test_sharded_kernel_path_matches_single_device_scan():
+    """The Pallas victim-selection path composes with lane sharding: a
+    forced-4-device subprocess pinned onto REPRO_SIM_KERNELS=1 must be
+    bit-identical to this process's single-device SCAN-path sweep (no real
+    multi-device hardware here, so forced host devices are the vehicle)."""
+    tr = T.get_trace("BICG", scale=0.25)
+    tr = tr.slice(0, min(len(tr), 1200))
+    want = S.run_batch(tr, EQUIV_CELLS, kernels=False)
+    got = run_batch_forced_devices("BICG", scale=0.25, cap=1200, kernels=True)
+    assert got == want
+
+
 def test_lane_shardings_single_device_fallback():
     """In this (single-device) process the helpers must decline to shard."""
     import jax
